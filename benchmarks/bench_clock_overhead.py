@@ -1,0 +1,65 @@
+"""Paper Tables 1-2 analogue: overhead of the timing primitives.
+
+Measures ns per operation for each built-in clock (start+stop+read), timer
+creation, timer start/stop through the DB (including the hierarchy stack), and
+a full scheduler-bin dispatch — the costs the paper's "high performance
+interface" discussion cares about.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import clocks as C
+from repro.core.schedule import RunState, Scheduler
+from repro.core.timers import reset_timer_db
+
+
+def _time_op(fn, n: int = 20000) -> float:
+    """us per call."""
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    for name in ("walltime", "cputime", "perfcounter"):
+        clk = C.make_clock(name)
+
+        def cycle(clk=clk):
+            clk.start(); clk.stop()
+
+        rows.append((f"clock_start_stop/{name}", _time_op(cycle), "us_per_window"))
+        rows.append((f"clock_read/{name}", _time_op(clk.read), "us_per_read"))
+
+    counter = C.CounterClock("io", {"io_bytes": "bytes", "io_ops": "count"})
+    rows.append(("clock_start_stop/counter2ch", _time_op(lambda: (counter.start(), counter.stop())), "us_per_window"))
+    rows.append(("counter_increment", _time_op(lambda: C.increment_counter("bench", 1.0)), "us_per_call"))
+
+    db = reset_timer_db()
+    handle = db.create("bench")
+
+    def timer_cycle():
+        db.start(handle)
+        db.stop(handle)
+
+    rows.append(("timer_start_stop_all_clocks", _time_op(timer_cycle, 5000), "us_per_window"))
+    i = [0]
+
+    def creator():
+        db.create(f"t{i[0]}")
+        i[0] += 1
+
+    rows.append(("timer_create", _time_op(creator, 2000), "us_per_create"))
+
+    sch = Scheduler(reset_timer_db())
+    sch.schedule(lambda s: None, bin="EVOL", thorn="bench", name="noop")
+    state = RunState(max_iterations=0)
+    rows.append(
+        ("scheduler_bin_dispatch", _time_op(lambda: sch.run_bin("EVOL", state), 2000),
+         "us_per_bin")
+    )
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Fig. 1 (right) analogue: wall-time distribution over schedule bins for
+a real (small) training run through the full driver."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.params import reset_param_registry
+from repro.core.timers import reset_timer_db
+from repro.launch.train import TrainSettings, run_training
+
+
+def run() -> List[Tuple[str, float, str]]:
+    reset_timer_db()
+    reset_param_registry()
+    summary = run_training(TrainSettings(
+        arch="llama3.2-1b", smoke=True, steps=10, global_batch=2, seq_len=64,
+        ckpt_dir="/tmp/bench_stage_ckpt", ckpt_mode="adaptive",
+        ckpt_max_fraction=0.2, report_every=0, restore=False,
+    ))
+    rows: List[Tuple[str, float, str]] = []
+    total = sum(summary["bin_seconds"].values()) or 1.0
+    for bin_name, seconds in sorted(summary["bin_seconds"].items()):
+        rows.append((f"bin_seconds/{bin_name}", seconds * 1e6, "us_total"))
+        rows.append((f"bin_share/{bin_name}", 100.0 * seconds / total, "percent"))
+    return rows

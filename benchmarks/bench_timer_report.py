@@ -1,0 +1,31 @@
+"""Paper Fig. 2 analogue: timer-report generation cost vs database size."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core.report import format_report, report_rows
+from repro.core.timers import reset_timer_db
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    for n_timers in (10, 100, 500):
+        db = reset_timer_db()
+        for i in range(n_timers):
+            h = db.create(f"EVOL/thorn{i % 7}::routine_{i}")
+            db.start(h); db.stop(h)
+        t0 = time.perf_counter()
+        reps = 20
+        for _ in range(reps):
+            text = format_report(db)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append((f"format_report/{n_timers}_timers", us, "us_per_report"))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            db.snapshot()
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append((f"snapshot/{n_timers}_timers", us, "us_per_snapshot"))
+    assert "routine_0" in text
+    return rows

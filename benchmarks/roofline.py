@@ -1,0 +1,159 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape) on the single-pod mesh, derives the three roofline terms:
+
+    compute    = HLO_FLOPs_per_device        / peak_FLOP/s
+    memory     = HLO_bytes_per_device        / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` (scan-trip-count
+corrected by the dry-run, see launch/dryrun.py); collective bytes are summed
+collective operand sizes parsed from the optimized per-device HLO.  All three
+are *per-device* quantities, equivalent to the global-convention formula
+``X_global / (chips × unit)`` since X_global = chips × X_per_device.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Also reports MODEL_FLOPS = 6·N·D (train) or 2·N·D (decode/prefill per-token
+forward) and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, plus the
+dominant term and the roofline fraction
+(= best-possible-time / dominant-term-time assuming perfect overlap).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+ARTIFACT_DIR = os.path.join("artifacts", "dryrun")
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    variant: str
+    kind: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    useful_ratio: float
+    dominant: str
+    roofline_fraction: float
+    #: decode cells are inherently memory-bound; the meaningful efficiency is
+    #: ideal bytes (params read once + cache touched once) / HLO bytes.
+    memory_efficiency: float = 0.0
+    note: str = ""
+
+    @property
+    def step_seconds_lower_bound(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def _model_flops(record: dict) -> float:
+    """6·N_active·D for training, 2·N_active·D for forward-only steps."""
+    mult = 6.0 if record["kind"] == "train" else 2.0
+    return mult * record["params_active"] * record["tokens_per_step"] / record["n_chips"]
+
+
+def analyze_record(record: dict) -> Optional[RooflineRow]:
+    if record.get("status") != "ok":
+        return None
+    cost = record["cost_analysis"]
+    # microbatched steps: cost analysis sees one microbatch body (the scan
+    # correction cannot see the accumulation loop) — scale to the full step
+    accum = int(record.get("accum_steps", 1))
+    flops = float(cost.get("flops", 0.0)) * accum
+    nbytes = float(cost.get("bytes accessed", 0.0)) * accum
+    coll = float(sum(record["collective_operand_bytes_per_device"].values())) * accum
+    compute_s = flops / PEAK_FLOPS
+    memory_s = nbytes / HBM_BW
+    collective_s = coll / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    model = _model_flops(record)
+    useful = model / flops if flops else 0.0
+    # roofline fraction: useful model-compute time / achievable step time.
+    ideal = model / PEAK_FLOPS
+    bound = max(terms.values())
+    frac = ideal / bound if bound > 0 else 0.0
+    # decode: memory efficiency vs the ideal one-pass byte traffic
+    state = record.get("state_bytes", {})
+    ideal_bytes = state.get("params_bytes_per_device", 0) + state.get(
+        "cache_bytes_per_device", 0
+    )
+    mem_eff = (ideal_bytes / nbytes) if nbytes and ideal_bytes else 0.0
+    if record["kind"] == "decode":
+        frac = mem_eff  # the meaningful roofline score for decode
+    return RooflineRow(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        variant=record.get("variant", "baseline"), kind=record["kind"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops_per_dev=model, hlo_flops_per_dev=flops,
+        useful_ratio=useful, dominant=dominant, roofline_fraction=frac,
+        memory_efficiency=mem_eff,
+    )
+
+
+def load_rows(
+    artifact_dir: str = ARTIFACT_DIR, mesh: str = "single", variant: Optional[str] = "baseline"
+) -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        record = json.load(open(path))
+        if record.get("mesh") != mesh:
+            continue
+        if variant is not None and record.get("variant", "baseline") != variant:
+            continue
+        row = analyze_record(record)
+        if row is not None:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    header = (
+        f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+        f"{'collect_s':>10s} {'dominant':>10s} {'6ND/HLO':>8s} {'roofline':>9s}"
+    )
+    lines = [header, "-" * len(header)]
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.compute_s:10.4f} {r.memory_s:10.4f} "
+            f"{r.collective_s:10.4f} {r.dominant:>10s} {r.useful_ratio:8.3f} "
+            f"{r.roofline_fraction:9.3f}"
+        )
+    return "\n".join(lines)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    """Benchmark-harness entry: roofline fraction per cell (single-pod)."""
+    out: List[Tuple[str, float, str]] = []
+    rows = load_rows()
+    for r in rows:
+        out.append(
+            (f"roofline/{r.arch}/{r.shape}", r.roofline_fraction * 100,
+             f"pct_of_roofline_dominant={r.dominant}")
+        )
+    if rows:
+        best = max(rows, key=lambda r: r.roofline_fraction)
+        worst = min(rows, key=lambda r: r.roofline_fraction)
+        out.append((f"roofline_best/{best.arch}/{best.shape}", best.roofline_fraction * 100, "pct"))
+        out.append((f"roofline_worst/{worst.arch}/{worst.shape}", worst.roofline_fraction * 100, "pct"))
+    return out
+
+
+if __name__ == "__main__":
+    rows = load_rows()
+    print(format_table(rows))

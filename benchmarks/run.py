@@ -1,0 +1,64 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+    PYTHONPATH=src python -m benchmarks.run            # all benches
+    PYTHONPATH=src python -m benchmarks.run --only clock_overhead
+
+Benches (paper analogue in brackets):
+    clock_overhead       [Tables 1-2 / §2 overhead]   timing-primitive costs
+    timer_report         [Fig 2]                      report generation
+    stage_distribution   [Fig 1 right]                bin wall-time shares
+    adaptive_checkpoint  [Fig 3 / §4]                 fixed vs AdaptCheck (+ async)
+    roofline             [deliverable g]              per-cell roofline fractions
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def _modules():
+    from . import (
+        bench_adaptive_checkpoint,
+        bench_clock_overhead,
+        bench_stage_distribution,
+        bench_timer_report,
+        roofline,
+    )
+
+    return {
+        "clock_overhead": bench_clock_overhead.run,
+        "timer_report": bench_timer_report.run,
+        "stage_distribution": bench_stage_distribution.run,
+        "adaptive_checkpoint": bench_adaptive_checkpoint.run,
+        "roofline": roofline.run,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    benches = _modules()
+    if args.only:
+        benches = {k: v for k, v in benches.items() if k == args.only}
+        if not benches:
+            print(f"unknown bench {args.only}", file=sys.stderr)
+            return 2
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        try:
+            for row_name, value, derived in fn():
+                print(f"{name}/{row_name},{value:.3f},{derived}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},FAILED,", file=sys.stdout)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

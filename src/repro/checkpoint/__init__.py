@@ -1,0 +1,4 @@
+from .io import load_checkpoint, save_checkpoint
+from .manager import CheckpointManager
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]

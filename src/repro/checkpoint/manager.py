@@ -1,0 +1,142 @@
+"""Checkpoint manager: async writes, retention, emergency save, restore-latest.
+
+Timing integration (the paper's subject): ``save`` splits into a *blocking*
+phase — device→host snapshot + submission, the part that steals wall time from
+compute and is what AdaptCheck bounds — and an *async* phase on a writer
+thread.  The blocking seconds and written bytes are reported to the caller and
+pushed onto the ``io`` counter channels so every timer window can see I/O
+traffic.  ``synchronous=True`` reproduces the paper's blocking checkpointing
+(used as the paper-faithful baseline in benchmarks).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import signal
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from ..core.clocks import increment_counter
+from .io import CheckpointCorrupt, checkpoint_nbytes, load_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        directory: str,
+        keep_n: int = 3,
+        synchronous: bool = False,
+        fsync: bool = False,
+        delay_s: float = 0.0,
+        delay_s_per_mb: float = 0.0,
+    ) -> None:
+        """``delay_s`` (+ ``delay_s_per_mb`` × payload) injects artificial write
+        latency (experiments: emulate a slow/contended filesystem and
+        size-proportional write cost, as in the paper's AMR scenario where
+        checkpoint data grows O(L))."""
+        self.directory = directory
+        self.keep_n = keep_n
+        self.synchronous = synchronous
+        self.fsync = fsync
+        self.delay_s = delay_s
+        self.delay_s_per_mb = delay_s_per_mb
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")
+        self._pending: Optional[Future] = None
+        self._lock = threading.Lock()
+        self.n_saves = 0
+        self.total_blocking_seconds = 0.0
+        self.total_bytes = 0
+
+    # -- save ------------------------------------------------------------------
+    def _write(self, step: int, host_tree, metadata) -> Tuple[str, int]:
+        if self.delay_s or self.delay_s_per_mb:
+            nbytes = checkpoint_nbytes(host_tree)
+            time.sleep(self.delay_s + self.delay_s_per_mb * nbytes / 1e6)
+        path, nbytes = save_checkpoint(
+            self.directory, step, host_tree, metadata, fsync=self.fsync
+        )
+        increment_counter("io_bytes", nbytes)
+        increment_counter("io_ops", 1)
+        self._gc()
+        return path, nbytes
+
+    def save(
+        self, step: int, tree: Any, metadata: Optional[Dict[str, Any]] = None
+    ) -> Dict[str, float]:
+        """Snapshot + write. Returns stats incl. blocking seconds and bytes."""
+        t0 = time.monotonic()
+        self.wait()  # never queue more than one outstanding write
+        host_tree = jax.tree.map(
+            lambda x: jax.device_get(x) if hasattr(x, "device") or hasattr(x, "devices") else x,
+            tree,
+        )
+        nbytes = checkpoint_nbytes(host_tree)
+        if self.synchronous:
+            self._write(step, host_tree, metadata)
+            blocking = time.monotonic() - t0
+        else:
+            self._pending = self._pool.submit(self._write, step, host_tree, metadata)
+            blocking = time.monotonic() - t0
+        with self._lock:
+            self.n_saves += 1
+            self.total_blocking_seconds += blocking
+            self.total_bytes += nbytes
+        return {"blocking_seconds": blocking, "nbytes": float(nbytes), "step": float(step)}
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    # -- restore ---------------------------------------------------------------
+    def checkpoints(self) -> List[Tuple[int, str]]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m:
+                out.append((int(m.group(1)), os.path.join(self.directory, name)))
+        return sorted(out)
+
+    def restore_latest(
+        self, shardings: Optional[Any] = None
+    ) -> Optional[Tuple[int, Any, Dict[str, Any]]]:
+        """Latest valid checkpoint (corrupt/uncommitted ones are skipped)."""
+        for step, path in reversed(self.checkpoints()):
+            try:
+                return load_checkpoint(path, shardings=shardings)
+            except (CheckpointCorrupt, FileNotFoundError, ValueError):
+                continue
+        return None
+
+    # -- retention / fault hooks -------------------------------------------------
+    def _gc(self) -> None:
+        ckpts = self.checkpoints()
+        for _, path in ckpts[: max(len(ckpts) - self.keep_n, 0)]:
+            import shutil
+
+            shutil.rmtree(path, ignore_errors=True)
+
+    def install_sigterm_handler(self, state_fn: Callable[[], Tuple[int, Any]]) -> None:
+        """Emergency checkpoint on SIGTERM (pre-emption / queue kill)."""
+
+        def handler(signum, frame):  # pragma: no cover - signal path
+            step, tree = state_fn()
+            self.wait()
+            host_tree = jax.tree.map(jax.device_get, tree)
+            self._write(step, host_tree, {"emergency": True})
+
+        signal.signal(signal.SIGTERM, handler)
+
+    def close(self) -> None:
+        self.wait()
+        self._pool.shutdown(wait=True)

@@ -1,0 +1,64 @@
+"""The paper's primary contribution: an extensible timing infrastructure
+(clocks + timers + scheduler-integrated caliper points) and profiling-driven
+adaptation (AdaptCheck).  See DESIGN.md §2-3 for the Cactus → JAX mapping."""
+
+from .clocks import (
+    CallbackClock,
+    Clock,
+    ClockValues,
+    CounterClock,
+    clock_names,
+    counter_channel,
+    increment_counter,
+    make_all_clocks,
+    make_clock,
+    register_clock,
+    reset_default_clocks,
+    unregister_clock,
+)
+from .timers import Timer, TimerDB, reset_timer_db, timed, timer_db
+from .schedule import BINS, RunState, ScheduledRoutine, Scheduler
+from .adaptive import (
+    AdaptiveCheckpointController,
+    AdaptiveCheckpointPolicy,
+    CheckpointDurationPredictor,
+    Decision,
+)
+from .report import TimerLogger, bin_distribution, format_report, report_rows
+from .params import Param, ParamRegistry, param_registry, reset_param_registry
+
+__all__ = [
+    "CallbackClock",
+    "Clock",
+    "ClockValues",
+    "CounterClock",
+    "clock_names",
+    "counter_channel",
+    "increment_counter",
+    "make_all_clocks",
+    "make_clock",
+    "register_clock",
+    "reset_default_clocks",
+    "unregister_clock",
+    "Timer",
+    "TimerDB",
+    "reset_timer_db",
+    "timed",
+    "timer_db",
+    "BINS",
+    "RunState",
+    "ScheduledRoutine",
+    "Scheduler",
+    "AdaptiveCheckpointController",
+    "AdaptiveCheckpointPolicy",
+    "CheckpointDurationPredictor",
+    "Decision",
+    "TimerLogger",
+    "bin_distribution",
+    "format_report",
+    "report_rows",
+    "Param",
+    "ParamRegistry",
+    "param_registry",
+    "reset_param_registry",
+]

@@ -1,0 +1,344 @@
+"""Clocks — the low-level measurement entities of the timing infrastructure.
+
+Faithful to the paper (Sec. 2, Tables 1-2): a *clock* is an object created from a
+set of callbacks (``create/destroy/start/stop/read/reset/get/set``) that measures
+"any kind of event" — wall time, CPU time, cycle counters, or discrete events such
+as I/O bytes or FLOPs executed.  Clocks are registered with the infrastructure via
+a standard registration mechanism so new metrics require *no modification to any
+existing timing code*: every :class:`~repro.core.timers.Timer` automatically
+encapsulates one instance of every registered clock.
+
+Hardware adaptation (see DESIGN.md): TPUs expose no user-readable PMU, so the
+PAPI-analogue clocks here are *derived* device clocks (``xla_flops``/``xla_bytes``)
+fed by XLA's compiled cost analysis, plus generic :class:`CounterClock` channels
+for framework events (checkpoint bytes, collective bytes, tokens processed).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+__all__ = [
+    "Clock",
+    "ClockValues",
+    "CallbackClock",
+    "WalltimeClock",
+    "CPUTimeClock",
+    "PerfCounterClock",
+    "ThreadCPUClock",
+    "RSSClock",
+    "CounterClock",
+    "register_clock",
+    "unregister_clock",
+    "clock_names",
+    "make_clock",
+    "make_all_clocks",
+    "counter_channel",
+    "increment_counter",
+    "reset_default_clocks",
+]
+
+
+@dataclass
+class ClockValues:
+    """A multi-valued clock reading (a clock can measure several values at once,
+    e.g. multiple PAPI counters)."""
+
+    values: Dict[str, float]
+    units: Dict[str, str]
+
+    def __getitem__(self, key: str) -> float:
+        return self.values[key]
+
+    def scalar(self) -> float:
+        """The clock's primary value (first channel)."""
+        return next(iter(self.values.values())) if self.values else 0.0
+
+
+class Clock:
+    """Base clock.  Subclasses implement ``_now() -> dict`` returning the current
+    raw counter values; accumulation across start/stop windows is handled here so
+    that a clock can be started and stopped many times, with ``read`` returning
+    the accumulated measure (Cactus semantics: reset sets accumulation to zero).
+    """
+
+    #: registry name; subclasses override.
+    name: str = "abstract"
+    #: units per channel.
+    units: Mapping[str, str] = {}
+
+    def __init__(self) -> None:
+        self._running = False
+        self._accum: Dict[str, float] = {}
+        self._mark: Dict[str, float] = {}
+
+    # -- core sampling hook -------------------------------------------------
+    def _now(self) -> Dict[str, float]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    # -- Cactus clock API ----------------------------------------------------
+    def start(self) -> None:
+        if self._running:
+            return
+        self._running = True
+        self._mark = self._now()
+
+    def stop(self) -> None:
+        if not self._running:
+            return
+        now = self._now()
+        for key, value in now.items():
+            self._accum[key] = self._accum.get(key, 0.0) + (value - self._mark.get(key, 0.0))
+        self._running = False
+
+    def reset(self) -> None:
+        self._accum = {}
+        if self._running:
+            self._mark = self._now()
+
+    def read(self) -> ClockValues:
+        values = dict(self._accum)
+        if self._running:
+            now = self._now()
+            for key, value in now.items():
+                values[key] = values.get(key, 0.0) + (value - self._mark.get(key, 0.0))
+        for key in self._channels():
+            values.setdefault(key, 0.0)
+        return ClockValues(values=values, units=dict(self.units))
+
+    # Cactus `get`/`set`: direct access to the accumulator.
+    def get(self) -> Dict[str, float]:
+        return self.read().values
+
+    def set(self, values: Mapping[str, float]) -> None:
+        self._accum = dict(values)
+        if self._running:
+            self._mark = self._now()
+
+    def destroy(self) -> None:
+        self._running = False
+        self._accum = {}
+
+    @property
+    def is_running(self) -> bool:
+        return self._running
+
+    def _channels(self) -> Sequence[str]:
+        return tuple(self.units.keys())
+
+
+class CallbackClock(Clock):
+    """A clock built from user callbacks — the paper's extension mechanism.
+
+    ``sample`` returns the raw counter values; optional ``on_start``/``on_stop``
+    callbacks allow clocks that must arm hardware counters.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        sample: Callable[[], Mapping[str, float]],
+        units: Mapping[str, str],
+        on_start: Optional[Callable[[], None]] = None,
+        on_stop: Optional[Callable[[], None]] = None,
+    ) -> None:
+        self.name = name
+        self.units = dict(units)
+        self._sample = sample
+        self._on_start = on_start
+        self._on_stop = on_stop
+        super().__init__()
+
+    def _now(self) -> Dict[str, float]:
+        return dict(self._sample())
+
+    def start(self) -> None:
+        if not self._running and self._on_start is not None:
+            self._on_start()
+        super().start()
+
+    def stop(self) -> None:
+        if self._running and self._on_stop is not None:
+            self._on_stop()
+        super().stop()
+
+
+class WalltimeClock(Clock):
+    """UNIX wall time (the paper's ``gettimeofday``), via a monotonic source."""
+
+    name = "walltime"
+    units = {"walltime": "sec"}
+
+    def _now(self) -> Dict[str, float]:
+        return {"walltime": time.monotonic()}
+
+
+class CPUTimeClock(Clock):
+    """Process CPU time (the paper's ``getrusage``: user+system seconds)."""
+
+    name = "cputime"
+    units = {"cputime": "sec"}
+
+    def _now(self) -> Dict[str, float]:
+        return {"cputime": time.process_time()}
+
+
+class ThreadCPUClock(Clock):
+    """Per-thread CPU time — useful to separate the driver thread from async
+    checkpoint writers."""
+
+    name = "thread_cputime"
+    units = {"thread_cputime": "sec"}
+
+    def _now(self) -> Dict[str, float]:
+        return {"thread_cputime": time.thread_time()}
+
+
+class PerfCounterClock(Clock):
+    """Highest-resolution counter available (the paper's ``rdtsc`` analogue).
+
+    Reported in nanoseconds; resolution is typically ~20ns on Linux.
+    """
+
+    name = "perfcounter"
+    units = {"perfcounter": "nsec"}
+
+    def _now(self) -> Dict[str, float]:
+        return {"perfcounter": float(time.perf_counter_ns())}
+
+
+class RSSClock(Clock):
+    """Resident-set-size high-water delta, read from /proc (Linux).
+
+    Demonstrates a non-time clock per the paper ("clocks are not restricted to
+    measure time").  Value is the change in VmRSS over the window, in bytes.
+    """
+
+    name = "rss"
+    units = {"rss": "bytes"}
+
+    _PAGE = 4096
+
+    def _now(self) -> Dict[str, float]:
+        try:
+            with open("/proc/self/statm", "r") as f:
+                parts = f.read().split()
+            return {"rss": float(int(parts[1]) * self._PAGE)}
+        except (OSError, IndexError, ValueError):  # pragma: no cover
+            return {"rss": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# Counter channels: process-global monotonically increasing event counters that
+# framework code bumps (checkpoint bytes written, tokens processed, FLOPs of
+# executed steps, ...).  A CounterClock snapshots a channel at start/stop, so a
+# timer window captures exactly the events that happened inside it.  This is
+# the TPU-era stand-in for PAPI event counters.
+# ---------------------------------------------------------------------------
+
+_COUNTERS: Dict[str, float] = {}
+_COUNTER_LOCK = threading.Lock()
+
+
+def counter_channel(name: str) -> float:
+    with _COUNTER_LOCK:
+        return _COUNTERS.get(name, 0.0)
+
+
+def increment_counter(name: str, amount: float) -> None:
+    with _COUNTER_LOCK:
+        _COUNTERS[name] = _COUNTERS.get(name, 0.0) + float(amount)
+
+
+class CounterClock(Clock):
+    """Clock over one or more global counter channels."""
+
+    def __init__(self, name: str, channels: Mapping[str, str]) -> None:
+        self.name = name
+        self.units = dict(channels)
+        super().__init__()
+
+    def _now(self) -> Dict[str, float]:
+        return {ch: counter_channel(ch) for ch in self.units}
+
+
+# ---------------------------------------------------------------------------
+# Registry ("Cactus's standard registration techniques"): clock factories are
+# registered by name; every Timer created afterwards instantiates all of them.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: "Dict[str, Callable[[], Clock]]" = {}
+_REGISTRY_LOCK = threading.Lock()
+_REGISTRY_VERSION = [0]
+
+
+def register_clock(name: str, factory: Callable[[], Clock]) -> None:
+    """Register a clock factory.  Registering an existing name replaces it
+    (steerable at runtime, like Cactus parameters)."""
+    with _REGISTRY_LOCK:
+        _REGISTRY[name] = factory
+        _REGISTRY_VERSION[0] += 1
+
+
+def unregister_clock(name: str) -> None:
+    with _REGISTRY_LOCK:
+        _REGISTRY.pop(name, None)
+        _REGISTRY_VERSION[0] += 1
+
+
+def clock_names() -> List[str]:
+    with _REGISTRY_LOCK:
+        return sorted(_REGISTRY.keys())
+
+
+def registry_version() -> int:
+    with _REGISTRY_LOCK:
+        return _REGISTRY_VERSION[0]
+
+
+def make_clock(name: str) -> Clock:
+    with _REGISTRY_LOCK:
+        factory = _REGISTRY[name]
+    return factory()
+
+
+def make_all_clocks() -> Dict[str, Clock]:
+    with _REGISTRY_LOCK:
+        factories = dict(_REGISTRY)
+    return {name: factory() for name, factory in factories.items()}
+
+
+def reset_default_clocks(extra: bool = False) -> None:
+    """(Re-)install the built-in clock set.
+
+    ``extra=True`` additionally installs the noisier clocks (rss, thread cpu).
+    The device-event counters are always installed; they read 0 until the
+    framework bumps their channels.
+    """
+    with _REGISTRY_LOCK:
+        _REGISTRY.clear()
+        _REGISTRY_VERSION[0] += 1
+    register_clock("walltime", WalltimeClock)
+    register_clock("cputime", CPUTimeClock)
+    register_clock("perfcounter", PerfCounterClock)
+    register_clock(
+        "xla_device",
+        lambda: CounterClock(
+            "xla_device", {"xla_flops": "flop", "xla_bytes": "bytes"}
+        ),
+    )
+    register_clock(
+        "io",
+        lambda: CounterClock("io", {"io_bytes": "bytes", "io_ops": "count"}),
+    )
+    if extra:
+        register_clock("rss", RSSClock)
+        register_clock("thread_cputime", ThreadCPUClock)
+
+
+# Install defaults at import time (cheap; tests may reinstall).
+reset_default_clocks(extra=os.environ.get("REPRO_EXTRA_CLOCKS", "0") == "1")

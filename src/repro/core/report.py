@@ -1,0 +1,106 @@
+"""Timer reports (paper Sec. 3.1, Fig. 2) — human tables, JSON logs, periodic output.
+
+``format_report`` renders the Fig.-2-style table: one row per timer, one column
+per clock channel, grouped by schedule bin, with a "Total time for simulation"
+footer.  ``TimerLogger`` appends JSON snapshots to a log file ("logged
+semi-automatically for post-mortem review").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, TextIO
+
+from .timers import TimerDB, timer_db
+
+__all__ = ["format_report", "report_rows", "TimerLogger", "bin_distribution"]
+
+
+def report_rows(
+    db: Optional[TimerDB] = None,
+    channels: Sequence[str] = ("walltime", "cputime"),
+    prefix: str = "",
+) -> List[Dict[str, object]]:
+    db = db if db is not None else timer_db()
+    rows: List[Dict[str, object]] = []
+    for timer in db.timers():
+        if prefix and not timer.name.startswith(prefix):
+            continue
+        flat = timer.read_flat()
+        row: Dict[str, object] = {"timer": timer.name, "count": timer.count}
+        for ch in channels:
+            row[ch] = flat.get(ch, 0.0)
+        rows.append(row)
+    return rows
+
+
+def format_report(
+    db: Optional[TimerDB] = None,
+    channels: Sequence[str] = ("walltime", "cputime"),
+    prefix: str = "",
+    title: str = "Timer report",
+) -> str:
+    """Render the standard timer report (cf. paper Fig. 2)."""
+    db = db if db is not None else timer_db()
+    rows = report_rows(db, channels, prefix)
+    name_w = max([len(r["timer"]) for r in rows] + [len("Timer")]) + 2
+    col_w = 22
+    lines = [title, "=" * (name_w + (col_w + 1) * (len(channels) + 1))]
+    header = "Timer".ljust(name_w) + "count".rjust(col_w)
+    for ch in channels:
+        header += " " + ch.rjust(col_w)
+    lines.append(header)
+    lines.append("-" * len(header))
+    for row in sorted(rows, key=lambda r: r["timer"]):
+        line = str(row["timer"]).ljust(name_w) + str(row["count"]).rjust(col_w)
+        for ch in channels:
+            line += " " + f"{row[ch]:.8f}"[:col_w].rjust(col_w)
+        lines.append(line)
+    total = db.get("simulation/total").read_flat() if db.exists("simulation/total") else {}
+    if total:
+        lines.append("-" * len(header))
+        line = "Total time for simulation".ljust(name_w) + "".rjust(col_w)
+        for ch in channels:
+            line += " " + f"{total.get(ch, 0.0):.8f}"[:col_w].rjust(col_w)
+        lines.append(line)
+    return "\n".join(lines)
+
+
+def bin_distribution(db: Optional[TimerDB] = None) -> Dict[str, float]:
+    """Wall-time distribution over schedule bins (paper Fig. 1 right)."""
+    db = db if db is not None else timer_db()
+    out: Dict[str, float] = {}
+    for timer in db.timers():
+        if timer.name.startswith("bin/"):
+            out[timer.name[len("bin/"):]] = timer.seconds()
+    return out
+
+
+class TimerLogger:
+    """Appends timer-DB snapshots as JSON lines for post-mortem review."""
+
+    def __init__(self, path: str, db: Optional[TimerDB] = None) -> None:
+        self.path = path
+        self._db = db if db is not None else timer_db()
+        directory = os.path.dirname(os.path.abspath(path))
+        os.makedirs(directory, exist_ok=True)
+
+    def log(self, iteration: int, extra: Optional[Mapping[str, object]] = None) -> None:
+        record = {
+            "t": time.time(),
+            "iteration": iteration,
+            "timers": self._db.snapshot(),
+        }
+        if extra:
+            record["extra"] = dict(extra)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+
+    def read_all(self) -> List[dict]:
+        if not os.path.exists(self.path):
+            return []
+        with open(self.path) as f:
+            return [json.loads(line) for line in f if line.strip()]

@@ -1,0 +1,251 @@
+"""Timers — caliper points around code regions (paper Sec. 2, Table 3).
+
+A :class:`Timer` encapsulates one instance of **every registered clock**; querying
+a timer returns the readings of all its clocks.  Timers live in a process-global
+:class:`TimerDB` ("the internal timer database") addressed either by integer
+handle — the Cactus C API style (``CCTK_TimerCreate`` → handle,
+``CCTK_TimerStartI(handle)``) — or by name.  A thread-local running stack gives
+hierarchical attribution (self time vs. child time) without explicit nesting
+annotations.
+
+Overhead notes (paper: "a high performance interface"): creating a timer
+allocates (do not create in inner loops); start/stop costs the underlying clock
+samples plus one list push/pop — benchmarked in
+``benchmarks/bench_clock_overhead.py``.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Mapping, Optional, Tuple
+
+from . import clocks as _clocks
+
+__all__ = ["Timer", "TimerDB", "timer_db", "timed", "reset_timer_db"]
+
+
+class TimerError(RuntimeError):
+    pass
+
+
+class Timer:
+    """A named caliper point.  Not usually constructed directly — use
+    :meth:`TimerDB.create` so the timer is registered in the database."""
+
+    __slots__ = (
+        "name",
+        "handle",
+        "clocks",
+        "count",
+        "running",
+        "_clock_version",
+        "parent_name",
+        "_lock",
+    )
+
+    def __init__(self, name: str, handle: int) -> None:
+        self.name = name
+        self.handle = handle
+        self.clocks: Dict[str, _clocks.Clock] = _clocks.make_all_clocks()
+        self._clock_version = _clocks.registry_version()
+        self.count = 0  # number of completed start/stop windows
+        self.running = False
+        self.parent_name: Optional[str] = None
+        self._lock = threading.Lock()
+
+    # -- lifecycle -----------------------------------------------------------
+    def _refresh_clocks(self) -> None:
+        """Pick up newly registered clocks (extensibility: a clock registered
+        mid-run appears on existing timers from their next window)."""
+        if self._clock_version == _clocks.registry_version():
+            return
+        existing = set(self.clocks)
+        for name in _clocks.clock_names():
+            if name not in existing:
+                self.clocks[name] = _clocks.make_clock(name)
+        for name in list(self.clocks):
+            if name not in _clocks.clock_names():
+                del self.clocks[name]
+        self._clock_version = _clocks.registry_version()
+
+    def start(self) -> None:
+        with self._lock:
+            if self.running:
+                raise TimerError(f"timer {self.name!r} already running")
+            self._refresh_clocks()
+            for clock in self.clocks.values():
+                clock.start()
+            self.running = True
+
+    def stop(self) -> None:
+        with self._lock:
+            if not self.running:
+                raise TimerError(f"timer {self.name!r} is not running")
+            for clock in self.clocks.values():
+                clock.stop()
+            self.running = False
+            self.count += 1
+
+    def reset(self) -> None:
+        with self._lock:
+            for clock in self.clocks.values():
+                clock.reset()
+            self.count = 0
+
+    def read(self) -> Dict[str, _clocks.ClockValues]:
+        """Readings for all clocks (running timers report up-to-now values)."""
+        with self._lock:
+            return {name: clock.read() for name, clock in self.clocks.items()}
+
+    def read_flat(self) -> Dict[str, float]:
+        """Flattened {channel: value} view across all clocks."""
+        flat: Dict[str, float] = {}
+        for values in self.read().values():
+            flat.update(values.values)
+        return flat
+
+    def seconds(self) -> float:
+        """Accumulated wall seconds (the most common query)."""
+        clock = self.clocks.get("walltime")
+        return clock.read().scalar() if clock is not None else 0.0
+
+
+class TimerDB:
+    """The queryable timer database.  Any routine can obtain timing statistics
+    for any other routine by querying this database (paper Sec. 2)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._timers: List[Timer] = []
+        self._by_name: Dict[str, int] = {}
+        self._tls = threading.local()
+
+    # -- creation / lookup -----------------------------------------------------
+    def create(self, name: str, exist_ok: bool = True) -> int:
+        """Create (or look up) a timer; returns its integer handle."""
+        with self._lock:
+            if name in self._by_name:
+                if not exist_ok:
+                    raise TimerError(f"timer {name!r} already exists")
+                return self._by_name[name]
+            handle = len(self._timers)
+            timer = Timer(name, handle)
+            self._timers.append(timer)
+            self._by_name[name] = handle
+            return handle
+
+    def get(self, ref: "int | str") -> Timer:
+        with self._lock:
+            if isinstance(ref, str):
+                if ref not in self._by_name:
+                    raise TimerError(f"no timer named {ref!r}")
+                ref = self._by_name[ref]
+            if not 0 <= ref < len(self._timers):
+                raise TimerError(f"invalid timer handle {ref}")
+            return self._timers[ref]
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            return name in self._by_name
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return [t.name for t in self._timers]
+
+    def timers(self) -> List[Timer]:
+        with self._lock:
+            return list(self._timers)
+
+    # -- running stack (hierarchy) ----------------------------------------------
+    def _stack(self) -> List[str]:
+        if not hasattr(self._tls, "stack"):
+            self._tls.stack = []
+        return self._tls.stack
+
+    def start(self, ref: "int | str") -> None:
+        timer = self.get(ref)
+        stack = self._stack()
+        timer.parent_name = stack[-1] if stack else None
+        timer.start()
+        stack.append(timer.name)
+
+    def stop(self, ref: "int | str") -> None:
+        timer = self.get(ref)
+        timer.stop()
+        stack = self._stack()
+        # Tolerate out-of-order stops (paper allows overlapping measurement
+        # windows); remove the most recent occurrence.
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] == timer.name:
+                del stack[i]
+                break
+
+    def reset(self, ref: "int | str") -> None:
+        self.get(ref).reset()
+
+    def reset_all(self) -> None:
+        for timer in self.timers():
+            timer.reset()
+
+    def read(self, ref: "int | str") -> Dict[str, _clocks.ClockValues]:
+        return self.get(ref).read()
+
+    # -- queries -------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """{timer name: flattened channel readings + count} for all timers."""
+        out: Dict[str, Dict[str, float]] = {}
+        for timer in self.timers():
+            flat = timer.read_flat()
+            flat["count"] = float(timer.count)
+            out[timer.name] = flat
+        return out
+
+    def total_seconds(self, prefix: str = "") -> float:
+        return sum(
+            t.seconds() for t in self.timers() if t.name.startswith(prefix)
+        )
+
+    # -- sugar -----------------------------------------------------------------
+    @contextmanager
+    def timing(self, name: str) -> Iterator[Timer]:
+        handle = self.create(name)
+        self.start(handle)
+        try:
+            yield self.get(handle)
+        finally:
+            self.stop(handle)
+
+
+_DB = TimerDB()
+
+
+def timer_db() -> TimerDB:
+    """The process-global timer database."""
+    return _DB
+
+
+def reset_timer_db() -> TimerDB:
+    """Replace the global DB (tests)."""
+    global _DB
+    _DB = TimerDB()
+    return _DB
+
+
+def timed(name: Optional[str] = None) -> Callable:
+    """Decorator placing caliper points around a function."""
+
+    def deco(fn: Callable) -> Callable:
+        label = name or f"func/{fn.__qualname__}"
+
+        def wrapper(*args, **kwargs):
+            with _DB.timing(label):
+                return fn(*args, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

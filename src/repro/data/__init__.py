@@ -1,0 +1,4 @@
+from .synthetic import SyntheticConfig, SyntheticLM
+from .loader import DataLoader
+
+__all__ = ["SyntheticConfig", "SyntheticLM", "DataLoader"]

@@ -1,0 +1,31 @@
+"""Shared Pallas utilities: platform dispatch + compiler-params shims."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+__all__ = ["default_interpret", "tpu_compiler_params"]
+
+
+def default_interpret(interpret: Optional[bool]) -> bool:
+    """Pallas TPU kernels run in interpret mode on non-TPU backends.
+
+    This container is CPU-only: interpret=True executes the kernel body with
+    jnp semantics (correctness validation); on a real TPU the same code lowers
+    through Mosaic.
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def tpu_compiler_params(dimension_semantics: Sequence[str], interpret: bool):
+    """CompilerParams with dimension semantics (None in interpret mode)."""
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+    return cls(dimension_semantics=tuple(dimension_semantics))

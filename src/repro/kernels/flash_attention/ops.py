@@ -1,0 +1,91 @@
+"""jit'd wrapper for the flash attention kernel, with a custom VJP.
+
+Public entry ``flash_attention(q, k, v, causal=..., window=...)`` takes the
+model layout (B, S, H, hd) / (B, T, KV, hd), transposes to kernel layout,
+runs the Pallas forward, and differentiates through the dq/dkv Pallas kernels.
+Falls back to the chunked pure-JAX implementation when shapes do not tile.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...models.attention import chunked_attention
+from ..common import default_interpret
+from . import kernel as K
+
+__all__ = ["flash_attention"]
+
+
+def _tiles(s: int, block: int) -> bool:
+    return s % block == 0 and s >= block
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def _flash(q, k, v, causal, window, block_q, block_k, interpret):
+    out, _ = K.flash_fwd(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=interpret,
+    )
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, block_q, block_k, interpret):
+    out, lse = K.flash_fwd(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=interpret,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, block_q, block_k, interpret, res, do):
+    q, k, v, out, lse = res
+    kv = k.shape[1]
+    group = q.shape[1] // kv
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    dq = K.flash_bwd_dq(
+        q, k, v, do, lse, delta, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    dk_h, dv_h = K.flash_bwd_dkv(
+        q, k, v, do, lse, delta, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    # reduce per-q-head grads onto the KV heads (GQA)
+    b, h, t, hd = dk_h.shape
+    dk = jnp.sum(dk_h.reshape(b, kv, group, t, hd), axis=2).astype(k.dtype)
+    dv = jnp.sum(dv_h.reshape(b, kv, group, t, hd), axis=2).astype(v.dtype)
+    return dq.astype(q.dtype), dk, dv
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Model layout in/out: q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    interpret = default_interpret(interpret)
+    if not (_tiles(s, block_q) and _tiles(t, block_k)):
+        return chunked_attention(q, k, v, causal=causal, window=window)
+    qt = jnp.swapaxes(q, 1, 2)  # (B,H,S,hd)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _flash(qt, kt, vt, causal, window, block_q, block_k, interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the RG-LRU diagonal gated linear recurrence
+(RecurrentGemma / Griffin, arXiv:2402.19427):
+
+    h_t = a_t ⊙ h_{t-1} + b_t,       a_t ∈ (0,1)^D
+
+where the caller supplies ``a`` (data-dependent decay) and ``b`` (gated input,
+already scaled by sqrt(1−a²)).  Sequential scan over time; f32 state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["linear_recurrence_ref"]
+
+
+def linear_recurrence_ref(
+    a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """a, b: (B, S, D); h0: (B, D). Returns (h (B,S,D), final (B,D))."""
+    bsz, _, d = a.shape
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d), jnp.float32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    final, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                             (jnp.moveaxis(af, 1, 0), jnp.moveaxis(bf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), final

@@ -1,0 +1,103 @@
+"""Fused RMSNorm Pallas TPU kernel (forward + input/weight gradients).
+
+One HBM round-trip per tensor: rows are blocked (rows_block, D) into VMEM, the
+f32 reduction happens in-register, and the scaled output is written back in the
+input dtype.  The backward kernel accumulates dw across row blocks in VMEM
+scratch over the sequential grid dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import default_interpret, tpu_compiler_params
+
+__all__ = ["rmsnorm_fwd", "rmsnorm_bwd"]
+
+
+def _fwd_kernel(x_ref, w_ref, y_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(y_ref.dtype)
+
+
+def rmsnorm_fwd(x: jax.Array, w: jax.Array, eps: float = 1e-5,
+                rows_block: int = 128, interpret=None) -> jax.Array:
+    """x: (N, D) row-major; w: (D,)."""
+    n, d = x.shape
+    interpret = default_interpret(interpret)
+    if n % rows_block != 0:
+        rows_block = n
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(n // rows_block,),
+        in_specs=[
+            pl.BlockSpec((rows_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        compiler_params=tpu_compiler_params(("arbitrary",), interpret),
+        interpret=interpret,
+    )(x, w)
+
+
+def _bwd_kernel(x_ref, w_ref, dy_ref, dx_ref, dw_ref, dw_scr, *, eps, n_blocks):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_scr[...] = jnp.zeros_like(dw_scr)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    xhat = x * r
+    dxhat = dy * w
+    d_inner = jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    dx = (dxhat - xhat * d_inner) * r
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dw_scr[...] += jnp.sum(dy * xhat, axis=0)
+
+    @pl.when(i == n_blocks - 1)
+    def _finish():
+        dw_ref[...] = dw_scr[...]
+
+
+def rmsnorm_bwd(x: jax.Array, w: jax.Array, dy: jax.Array, eps: float = 1e-5,
+                rows_block: int = 128, interpret=None) -> Tuple[jax.Array, jax.Array]:
+    n, d = x.shape
+    interpret = default_interpret(interpret)
+    if n % rows_block != 0:
+        rows_block = n
+    n_blocks = n // rows_block
+    dx, dw = pl.pallas_call(
+        functools.partial(_bwd_kernel, eps=eps, n_blocks=n_blocks),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((rows_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((rows_block, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), x.dtype),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        compiler_params=tpu_compiler_params(("arbitrary",), interpret),
+        interpret=interpret,
+    )(x, w, dy)
+    return dx, dw

@@ -1,0 +1,42 @@
+"""jit'd wrapper for fused RMSNorm with custom VJP (model layout (..., D))."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from . import kernel as K
+
+__all__ = ["rms_norm_fused"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm(x2d, w, eps, interpret):
+    return K.rmsnorm_fwd(x2d, w, eps=eps, interpret=interpret)
+
+
+def _fwd(x2d, w, eps, interpret):
+    return K.rmsnorm_fwd(x2d, w, eps=eps, interpret=interpret), (x2d, w)
+
+
+def _bwd(eps, interpret, res, dy):
+    x2d, w = res
+    dx, dw = K.rmsnorm_bwd(x2d, w, dy, eps=eps, interpret=interpret)
+    return dx, dw.astype(w.dtype)
+
+
+_rmsnorm.defvjp(_fwd, _bwd)
+
+
+def rms_norm_fused(
+    x: jax.Array, w: jax.Array, eps: float = 1e-5, interpret: Optional[bool] = None
+) -> jax.Array:
+    """Fused RMSNorm over the last axis; any leading shape."""
+    interpret = default_interpret(interpret)
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    return _rmsnorm(x2d, w, eps, interpret).reshape(shape)

@@ -1,0 +1,105 @@
+"""WKV-6 ops: chunked-parallel form (default) and the Pallas TPU kernel.
+
+Chunked derivation (stable: every exponent is ≤ 0 inside a chunk):
+with in-chunk inclusive log-decay ``L_t = Σ_{j≤t} log w_j`` and
+``L⁻_t = L_t − log w_t`` (exclusive),
+
+    y_t  = (r_t ⊙ e^{L⁻_t}) · S_in                     (inter-chunk)
+         + Σ_{m<t} [Σ_i r_{t,i} k_{m,i} e^{L⁻_{t,i} − L_{m,i}}] v_m
+         + (r_t ⊙ u) · k_t  v_t                        (diagonal bonus)
+    S_out = diag(e^{L_{C−1}}) S_in + Σ_m (e^{L_{C−1} − L_m} ⊙ k_m) v_mᵀ
+
+All pairwise exponents have m ≤ t so they are sums of negative log-decays —
+no overflow; underflow saturates to 0 which is exact in the limit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ref import wkv6_ref
+
+__all__ = ["wkv6", "wkv6_chunked"]
+
+_NEG = -1e30
+
+
+def _chunk_body(u: jax.Array, S: jax.Array, inputs, chunk: int):
+    rf, kf, vf, logw = inputs  # (B,C,H,K) / (B,C,H,V)
+    # in-chunk cumulative log decays
+    l_incl = jnp.cumsum(logw, axis=1)  # (B,C,H,K)
+    l_excl = l_incl - logw
+    # inter-chunk: (r ⊙ e^{L⁻}) @ S_in
+    r_dec = rf * jnp.exp(l_excl)
+    y_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, S)
+    # intra-chunk strict-lower scores with pairwise decay
+    expo = l_excl[:, :, None] - l_incl[:, None, :]  # (B, C_t, C_m, H, K)
+    c = chunk
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None, None]
+    expo = jnp.where(mask, jnp.minimum(expo, 0.0), _NEG)
+    scores = jnp.einsum("bthk,bmhk,btmhk->btmh", rf, kf, jnp.exp(expo))
+    diag = jnp.einsum("bthk,hk,bthk->bth", rf, u, kf)
+    y_intra = jnp.einsum("btmh,bmhv->bthv", scores, vf) + diag[..., None] * vf
+    # state update
+    l_last = l_incl[:, -1]  # (B,H,K)
+    k_dec = kf * jnp.exp(l_last[:, None] - l_incl)
+    S_new = jnp.exp(l_last)[..., None] * S + jnp.einsum("bmhk,bmhv->bhkv", k_dec, vf)
+    return S_new, y_inter + y_intra
+
+
+def wkv6_chunked(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: Optional[jax.Array] = None,
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if s % chunk != 0 or s <= chunk:
+        return wkv6_ref(r, k, v, w, u, state)
+    n = s // chunk
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    rf = r.astype(jnp.float32).reshape(b, n, chunk, h, dk)
+    kf = k.astype(jnp.float32).reshape(b, n, chunk, h, dk)
+    vf = v.astype(jnp.float32).reshape(b, n, chunk, h, dv)
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38)).reshape(b, n, chunk, h, dk)
+
+    body = functools.partial(_chunk_body, u.astype(jnp.float32))
+
+    def scan_fn(S, xs):
+        return body(S, xs, chunk)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, logw))
+    final, ys = jax.lax.scan(scan_fn, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dv).astype(r.dtype)
+    return y, final
+
+
+def wkv6(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: Optional[jax.Array] = None,
+    impl: str = "chunked",
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """WKV-6 with implementation dispatch ("ref" | "chunked" | "pallas")."""
+    if impl == "ref":
+        return wkv6_ref(r, k, v, w, u, state)
+    if impl == "chunked":
+        return wkv6_chunked(r, k, v, w, u, state, chunk=chunk)
+    if impl == "pallas":
+        from .kernel import wkv6_pallas
+
+        return wkv6_pallas(r, k, v, w, u, state)
+    raise ValueError(f"unknown wkv6 impl {impl!r}")

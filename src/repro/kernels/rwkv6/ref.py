@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (sequential scan over time).
+
+Per head, with state ``S ∈ R^{K×V}``, data-dependent per-channel decay
+``w_t ∈ (0,1)^K`` and bonus ``u ∈ R^K`` (Finch, arXiv:2404.05892):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+Shapes: r/k/w (B,S,H,K); v (B,S,H,V); u (H,K); state (B,H,K,V).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv6_ref"]
+
+
+def wkv6_ref(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,K)/(B,H,V)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + uf[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = (
+        jnp.moveaxis(rf, 1, 0),
+        jnp.moveaxis(kf, 1, 0),
+        jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(wf, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(r.dtype)  # (B,S,H,V)
+    return y, final

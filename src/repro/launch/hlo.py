@@ -1,0 +1,106 @@
+"""Optimized-HLO analysis: collective operand bytes + op census.
+
+``collective_bytes(hlo_text)`` sums operand sizes of every collective op in the
+post-SPMD per-device module (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute and their async -start forms; -done forms are
+skipped so nothing is double-counted).  Returns per-opcode byte totals — these
+are *per-device* bytes; the roofline multiplies by chip count to match the
+``collective_bytes / (chips × link_bw)`` convention (see benchmarks/roofline.py).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+__all__ = ["collective_bytes", "op_census", "parse_sizes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# "%name = type opcode(" — name may be %-prefixed or bare in new HLO syntax
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\w+\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)"
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_sizes(hlo_text: str) -> Dict[str, int]:
+    """Instruction name -> output byte size (tuples summed)."""
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, type_str, _ = m.groups()
+            sizes[name] = _type_bytes(type_str)
+    return sizes
+
+
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_NAME_TOKEN = re.compile(r"%?([\w.\-]+)")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-opcode summed operand bytes for collectives (per-device program)."""
+    sizes = parse_sizes(hlo_text)
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, _type_str, opcode = m.groups()
+        base = opcode
+        if base.endswith("-start"):
+            base = base[: -len("-start")]
+        if base.endswith("-done"):
+            continue  # operand is the matching -start; avoid double count
+        if base not in _COLLECTIVES:
+            continue
+        # operands: first (...) group after the opcode
+        idx = line.find(opcode)
+        rest = line[idx + len(opcode):]
+        om = _OPERANDS_RE.search(rest)
+        if not om:
+            continue
+        args = om.group(1)
+        total = 0
+        for tok in args.split(","):
+            tok = tok.strip()
+            nm = _NAME_TOKEN.match(tok)
+            if nm and nm.group(1) in sizes:
+                total += sizes[nm.group(1)]
+        out[base] += total
+    return dict(out)
+
+
+def op_census(hlo_text: str, opcodes=("fusion", "dot", "convolution", "custom-call")) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            counts[m.group(3)] += 1
+    return {k: v for k, v in counts.items() if k in opcodes or k in _COLLECTIVES}

@@ -1,0 +1,70 @@
+"""Serving launcher: batched inference through the ServingEngine with the
+timing infrastructure + latency-steered batch size (paper §3.3 scenario).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --requests 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, get_smoke_config
+from ..core import format_report, timer_db
+from ..models import model as M
+from ..serving import Request, ServingEngine
+
+__all__ = ["main", "run_serving"]
+
+
+def run_serving(
+    arch: str = "llama3.2-1b",
+    n_requests: int = 16,
+    prompt_len: int = 32,
+    max_new: int = 8,
+    max_batch: int = 8,
+    target_decode_ms: float | None = None,
+    seed: int = 0,
+):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    engine = ServingEngine(
+        cfg, params, max_batch=max_batch,
+        max_seq=prompt_len + max_new + 8,
+        target_decode_ms=target_decode_ms,
+    )
+    for rid in range(n_requests):
+        engine.submit(
+            Request(rid, prompt=list(rng.integers(0, cfg.vocab_size, prompt_len)),
+                    max_new_tokens=max_new)
+        )
+    engine.run()
+    return engine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="llama3.2-1b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--target-decode-ms", type=float, default=None)
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args(argv)
+    engine = run_serving(
+        args.arch, args.requests, args.prompt_len, args.max_new,
+        args.max_batch, args.target_decode_ms,
+    )
+    print(json.dumps(engine.stats(), indent=1))
+    if args.report:
+        print(format_report(timer_db()))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,282 @@
+"""Step builders: jitted train / prefill / serve steps with full sharding info.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct stand-ins
+for every model input of a shape cell — shardable, no device allocation — used
+by both the dry-run (lower+compile only) and the launchers (shapes for real
+allocation).  ``decode_*``/``long_*`` cells lower ``serve_step`` (one new token
+against a seq_len KV cache); ``prefill_*`` lowers the prefill; ``train_*``
+lowers ``train_step``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from ..dist.context import use_sharding
+from ..dist.sharding import DEFAULT_RULES, FSDP_RULES, ShardingRules, spec_for, tree_shardings
+from ..models import model as M
+from ..models.config import ArchConfig, ShapeConfig
+from ..optim import AdamWConfig, adamw_update, init_opt_state, opt_state_axes, warmup_cosine
+
+__all__ = [
+    "rules_for",
+    "input_specs",
+    "batch_axes",
+    "make_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "shardings_for",
+]
+
+
+def rules_for(cfg: ArchConfig, overrides: Optional[Dict[str, Any]] = None) -> ShardingRules:
+    rules = FSDP_RULES if cfg.sharding == "tp+fsdp" else DEFAULT_RULES
+    if overrides:
+        rules = rules.with_overrides(**overrides)
+    return rules
+
+
+def _bf16():
+    return jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Input specs per shape cell
+# ---------------------------------------------------------------------------
+
+def batch_axes(cfg: ArchConfig, kind: str) -> Dict[str, Tuple]:
+    """Logical axes of each batch input."""
+    axes: Dict[str, Tuple] = {}
+    if kind in ("train",):
+        axes["tokens"] = ("batch", "seq")
+        axes["targets"] = ("batch", "seq")
+    elif kind == "prefill":
+        axes["tokens"] = ("batch", "seq")
+    if cfg.family == "vlm" and kind in ("train", "prefill"):
+        axes["patch_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec" and kind in ("train", "prefill"):
+        axes["src_frames"] = ("batch", "seq", None)
+    return axes
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        text = s - cfg.n_vision_patches if cfg.family == "vlm" else s
+        out: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, text), i32),
+            "targets": jax.ShapeDtypeStruct((b, text), i32),
+        }
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_patches, cfg.d_model), _bf16()
+            )
+        if cfg.family == "encdec":
+            out["src_frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), _bf16())
+        return out
+    if shape.kind == "prefill":
+        text = s - cfg.n_vision_patches if cfg.family == "vlm" else s
+        if cfg.family == "encdec":
+            # encode seq_len source frames; prefill the decoder with BOS
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "src_frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), _bf16()),
+            }
+        out = {"tokens": jax.ShapeDtypeStruct((b, text), i32)}
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_patches, cfg.d_model), _bf16()
+            )
+        return out
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache": M.abstract_cache(cfg, b, s),
+        }
+    raise ValueError(f"unknown shape kind {shape.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolution
+# ---------------------------------------------------------------------------
+
+def shardings_for(axes_tree_, abstract_tree, mesh: Mesh, rules: ShardingRules):
+    return tree_shardings(axes_tree_, abstract_tree, mesh, rules)
+
+
+def _batch_shardings(cfg, shape, mesh, rules):
+    specs = input_specs(cfg, shape)
+    axes = batch_axes(cfg, shape.kind)
+    out = {}
+    for name, sds in specs.items():
+        if name == "cache":
+            out[name] = tree_shardings(
+                M.cache_axes(cfg, shape.global_batch, shape.seq_len), sds, mesh, rules
+            )
+        else:
+            ax = axes.get(name, ("batch",) + (None,) * (len(sds.shape) - 1))
+            out[name] = NamedSharding(mesh, spec_for(ax, sds.shape, mesh, rules))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BuiltStep:
+    fn: Any                    # jitted function
+    abstract_inputs: Tuple     # positional abstract args (excluding params/opt)
+    in_shardings: Tuple
+    out_shardings: Any
+    abstract_state: Dict[str, Any]  # {"params": ..., "opt_state": ...} abstract
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    rules: ShardingRules,
+    shape: ShapeConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+    donate: bool = True,
+    accum_steps: int = 1,
+) -> BuiltStep:
+    """``accum_steps > 1``: microbatched gradient accumulation — the global
+    batch is split into microbatches scanned sequentially; activation memory
+    scales down by the factor while FLOPs/collectives per token are unchanged
+    (§Perf H3)."""
+    p_axes = M.param_axes(cfg)
+    p_abs = M.abstract_params(cfg)
+    o_axes = opt_state_axes(opt_cfg, p_axes)
+    o_abs = jax.eval_shape(lambda p: init_opt_state(opt_cfg, p), p_abs)
+
+    p_shard = tree_shardings(p_axes, p_abs, mesh, rules)
+    o_shard = tree_shardings(o_axes, o_abs, mesh, rules)
+    b_shard = _batch_shardings(cfg, shape, mesh, rules)
+
+    def _grads(params, batch):
+        grad_fn = jax.value_and_grad(lambda p: M.loss_fn(cfg, p, batch), has_aux=True)
+        (loss, metrics), grads = grad_fn(params)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        with use_sharding(mesh, rules):
+            lr = warmup_cosine(
+                opt_state["step"], peak_lr=peak_lr, warmup_steps=warmup_steps,
+                total_steps=total_steps,
+            )
+            if accum_steps > 1:
+                micro = jax.tree.map(
+                    lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
+                    batch,
+                )
+
+                def body(acc, mb):
+                    g, m = _grads(params, mb)
+                    acc = jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32) / accum_steps, acc, g
+                    )
+                    return acc, m
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                grads, metrics_seq = jax.lax.scan(body, zero, micro)
+                metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_seq)
+            else:
+                grads, metrics = _grads(params, batch)
+            params, opt_state, stats = adamw_update(opt_cfg, params, grads, opt_state, lr)
+            metrics = dict(metrics)
+            metrics.update(stats)
+            metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return BuiltStep(
+        fn=jitted,
+        abstract_inputs=(input_specs(cfg, shape),),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        abstract_state={"params": p_abs, "opt_state": o_abs},
+    )
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: ShapeConfig) -> BuiltStep:
+    p_axes = M.param_axes(cfg)
+    p_abs = M.abstract_params(cfg)
+    p_shard = tree_shardings(p_axes, p_abs, mesh, rules)
+    b, s = shape.global_batch, shape.seq_len
+    c_abs = M.abstract_cache(cfg, b, s)
+    c_shard = tree_shardings(M.cache_axes(cfg, b, s), c_abs, mesh, rules)
+    b_shard = _batch_shardings(cfg, shape, mesh, rules)
+
+    def prefill_step(params, batch, cache):
+        with use_sharding(mesh, rules):
+            return M.prefill(cfg, params, batch, cache)
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(p_shard, b_shard, c_shard),
+        out_shardings=(c_shard, None),
+        donate_argnums=(2,),
+    )
+    return BuiltStep(
+        fn=jitted,
+        abstract_inputs=(input_specs(cfg, shape), c_abs),
+        in_shardings=(p_shard, b_shard, c_shard),
+        out_shardings=(c_shard, None),
+        abstract_state={"params": p_abs},
+    )
+
+
+def make_serve_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: ShapeConfig) -> BuiltStep:
+    p_axes = M.param_axes(cfg)
+    p_abs = M.abstract_params(cfg)
+    p_shard = tree_shardings(p_axes, p_abs, mesh, rules)
+    b, s = shape.global_batch, shape.seq_len
+    c_abs = M.abstract_cache(cfg, b, s)
+    c_shard = tree_shardings(M.cache_axes(cfg, b, s), c_abs, mesh, rules)
+    tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_shard = NamedSharding(mesh, spec_for(("batch", None), (b, 1), mesh, rules))
+
+    def serve_step(params, cache, tokens):
+        with use_sharding(mesh, rules):
+            return M.decode_step(cfg, params, cache, tokens)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, c_shard, tok_shard),
+        out_shardings=(c_shard, None),
+        donate_argnums=(1,),
+    )
+    return BuiltStep(
+        fn=jitted,
+        abstract_inputs=(c_abs, tok_abs),
+        in_shardings=(p_shard, c_shard, tok_shard),
+        out_shardings=(c_shard, None),
+        abstract_state={"params": p_abs},
+    )
+
+
+def build_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: ShapeConfig, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, rules, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, rules, shape)
+    return make_serve_step(cfg, mesh, rules, shape)

@@ -1,0 +1,349 @@
+"""Training launcher: the scheduler-driven loop with the full timing
+infrastructure, AdaptCheck-controlled checkpointing, restart, and monitoring.
+
+This is the production driver (examples/train_llm.py calls ``run_training``):
+every lifecycle phase is a scheduled routine in a Cactus-style bin, so the
+timer database holds a complete profile with zero manual instrumentation, and
+the AdaptCheck routine reads that profile to steer checkpointing (paper §3.2).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..core import (
+    AdaptiveCheckpointController,
+    AdaptiveCheckpointPolicy,
+    RunState,
+    Scheduler,
+    TimerLogger,
+    bin_distribution,
+    format_report,
+    increment_counter,
+    param_registry,
+    timer_db,
+)
+from ..data import DataLoader, SyntheticConfig, SyntheticLM
+from ..dist.meshutil import local_mesh
+from ..dist.stragglers import StragglerDetector
+from ..models import model as M
+from ..models.config import ArchConfig, ShapeConfig
+from ..monitor import MonitorServer, StatusWriter
+from ..optim import AdamWConfig, init_opt_state
+from .steps import make_train_step, rules_for
+
+__all__ = ["TrainSettings", "run_training", "main"]
+
+
+@dataclasses.dataclass
+class TrainSettings:
+    arch: str = "llama3.2-1b"
+    smoke: bool = True
+    steps: int = 50
+    global_batch: int = 8
+    seq_len: int = 128
+    mesh_shape: tuple = (1, 1)
+    peak_lr: float = 1e-3
+    ckpt_dir: Optional[str] = None
+    ckpt_mode: str = "adaptive"          # "adaptive" | "fixed" | "off"
+    ckpt_every: int = 512                # fixed mode
+    ckpt_max_fraction: float = 0.05      # adaptive mode
+    ckpt_max_interval_s: float = 60.0
+    ckpt_synchronous: bool = False
+    ckpt_delay_s: float = 0.0            # injected write latency (experiments)
+    queue_seconds: Optional[float] = None
+    eval_every: int = 0
+    report_every: int = 25
+    log_path: Optional[str] = None
+    status_path: Optional[str] = None
+    monitor_port: Optional[int] = None
+    restore: bool = True
+    seed: int = 0
+    data_mode: str = "copy"
+    #: LR-schedule horizon; decoupled from `steps` so an interrupted run and
+    #: its resumption share the same schedule (restart determinism)
+    lr_total_steps: Optional[int] = None
+
+
+def _flops_per_step(cfg: ArchConfig, tokens: int) -> float:
+    _, active = M.param_counts(cfg)
+    return 6.0 * active * tokens
+
+
+def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> Dict[str, Any]:
+    """Run the scheduled training loop; returns a summary dict."""
+    db = timer_db()
+    registry = param_registry()
+    sch = Scheduler(db)
+    st = RunState(max_iterations=settings.steps)
+
+    if cfg is None:
+        cfg = get_smoke_config(settings.arch) if settings.smoke else get_config(settings.arch)
+    mesh = local_mesh(settings.mesh_shape)
+    rules = rules_for(cfg)
+    shape = ShapeConfig("train_local", "train", settings.seq_len, settings.global_batch)
+
+    registry.declare("ckpt.max_fraction", settings.ckpt_max_fraction, steerable=True,
+                     doc="AdaptCheck wall-time fraction bound")
+    registry.declare("ckpt.max_interval_s", settings.ckpt_max_interval_s, steerable=True,
+                     doc="AdaptCheck max seconds between checkpoints")
+
+    # --- thorn state shared across routines -------------------------------------
+    manager = None
+    controller = None
+    logger = TimerLogger(settings.log_path) if settings.log_path else None
+    status = StatusWriter(settings.status_path) if settings.status_path else None
+    monitor = None
+    detector = StragglerDetector(n_hosts=1)
+    model_flops = _flops_per_step(cfg, settings.global_batch * settings.seq_len)
+
+    # --- STARTUP ----------------------------------------------------------------
+    def startup(s: RunState) -> None:
+        nonlocal manager, controller, monitor
+        opt_cfg = AdamWConfig()
+        horizon = settings.lr_total_steps or settings.steps
+        built = make_train_step(
+            cfg, mesh, rules, shape, opt_cfg=opt_cfg,
+            peak_lr=settings.peak_lr, total_steps=max(horizon, 2),
+            warmup_steps=max(min(100, horizon // 10), 1),
+        )
+        s["built"] = built
+        with db.timing("STARTUP/compile"):
+            s["exec"] = built.fn.lower(
+                built.abstract_state["params"],
+                built.abstract_state["opt_state"],
+                *built.abstract_inputs,
+            ).compile()
+
+        source = SyntheticLM(
+            SyntheticConfig(cfg.vocab_size, settings.seq_len, settings.global_batch,
+                            mode=settings.data_mode, seed=settings.seed),
+            arch=cfg,
+        )
+        start_step = 0
+        restored = None
+        if settings.ckpt_dir:
+            manager = CheckpointManager(
+                settings.ckpt_dir,
+                synchronous=settings.ckpt_synchronous,
+                delay_s=settings.ckpt_delay_s,
+            )
+            if settings.restore:
+                restored = manager.restore_latest()
+        if restored is not None:
+            start_step, tree, meta = restored
+            s["params"] = tree["params"]
+            s["opt_state"] = tree["opt_state"]
+            s.iteration = start_step
+            print(f"[train] restored checkpoint at step {start_step}")
+        else:
+            with db.timing("STARTUP/init_params"):
+                s["params"] = M.init_params(cfg, jax.random.PRNGKey(settings.seed))
+                s["opt_state"] = init_opt_state(AdamWConfig(), s["params"])
+        # commit state to the mesh with the step's exact shardings (AOT path)
+        s["params"] = jax.device_put(s["params"], built.in_shardings[0])
+        s["opt_state"] = jax.device_put(s["opt_state"], built.in_shardings[1])
+        s["loader"] = DataLoader(source, start_step=start_step)
+
+        policy = AdaptiveCheckpointPolicy(
+            mode="adaptive" if settings.ckpt_mode == "adaptive" else "fixed",
+            every_iterations=settings.ckpt_every,
+            max_fraction=registry.get("ckpt.max_fraction"),
+            max_interval_seconds=registry.get("ckpt.max_interval_s"),
+            queue_seconds=settings.queue_seconds,
+        )
+        controller = AdaptiveCheckpointController(policy)
+        controller.start_run(time.monotonic())
+        if settings.monitor_port is not None:
+            monitor = MonitorServer(settings.monitor_port, db, registry,
+                                    status_fn=lambda: {"iteration": st.iteration})
+            port = monitor.start()
+            print(f"[train] monitor at http://127.0.0.1:{port}/")
+        registry.freeze()
+
+    sch.schedule(startup, bin="STARTUP", thorn="driver")
+
+    # --- PRESTEP: data ------------------------------------------------------------
+    def fetch_data(s: RunState) -> None:
+        batch = s["loader"].next()
+        shardings = s["built"].in_shardings[2]
+
+        def put(k, v):
+            if v.dtype == np.float32:  # modality stubs arrive f32 -> bf16
+                v = jnp.asarray(v, jnp.bfloat16)
+            return jax.device_put(v, shardings[k])
+
+        s["batch"] = {k: put(k, v) for k, v in batch.items()}
+
+    sch.schedule(fetch_data, bin="PRESTEP", thorn="data")
+
+    # --- EVOL: the jitted step -----------------------------------------------------
+    def train_step(s: RunState) -> None:
+        params, opt_state, metrics = s["exec"](s["params"], s["opt_state"], s["batch"])
+        metrics = jax.block_until_ready(metrics)
+        s["params"], s["opt_state"] = params, opt_state
+        s["metrics"] = {k: float(v) for k, v in metrics.items()}
+        increment_counter("xla_flops", model_flops)
+
+    sch.schedule(train_step, bin="EVOL", thorn="trainer")
+
+    # --- ANALYSIS -------------------------------------------------------------------
+    def analysis(s: RunState) -> None:
+        step_t = db.get("EVOL/trainer::train_step").seconds()
+        detector.observe(0, step_t / max(s.iteration + 1, 1))
+        if s.iteration % 8 == 7:
+            detector.check(s.iteration)
+
+    sch.schedule(analysis, bin="ANALYSIS", thorn="stragglers")
+
+    # --- CHECKPOINT: AdaptCheck ------------------------------------------------------
+    ckpt_timer_name = "CHECKPOINT/adaptcheck::write"
+
+    def adaptive_checkpoint(s: RunState) -> None:
+        if manager is None or settings.ckpt_mode == "off":
+            return
+        # live steering (paper §5): pick up runtime changes to the steerable
+        # AdaptCheck parameters (e.g. POSTed through the HTTP monitor)
+        frac = registry.get("ckpt.max_fraction")
+        interval = registry.get("ckpt.max_interval_s")
+        if (frac, interval) != (
+            controller.policy.max_fraction, controller.policy.max_interval_seconds
+        ):
+            controller.policy = dataclasses.replace(
+                controller.policy, max_fraction=frac, max_interval_seconds=interval
+            )
+            controller.policy.validate()
+        now = time.monotonic()
+        # fraction is measured against *loop* wall time (from start_run), not
+        # the STARTUP compile — matches the paper's "time spent on the problem"
+        total = now - controller.started_at
+        ckpt_time = (
+            db.get(ckpt_timer_name).seconds() if db.exists(ckpt_timer_name) else 0.0
+        )
+        decision = controller.decide(
+            iteration=s.iteration,
+            now=now,
+            total_seconds=total,
+            checkpoint_seconds=ckpt_time,
+        )
+        s["last_ckpt_decision"] = decision
+        if not decision.checkpoint:
+            return
+        handle = db.create(ckpt_timer_name)
+        db.start(handle)
+        try:
+            stats = manager.save(
+                s.iteration,
+                {"params": s["params"], "opt_state": s["opt_state"],
+                 "data": s["loader"].state()},
+                metadata={"reason": decision.reason},
+            )
+        finally:
+            db.stop(handle)
+        controller.observe_checkpoint(
+            time.monotonic(), stats["blocking_seconds"], stats["nbytes"]
+        )
+
+    sch.schedule(adaptive_checkpoint, bin="CHECKPOINT", thorn="adaptcheck")
+
+    # --- OUTPUT ------------------------------------------------------------------------
+    def output(s: RunState) -> None:
+        if logger is not None:
+            logger.log(s.iteration, extra=s.get("metrics"))
+        if status is not None:
+            status.write({"iteration": s.iteration, **(s.get("metrics") or {})})
+        if settings.report_every and s.iteration % settings.report_every == 0:
+            m = s.get("metrics") or {}
+            print(
+                f"[train] step {s.iteration:5d} loss={m.get('loss', float('nan')):.4f} "
+                f"ce={m.get('ce', float('nan')):.4f} gnorm={m.get('grad_norm', 0):.2f}"
+            )
+
+    sch.schedule(output, bin="OUTPUT", thorn="report")
+
+    # --- SHUTDOWN --------------------------------------------------------------------
+    def shutdown(s: RunState) -> None:
+        if manager is not None and settings.ckpt_mode != "off":
+            with db.timing(ckpt_timer_name):
+                stats = manager.save(
+                    s.iteration,
+                    {"params": s["params"], "opt_state": s["opt_state"],
+                     "data": s["loader"].state()},
+                    metadata={"reason": "final"},
+                )
+            manager.wait()
+            manager.close()
+        s["loader"].close()
+        if monitor is not None:
+            monitor.stop()
+
+    sch.schedule(shutdown, bin="SHUTDOWN", thorn="driver")
+
+    # --- run -----------------------------------------------------------------------------
+    sch.run(st)
+
+    summary = {
+        "iterations": st.iteration,
+        "final_metrics": st.get("metrics"),
+        "total_seconds": db.get("simulation/total").seconds(),
+        "bin_seconds": bin_distribution(db),
+        "checkpoint": controller.summary() if controller else {},
+        "ckpt_fraction": (
+            db.get(ckpt_timer_name).seconds() / max(db.get("simulation/total").seconds(), 1e-9)
+            if db.exists(ckpt_timer_name)
+            else 0.0
+        ),
+        "straggler_reports": len(detector.reports),
+    }
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-mode", choices=["adaptive", "fixed", "off"], default="adaptive")
+    ap.add_argument("--ckpt-every", type=int, default=512)
+    ap.add_argument("--ckpt-max-fraction", type=float, default=0.05)
+    ap.add_argument("--ckpt-sync", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--report", action="store_true", help="print the timer report")
+    ap.add_argument("--monitor-port", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    settings = TrainSettings(
+        arch=args.arch, smoke=args.smoke, steps=args.steps,
+        global_batch=args.batch, seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+        ckpt_mode=args.ckpt_mode, ckpt_every=args.ckpt_every,
+        ckpt_max_fraction=args.ckpt_max_fraction,
+        ckpt_synchronous=args.ckpt_sync, peak_lr=args.lr,
+        monitor_port=args.monitor_port,
+    )
+    summary = run_training(settings)
+    print(json.dumps(summary, indent=1, default=str))
+    if args.report:
+        print(format_report(timer_db(), channels=("walltime", "cputime", "xla_flops")))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,4 @@
+from .config import ArchConfig, MoESettings, ShapeConfig, SHAPES
+from . import model
+
+__all__ = ["ArchConfig", "MoESettings", "ShapeConfig", "SHAPES", "model"]

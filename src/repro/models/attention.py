@@ -1,0 +1,167 @@
+"""Attention: GQA with causal / sliding-window masks, three implementations.
+
+* ``naive``   — full (S×T) score matrix; the oracle (also ``kernels/flash_attention/ref.py``).
+* ``chunked`` — memory-efficient exact attention: ``lax.scan`` over query
+  chunks; each chunk computes an exact softmax against (a band of) K/V, so the
+  S×T buffer never materializes.  This is the default everywhere and is what
+  the dry-run lowers — the memory-roofline win is visible in ``cost_analysis``.
+  For sliding-window attention only the K/V band covering the window is sliced
+  per chunk (compute O(S·window) instead of O(S²)).
+* ``pallas``  — the TPU flash-attention kernel (kernels/flash_attention);
+  selected on TPU backends, falls back to ``chunked`` elsewhere.
+
+Shapes: q (B, S, H, hd); k/v (B, T, KV, hd); GQA group = H // KV.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention", "decode_attention"]
+
+_NEG_INF = -2.0e38
+
+
+def _split_heads(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, s, kv, g, hd = x.shape
+    return x.reshape(b, s, kv * g, hd)
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: Optional[int]) -> jax.Array:
+    """(Sq, Tk) additive bias from position arrays."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Full-matrix reference attention."""
+    b, s, h, hd = q.shape
+    t, n_kv = k.shape[1], k.shape[2]
+    scale = hd ** -0.5
+    qg = _split_heads(q, n_kv)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(s)
+    k_pos = jnp.arange(t)
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return _merge_heads(out)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Exact attention, scanned over query chunks (no S×T buffer)."""
+    b, s, h, hd = q.shape
+    t, n_kv = k.shape[1], k.shape[2]
+    if s % chunk != 0 or s <= chunk:
+        return naive_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    n_chunks = s // chunk
+    scale = hd ** -0.5
+    qg = _split_heads(q, n_kv).reshape(b, n_chunks, chunk, n_kv, h // n_kv, hd)
+    qg = jnp.moveaxis(qg, 1, 0)  # (nq, B, cq, KV, G, hd)
+
+    # For sliding-window attention only a band of K/V is needed per q chunk.
+    band = None
+    if window is not None:
+        band = min(t, ((window + chunk + 127) // 128) * 128)
+
+    def body(_, inputs):
+        qc, idx = inputs
+        q_pos = q_offset + idx * chunk + jnp.arange(chunk)
+        if band is not None and band < t:
+            start = jnp.clip(idx * chunk - (band - chunk), 0, t - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            k_pos = start + jnp.arange(band)
+        else:
+            kc, vc = k, v
+            k_pos = jnp.arange(t)
+        scores = jnp.einsum("bckgd,btkd->bkgct", qc, kc, preferred_element_type=jnp.float32) * scale
+        ok = jnp.ones((chunk, k_pos.shape[0]), dtype=bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+        scores = scores + jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgct,btkd->bckgd", probs.astype(vc.dtype), vc)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qg, jnp.arange(n_chunks)))
+    outs = jnp.moveaxis(outs, 0, 1).reshape(b, s, n_kv, h // n_kv, hd)
+    return _merge_heads(outs)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    impl: str = "chunked",
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    if impl == "chunked":
+        return chunked_attention(
+            q, k, v, causal=causal, window=window, chunk=chunk, q_offset=q_offset
+        )
+    if impl == "pallas":
+        from ..kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_valid: jax.Array,
+) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, T, KV, hd); kv_valid: (B, T) bool.
+    """
+    b, _, h, hd = q.shape
+    n_kv = k_cache.shape[2]
+    scale = hd ** -0.5
+    qg = _split_heads(q, n_kv)[:, 0]  # (B, KV, G, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache, preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(kv_valid[:, None, None, :], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,3 @@
+from .server import MonitorServer, StatusWriter
+
+__all__ = ["MonitorServer", "StatusWriter"]

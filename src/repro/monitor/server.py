@@ -1,0 +1,119 @@
+"""Online application monitoring (paper Sec. 3.1: "a web-accessible HTTP
+interface") — a stdlib HTTP server in a daemon thread serving the live timer
+database, steerable parameters, and run status.
+
+Endpoints:
+    /            HTML overview (Fig.-2-style timer table)
+    /timers      JSON timer snapshot
+    /params      JSON steerable parameters; POST /params {"name":..,"value":..}
+                 steers a parameter live (paper Sec. 5 steering)
+    /status      JSON run status (iteration, loss, checkpoint stats)
+
+Also provides :class:`StatusWriter`, which atomically writes the same payload to
+a JSON file for clusters where an open port is not possible.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Dict, Optional
+
+from ..core.params import ParamRegistry, param_registry
+from ..core.report import format_report
+from ..core.timers import TimerDB, timer_db
+
+__all__ = ["MonitorServer", "StatusWriter"]
+
+
+class StatusWriter:
+    """Atomically writes run status + timer snapshot to a JSON file."""
+
+    def __init__(self, path: str, db: Optional[TimerDB] = None) -> None:
+        self.path = path
+        self._db = db if db is not None else timer_db()
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+
+    def write(self, status: Dict[str, Any]) -> None:
+        payload = {"status": status, "timers": self._db.snapshot()}
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self.path)
+
+
+class MonitorServer:
+    """Threaded HTTP monitor.  Start with ``start()``; idempotent ``stop()``."""
+
+    def __init__(
+        self,
+        port: int = 0,
+        db: Optional[TimerDB] = None,
+        params: Optional[ParamRegistry] = None,
+        status_fn: Optional[Callable[[], Dict[str, Any]]] = None,
+    ) -> None:
+        self._db = db if db is not None else timer_db()
+        self._params = params if params is not None else param_registry()
+        self._status_fn = status_fn or (lambda: {})
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+        self._port = port
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1] if self._httpd else self._port
+
+    def start(self) -> int:
+        if self._httpd is not None:
+            return self.port
+        monitor = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, fmt, *args):  # silence
+                pass
+
+            def _send(self, code: int, body: bytes, ctype: str = "application/json") -> None:
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):
+                if self.path.startswith("/timers"):
+                    self._send(200, json.dumps(monitor._db.snapshot()).encode())
+                elif self.path.startswith("/params"):
+                    self._send(200, json.dumps(monitor._params.describe()).encode())
+                elif self.path.startswith("/status"):
+                    self._send(200, json.dumps(monitor._status_fn()).encode())
+                elif self.path == "/" or self.path.startswith("/index"):
+                    body = "<html><body><pre>" + format_report(monitor._db) + "</pre></body></html>"
+                    self._send(200, body.encode(), "text/html")
+                else:
+                    self._send(404, b'{"error": "not found"}')
+
+            def do_POST(self):
+                if not self.path.startswith("/params"):
+                    self._send(404, b'{"error": "not found"}')
+                    return
+                length = int(self.headers.get("Content-Length", "0"))
+                try:
+                    req = json.loads(self.rfile.read(length) or b"{}")
+                    monitor._params.set(req["name"], req["value"])
+                    self._send(200, b'{"ok": true}')
+                except Exception as exc:  # noqa: BLE001 - report to client
+                    self._send(400, json.dumps({"error": str(exc)}).encode())
+
+        self._httpd = ThreadingHTTPServer(("127.0.0.1", self._port), Handler)
+        self._thread = threading.Thread(target=self._httpd.serve_forever, daemon=True)
+        self._thread.start()
+        return self.port
+
+    def stop(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None
+            self._thread = None

@@ -1,0 +1,99 @@
+"""AdamW with mixed precision: bf16 params, f32 master + moments, global-norm
+clipping.  Written against plain pytrees (no optax dependency in this offline
+container).  Optimizer state inherits the parameters' logical sharding axes —
+combined with the ``tp+fsdp`` preset this gives ZeRO-3-style sharded optimizer
+state on the data axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import Axes
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "opt_state_axes"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    #: keep an f32 master copy of bf16 params (standard mixed precision)
+    master_weights: bool = True
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def opt_state_axes(cfg: AdamWConfig, axes):
+    """Logical axes for the optimizer state, mirroring the parameter axes."""
+    state = {
+        "step": Axes(()),
+        "m": axes,
+        "v": axes,
+    }
+    if cfg.master_weights:
+        state["master"] = axes
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params, grads, opt_state, lr: jax.Array
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (params, opt_state, stats)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    masters = opt_state.get("master", params)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / c1
+        vh = v / c2
+        mw = master.astype(jnp.float32)
+        new_master = mw - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * mw)
+        return m, v, new_master
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], masters)
+    _is_upd = lambda t: (  # noqa: E731 - (m, v, master) result triple
+        isinstance(t, tuple) and len(t) == 3 and not isinstance(t[0], (dict, tuple, list))
+    )
+    m_new = jax.tree.map(lambda t: t[0], out, is_leaf=_is_upd)
+    v_new = jax.tree.map(lambda t: t[1], out, is_leaf=_is_upd)
+    master_new = jax.tree.map(lambda t: t[2], out, is_leaf=_is_upd)
+    params_new = jax.tree.map(
+        lambda mw, p: mw.astype(p.dtype), master_new, params
+    )
+    new_state = {"step": step, "m": m_new, "v": v_new}
+    if cfg.master_weights:
+        new_state["master"] = master_new
+    stats = {"grad_norm": gnorm, "clip_scale": scale}
+    return params_new, new_state, stats

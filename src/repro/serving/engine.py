@@ -1,0 +1,171 @@
+"""Batched serving engine with timing-driven adaptive batching.
+
+Static-batch scheduler: admit up to ``max_batch`` queued requests (padded to a
+common prompt length), one jitted prefill, then lock-step decode until every
+request finishes.  Every phase runs through the scheduler-integrated timers
+(``serve/admit``, ``serve/prefill``, ``serve/decode``), and — the paper's
+self-adaptation loop — the engine *steers its own batch size*: if the measured
+per-token decode latency exceeds ``target_decode_ms``, the steerable
+``serving.max_batch`` parameter is lowered (halved); if comfortably below, it
+is raised, bounded by the configured maximum.  See §3.3 of the paper
+("future scenarios": output/analysis frequency chosen dynamically from
+performance measurements).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.params import ParamRegistry, param_registry
+from ..core.timers import TimerDB, timer_db
+from ..models import model as M
+from ..models.config import ArchConfig
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    admitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        max_batch: int = 8,
+        max_seq: int = 256,
+        target_decode_ms: Optional[float] = None,
+        db: Optional[TimerDB] = None,
+        registry: Optional[ParamRegistry] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.target_decode_ms = target_decode_ms
+        self._db = db if db is not None else timer_db()
+        self._registry = registry if registry is not None else param_registry()
+        self._registry.declare(
+            "serving.max_batch", max_batch, steerable=True,
+            doc="admitted batch size (self-steered from decode latency)",
+            validator=lambda v: isinstance(v, int) and v >= 1,
+        )
+        self._hard_max = max_batch
+        self.queue: Deque[Request] = deque()
+        self.completed: List[Request] = []
+        self._decode_ms_history: List[float] = []
+
+        self._prefill = jax.jit(lambda p, b, c: M.prefill(cfg, p, b, c))
+        self._decode = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.admitted_at = time.monotonic()
+        self.queue.append(req)
+
+    @property
+    def max_batch(self) -> int:
+        return int(self._registry.get("serving.max_batch"))
+
+    # -- one engine iteration ------------------------------------------------
+    def step_batch(self) -> List[Request]:
+        """Admit → prefill → decode-to-completion for one batch."""
+        if not self.queue:
+            return []
+        with self._db.timing("serve/admit"):
+            batch_reqs: List[Request] = []
+            while self.queue and len(batch_reqs) < self.max_batch:
+                batch_reqs.append(self.queue.popleft())
+            b = len(batch_reqs)
+            plen = max(len(r.prompt) for r in batch_reqs)
+            tokens = np.zeros((b, plen), np.int32)
+            for i, r in enumerate(batch_reqs):
+                tokens[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        with self._db.timing("serve/prefill"):
+            cache = M.init_cache(self.cfg, b, self.max_seq)
+            batch = {"tokens": jnp.asarray(tokens)}
+            if self.cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (b, self.cfg.n_vision_patches, self.cfg.d_model), jnp.bfloat16
+                )
+            if self.cfg.family == "encdec":
+                batch["src_frames"] = jnp.zeros((b, plen, self.cfg.d_model), jnp.bfloat16)
+            cache, logits = self._prefill(self.params, batch, cache)
+            logits = jax.block_until_ready(logits)
+        max_new = max(r.max_new_tokens for r in batch_reqs)
+        next_tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(jnp.int32)
+        done = np.zeros(b, bool)
+        n_decoded = 0
+        decode_before = (
+            self._db.get("serve/decode").seconds() if self._db.exists("serve/decode") else 0.0
+        )
+        with self._db.timing("serve/decode") as decode_timer:
+            for step_i in range(max_new):
+                for i, r in enumerate(batch_reqs):
+                    if not done[i]:
+                        tok = int(next_tok[i])
+                        r.output.append(tok)
+                        if (r.eos_token is not None and tok == r.eos_token) or len(
+                            r.output
+                        ) >= r.max_new_tokens:
+                            done[i] = True
+                n_decoded += 1
+                if done.all() or step_i == max_new - 1:
+                    break
+                cache, logits = self._decode(self.params, cache, next_tok[:, None])
+                logits = jax.block_until_ready(logits)
+                next_tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(
+                    jnp.int32
+                )
+        decode_s = decode_timer.seconds() - decode_before
+        per_token_ms = 1e3 * decode_s / max(n_decoded, 1)
+        self._decode_ms_history.append(per_token_ms)
+        self._steer_batch_size(per_token_ms)
+        now = time.monotonic()
+        for r in batch_reqs:
+            r.finished_at = now
+            self.completed.append(r)
+        return batch_reqs
+
+    def run(self) -> List[Request]:
+        while self.queue:
+            self.step_batch()
+        return self.completed
+
+    # -- self-steering ----------------------------------------------------------
+    def _steer_batch_size(self, per_token_ms: float) -> None:
+        if self.target_decode_ms is None:
+            return
+        current = self.max_batch
+        if per_token_ms > self.target_decode_ms and current > 1:
+            self._registry.set("serving.max_batch", max(current // 2, 1))
+        elif per_token_ms < 0.5 * self.target_decode_ms and current < self._hard_max:
+            self._registry.set("serving.max_batch", min(current * 2, self._hard_max))
+
+    def stats(self) -> Dict[str, float]:
+        lat = [r.finished_at - r.admitted_at for r in self.completed]
+        return {
+            "completed": float(len(self.completed)),
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
+            "decode_ms_per_token_last": self._decode_ms_history[-1]
+            if self._decode_ms_history
+            else 0.0,
+            "max_batch": float(self.max_batch),
+        }

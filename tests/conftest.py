@@ -1,0 +1,17 @@
+import pytest
+
+from repro.core.clocks import reset_default_clocks
+from repro.core.params import reset_param_registry
+from repro.core.timers import reset_timer_db
+
+
+@pytest.fixture(autouse=True)
+def _fresh_infra():
+    """Isolate the process-global timing/steering registries per test."""
+    reset_default_clocks()
+    reset_timer_db()
+    reset_param_registry()
+    yield
+    reset_default_clocks()
+    reset_timer_db()
+    reset_param_registry()

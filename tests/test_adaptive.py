@@ -1,0 +1,183 @@
+"""AdaptCheck controller: paper guarantees as property-based invariants.
+
+Key invariants (paper Sec. 3.2):
+  I1 (weak fraction bound): a checkpoint is never *started* while
+     ckpt_time/total_time > max_fraction, unless the max-interval guarantee or
+     the queue deadline forces it.
+  I2 (max-interval guarantee): whenever wall time since the last checkpoint
+     exceeds max_interval_seconds, the controller decides to checkpoint.
+  I3 (fixed mode): checkpoints exactly every N iterations.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adaptive import (
+    AdaptiveCheckpointController,
+    AdaptiveCheckpointPolicy,
+    CheckpointDurationPredictor,
+)
+
+
+def make_controller(**kw):
+    policy = AdaptiveCheckpointPolicy(**kw)
+    c = AdaptiveCheckpointController(policy)
+    c.start_run(0.0)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_fixed_mode_interval():
+    c = make_controller(mode="fixed", every_iterations=4)
+    decisions = [
+        c.decide(iteration=i, now=float(i), total_seconds=float(i + 1),
+                 checkpoint_seconds=0.0).checkpoint
+        for i in range(1, 13)
+    ]
+    assert decisions == [i % 4 == 0 for i in range(1, 13)]
+
+
+def test_fraction_bound_suppresses():
+    c = make_controller(mode="adaptive", max_fraction=0.05)
+    d = c.decide(iteration=1, now=10.0, total_seconds=10.0, checkpoint_seconds=1.0)
+    assert not d.checkpoint and d.reason == "fraction-bound"
+
+
+def test_max_interval_overrides_fraction_bound():
+    c = make_controller(mode="adaptive", max_fraction=0.05, max_interval_seconds=5.0)
+    d = c.decide(iteration=1, now=6.0, total_seconds=6.0, checkpoint_seconds=3.0)
+    assert d.checkpoint and d.reason == "max-interval"
+
+
+def test_min_interval_guards_thrash():
+    c = make_controller(mode="adaptive", max_fraction=0.5, min_interval_seconds=10.0)
+    c.observe_checkpoint(now=1.0, seconds=0.1)
+    d = c.decide(iteration=2, now=2.0, total_seconds=2.0, checkpoint_seconds=0.1)
+    assert not d.checkpoint and d.reason == "min-interval"
+
+
+def test_queue_deadline_forces_final_checkpoint_once():
+    c = make_controller(mode="adaptive", max_fraction=0.05, queue_seconds=100.0,
+                        deadline_safety=2.0)
+    c.observe_checkpoint(now=1.0, seconds=10.0, nbytes=1e6)  # predictor: ~10s
+    # 75s in: remaining 25s > 2*10 -> no forced final
+    d1 = c.decide(iteration=5, now=75.0, total_seconds=75.0, checkpoint_seconds=10.0)
+    assert d1.reason != "queue-deadline-final"
+    # 85s in: remaining 15s <= 2*10 -> forced final
+    d2 = c.decide(iteration=6, now=85.0, total_seconds=85.0, checkpoint_seconds=10.0)
+    assert d2.checkpoint and d2.reason == "queue-deadline-final"
+    d3 = c.decide(iteration=7, now=90.0, total_seconds=90.0, checkpoint_seconds=10.0)
+    assert d3.reason != "queue-deadline-final"
+
+
+def test_predictor_admission_tracks_bound_from_below():
+    c = make_controller(mode="adaptive", max_fraction=0.10, use_predictor=True)
+    c.observe_checkpoint(now=1.0, seconds=1.0, nbytes=1e6)
+    # admitting a ~1s ckpt at total=50s keeps (1+1)/(50+1) = 3.9% <= 10%
+    d = c.decide(iteration=2, now=50.0, total_seconds=50.0, checkpoint_seconds=1.0)
+    assert d.checkpoint and d.reason == "predictor-admit"
+    # at total=15s: (1+1)/(15+1) = 12.5% > 10% -> defer
+    c2 = make_controller(mode="adaptive", max_fraction=0.10, use_predictor=True)
+    c2.observe_checkpoint(now=1.0, seconds=1.0, nbytes=1e6)
+    d2 = c2.decide(iteration=2, now=15.0, total_seconds=15.0, checkpoint_seconds=1.0)
+    assert not d2.checkpoint and d2.reason == "predictor-defer"
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        AdaptiveCheckpointPolicy(max_fraction=0.0).validate()
+    with pytest.raises(ValueError):
+        AdaptiveCheckpointPolicy(mode="bogus").validate()
+    with pytest.raises(ValueError):
+        AdaptiveCheckpointPolicy(every_iterations=0).validate()
+
+
+# ---------------------------------------------------------------------------
+# Predictor
+# ---------------------------------------------------------------------------
+
+def test_predictor_linear_fit():
+    p = CheckpointDurationPredictor()
+    for nbytes in (1e6, 2e6, 3e6, 4e6):
+        p.observe(seconds=nbytes * 1e-6 + 1.0, nbytes=nbytes)  # t = 1 + 1e-6 b
+    assert p.predict(8e6) == pytest.approx(9.0, rel=0.05)
+
+
+def test_predictor_ema_fallback_constant_bytes():
+    p = CheckpointDurationPredictor()
+    for _ in range(5):
+        p.observe(seconds=2.0, nbytes=1e6)
+    assert p.predict(1e6) == pytest.approx(2.0, rel=0.01)
+
+
+def test_predictor_ignores_bad_samples():
+    p = CheckpointDurationPredictor()
+    p.observe(seconds=-1.0)
+    p.observe(seconds=float("nan"))
+    assert p.n_observations == 0
+
+
+# ---------------------------------------------------------------------------
+# Property-based: invariants over arbitrary measurement traces
+# ---------------------------------------------------------------------------
+
+@given(
+    frac=st.floats(0.01, 0.5),
+    max_interval=st.floats(1.0, 50.0),
+    trace=st.lists(
+        st.tuples(
+            st.floats(0.01, 5.0),   # step duration
+            st.floats(0.0, 2.0),    # checkpoint duration if taken
+        ),
+        min_size=1, max_size=60,
+    ),
+)
+@settings(max_examples=60, deadline=None)
+def test_invariants_weak_bound_and_max_interval(frac, max_interval, trace):
+    c = make_controller(
+        mode="adaptive", max_fraction=frac, max_interval_seconds=max_interval
+    )
+    now = 0.0
+    total = 0.0
+    ckpt_total = 0.0
+    last_ckpt_at = 0.0
+    for i, (step_s, ckpt_s) in enumerate(trace):
+        now += step_s
+        total += step_s
+        since_last = now - last_ckpt_at
+        d = c.decide(
+            iteration=i, now=now, total_seconds=total, checkpoint_seconds=ckpt_total
+        )
+        fraction = ckpt_total / total if total > 0 else 0.0
+        # I2: interval guarantee
+        if since_last >= max_interval:
+            assert d.checkpoint, "max-interval guarantee violated"
+        # I1: weak bound — only the interval guarantee may override
+        if d.checkpoint and fraction > frac:
+            assert d.reason in ("max-interval", "queue-deadline-final"), (
+                f"bound violated: fraction={fraction:.3f} > {frac:.3f}, "
+                f"reason={d.reason}"
+            )
+        if d.checkpoint:
+            now += ckpt_s
+            total += ckpt_s
+            ckpt_total += ckpt_s
+            c.observe_checkpoint(now, ckpt_s, nbytes=1e6)
+            last_ckpt_at = now
+
+
+@given(
+    st.lists(st.floats(0.01, 10.0), min_size=2, max_size=30),
+)
+@settings(max_examples=40, deadline=None)
+def test_predictor_always_finite_positive(durations):
+    p = CheckpointDurationPredictor()
+    for i, d in enumerate(durations):
+        p.observe(seconds=d, nbytes=1e5 * (i + 1))
+    pred = p.predict(1e5 * len(durations))
+    assert math.isfinite(pred) and pred >= 0.0

@@ -1,0 +1,89 @@
+"""Clock semantics: accumulation, reset, extensibility, multi-value, counters."""
+
+import time
+
+import pytest
+
+from repro.core import clocks as C
+
+
+def test_walltime_accumulates_across_windows():
+    clk = C.WalltimeClock()
+    clk.start(); time.sleep(0.01); clk.stop()
+    first = clk.read().scalar()
+    assert first >= 0.009
+    clk.start(); time.sleep(0.01); clk.stop()
+    assert clk.read().scalar() >= first + 0.009
+
+
+def test_reset_zeroes_accumulation():
+    clk = C.WalltimeClock()
+    clk.start(); time.sleep(0.005); clk.stop()
+    clk.reset()
+    assert clk.read().scalar() == 0.0
+
+
+def test_running_read_reports_partial_window():
+    clk = C.WalltimeClock()
+    clk.start()
+    time.sleep(0.01)
+    partial = clk.read().scalar()
+    assert partial >= 0.009
+    clk.stop()
+
+
+def test_get_set_roundtrip():
+    clk = C.WalltimeClock()
+    clk.set({"walltime": 42.0})
+    assert clk.get()["walltime"] == pytest.approx(42.0)
+
+
+def test_double_start_stop_idempotent():
+    clk = C.CPUTimeClock()
+    clk.start(); clk.start()
+    clk.stop(); clk.stop()
+    assert clk.read().scalar() >= 0.0
+
+
+def test_callback_clock_extension():
+    """The paper's extension mechanism: new clocks via callbacks, no core changes."""
+    events = {"n": 0.0}
+    clk = C.CallbackClock("events", lambda: {"events": events["n"]}, {"events": "count"})
+    clk.start()
+    events["n"] += 5
+    clk.stop()
+    assert clk.read()["events"] == 5.0
+
+
+def test_counter_clock_windows_capture_channel_deltas():
+    C.register_clock("io_test", lambda: C.CounterClock("io_test", {"test_bytes": "bytes"}))
+    clk = C.make_clock("io_test")
+    C.increment_counter("test_bytes", 100)
+    clk.start()
+    C.increment_counter("test_bytes", 250)
+    clk.stop()
+    C.increment_counter("test_bytes", 999)  # outside the window
+    assert clk.read()["test_bytes"] == 250.0
+
+
+def test_registry_register_unregister():
+    C.register_clock("custom", C.WalltimeClock)
+    assert "custom" in C.clock_names()
+    C.unregister_clock("custom")
+    assert "custom" not in C.clock_names()
+
+
+def test_make_all_clocks_has_defaults():
+    clocks = C.make_all_clocks()
+    for expected in ("walltime", "cputime", "perfcounter", "xla_device", "io"):
+        assert expected in clocks
+
+
+def test_multivalue_clock():
+    clk = C.CounterClock("xla", {"xla_flops": "flop", "xla_bytes": "bytes"})
+    clk.start()
+    C.increment_counter("xla_flops", 1e9)
+    C.increment_counter("xla_bytes", 2e6)
+    clk.stop()
+    values = clk.read()
+    assert values["xla_flops"] == 1e9 and values["xla_bytes"] == 2e6

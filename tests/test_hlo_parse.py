@@ -1,0 +1,63 @@
+"""HLO collective-bytes parser: synthetic module fixtures + dtype widths."""
+
+from repro.launch.hlo import collective_bytes, op_census, parse_sizes
+
+HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+%fused_computation (param_0: bf16[128,256]) -> bf16[128,256] {
+  %param_0 = bf16[128,256]{1,0} parameter(0)
+  ROOT %add.1 = bf16[128,256]{1,0} add(%param_0, %param_0)
+}
+
+ENTRY %main (p0: bf16[128,256], p1: f32[64]) -> bf16[128,256] {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %p1 = f32[64]{0} parameter(1)
+  %ag = bf16[256,256]{1,0} all-gather(%p0), replica_groups={{0,1}}, dimensions={0}
+  %ar = f32[64]{0} all-reduce(%p1), replica_groups={}, to_apply=%sum
+  %rs = bf16[64,256]{1,0} reduce-scatter(%p0), replica_groups={{0,1}}, dimensions={0}
+  %cp = bf16[128,256]{1,0} collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+  %ars = f32[64]{0} all-reduce-start(%p1), replica_groups={}
+  %ard = f32[64]{0} all-reduce-done(%ars)
+  %a2a = bf16[128,256]{1,0} all-to-all(%p0), replica_groups={{0,1}}
+  ROOT %fusion = bf16[128,256]{1,0} fusion(%cp), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+def test_parse_sizes_dtype_widths():
+    sizes = parse_sizes(HLO)
+    assert sizes["p0"] == 128 * 256 * 2
+    assert sizes["p1"] == 64 * 4
+    assert sizes["ag"] == 256 * 256 * 2
+
+
+def test_collective_operand_bytes():
+    coll = collective_bytes(HLO)
+    p0 = 128 * 256 * 2
+    p1 = 64 * 4
+    assert coll["all-gather"] == p0
+    # all-reduce: one sync (%ar) + one async start (%ars); -done not counted
+    assert coll["all-reduce"] == 2 * p1
+    assert coll["reduce-scatter"] == p0
+    assert coll["collective-permute"] == p0
+    assert coll["all-to-all"] == p0
+
+
+def test_census_counts():
+    census = op_census(HLO)
+    assert census["fusion"] == 1
+    assert census["all-gather"] == 1
+
+
+def test_tuple_shaped_collective():
+    hlo = """
+ENTRY %e (a: f32[8], b: bf16[16]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  %b = bf16[16]{0} parameter(1)
+  %t = (f32[8]{0}, bf16[16]{0}) all-reduce(%a, %b), replica_groups={}
+  ROOT %g = f32[8]{0} get-tuple-element(%t), index=0
+}
+"""
+    coll = collective_bytes(hlo)
+    assert coll["all-reduce"] == 8 * 4 + 16 * 2

@@ -1,0 +1,129 @@
+"""WKV-6 / RG-LRU / RMSNorm kernels vs oracles: sweeps + hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.rglru.kernel import rglru_pallas
+from repro.kernels.rglru.ops import linear_recurrence, linear_recurrence_assoc
+from repro.kernels.rglru.ref import linear_recurrence_ref
+from repro.kernels.rmsnorm.ops import rms_norm_fused
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+from repro.kernels.rwkv6.ops import wkv6, wkv6_chunked
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+def _wkv_inputs(key, b, s, h, dk, dv, dtype=jnp.float32, with_state=True):
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (b, s, h, dk), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, h, dk), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, h, dv), jnp.float32).astype(dtype)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, s, h, dk)))).astype(jnp.float32)
+    u = jax.random.normal(ks[4], (h, dk), jnp.float32)
+    st_ = jax.random.normal(ks[5], (b, h, dk, dv), jnp.float32) if with_state else None
+    return r, k, v, w, u, st_
+
+
+WKV_SWEEP = [
+    (1, 64, 1, 8, 8, jnp.float32),
+    (2, 96, 3, 16, 16, jnp.float32),
+    (2, 128, 2, 8, 16, jnp.float32),    # dk != dv
+    (1, 64, 2, 16, 16, jnp.bfloat16),   # low precision activations
+]
+
+
+@pytest.mark.parametrize("b,s,h,dk,dv,dtype", WKV_SWEEP)
+def test_wkv6_chunked_matches_ref(b, s, h, dk, dv, dtype):
+    r, k, v, w, u, st_ = _wkv_inputs(jax.random.PRNGKey(0), b, s, h, dk, dv, dtype)
+    y0, s0 = wkv6_ref(r, k, v, w, u, st_)
+    y1, s1 = wkv6_chunked(r, k, v, w, u, st_, chunk=32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y0, np.float32), np.asarray(y1, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("b,s,h,dk,dv,dtype", WKV_SWEEP[:3])
+def test_wkv6_pallas_matches_ref(b, s, h, dk, dv, dtype):
+    r, k, v, w, u, st_ = _wkv_inputs(jax.random.PRNGKey(1), b, s, h, dk, dv, dtype)
+    y0, s0 = wkv6_ref(r, k, v, w, u, st_)
+    y1, s1 = wkv6_pallas(r, k, v, w, u, st_, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y0, np.float32), np.asarray(y1, np.float32), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_dispatcher():
+    r, k, v, w, u, st_ = _wkv_inputs(jax.random.PRNGKey(2), 1, 64, 2, 8, 8)
+    for impl in ("ref", "chunked", "pallas"):
+        y, s = wkv6(r, k, v, w, u, st_, impl=impl)
+        assert y.shape == (1, 64, 2, 8)
+    with pytest.raises(ValueError):
+        wkv6(r, k, v, w, u, st_, impl="bogus")
+
+
+@given(
+    s=st.integers(2, 40),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_rglru_assoc_equals_ref_property(s, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, s, d)))
+    b = jax.random.normal(ks[1], (2, s, d))
+    h0 = jax.random.normal(ks[2], (2, d))
+    y0, f0 = linear_recurrence_ref(a, b, h0)
+    y1, f1 = linear_recurrence_assoc(a, b, h0)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,d,chunk,d_block", [
+    (1, 64, 16, 32, 16),
+    (2, 128, 64, 64, 32),
+    (2, 96, 32, 48, 32),
+])
+def test_rglru_pallas_matches_ref(b, s, d, chunk, d_block):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, d)))
+    bb = jax.random.normal(ks[1], (b, s, d))
+    h0 = jax.random.normal(ks[2], (b, d))
+    y0, f0 = linear_recurrence_ref(a, bb, h0)
+    y1, f1 = rglru_pallas(a, bb, h0, chunk=chunk, d_block=d_block, interpret=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_dispatcher_no_initial_state():
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(0), (1, 16, 4)))
+    b = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 4))
+    for impl in ("ref", "assoc", "pallas"):
+        y, f = linear_recurrence(a, b, None, impl=impl)
+        assert y.shape == (1, 16, 4) and f.shape == (1, 4)
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((4, 96, 64), jnp.float32),
+    ((2, 128, 128), jnp.bfloat16),
+    ((1, 33, 48), jnp.float32),      # non-tiling rows
+])
+def test_rmsnorm_fused_matches_ref(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = jax.random.normal(ks[0], shape, jnp.float32).astype(dtype)
+    w = (1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],), jnp.float32)).astype(dtype)
+    y = rms_norm_fused(x, w, interpret=True)
+    ref = rms_norm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_rmsnorm_fused_gradients():
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = jax.random.normal(ks[0], (8, 64), jnp.float32)
+    w = 1.0 + 0.1 * jax.random.normal(ks[1], (64,), jnp.float32)
+    g1 = jax.grad(lambda x, w: jnp.sum(rms_norm_fused(x, w, interpret=True) ** 2), argnums=(0, 1))(x, w)
+    g2 = jax.grad(lambda x, w: jnp.sum(rms_norm_ref(x, w) ** 2), argnums=(0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3)

@@ -1,0 +1,104 @@
+"""Reports (Fig 2), steerable parameters (Sec 5), HTTP monitor (Sec 3.1)."""
+
+import json
+import os
+import time
+import urllib.request
+
+import pytest
+
+from repro.core.params import ParamError, param_registry
+from repro.core.report import TimerLogger, bin_distribution, format_report, report_rows
+from repro.core.timers import timer_db
+from repro.monitor import MonitorServer, StatusWriter
+
+
+def _populate_db():
+    db = timer_db()
+    for name in ("EVOL/trainer::step", "CHECKPOINT/adaptcheck::write", "simulation/total"):
+        h = db.create(name)
+        db.start(h); time.sleep(0.002); db.stop(h)
+    return db
+
+
+def test_format_report_contains_rows_and_total():
+    db = _populate_db()
+    text = format_report(db)
+    assert "EVOL/trainer::step" in text
+    assert "Total time for simulation" in text
+
+
+def test_report_rows_filter_prefix():
+    db = _populate_db()
+    rows = report_rows(db, prefix="EVOL/")
+    assert len(rows) == 1 and rows[0]["timer"] == "EVOL/trainer::step"
+
+
+def test_bin_distribution():
+    db = timer_db()
+    for b in ("EVOL", "CHECKPOINT"):
+        h = db.create(f"bin/{b}")
+        db.start(h); time.sleep(0.002); db.stop(h)
+    dist = bin_distribution(db)
+    assert set(dist) == {"EVOL", "CHECKPOINT"} and all(v > 0 for v in dist.values())
+
+
+def test_timer_logger_roundtrip(tmp_path):
+    db = _populate_db()
+    logger = TimerLogger(str(tmp_path / "timers.jsonl"), db)
+    logger.log(1)
+    logger.log(2, extra={"loss": 1.5})
+    records = logger.read_all()
+    assert len(records) == 2
+    assert records[1]["extra"]["loss"] == 1.5
+    assert "EVOL/trainer::step" in records[0]["timers"]
+
+
+def test_param_registry_steering():
+    reg = param_registry()
+    reg.declare("ckpt.max_fraction", 0.05, steerable=True,
+                validator=lambda v: 0 < v <= 1)
+    reg.declare("model.layers", 4, steerable=False)
+    reg.freeze()
+    reg.set("ckpt.max_fraction", 0.10, iteration=7)
+    assert reg.get("ckpt.max_fraction") == 0.10
+    with pytest.raises(ParamError):
+        reg.set("model.layers", 8)  # frozen non-steerable
+    with pytest.raises(ParamError):
+        reg.set("ckpt.max_fraction", 2.0)  # fails validation
+    desc = {d["name"]: d for d in reg.describe()}
+    assert desc["ckpt.max_fraction"]["n_changes"] == 1
+
+
+def test_status_writer_atomic(tmp_path):
+    db = _populate_db()
+    w = StatusWriter(str(tmp_path / "status.json"), db)
+    w.write({"iteration": 3})
+    payload = json.load(open(tmp_path / "status.json"))
+    assert payload["status"]["iteration"] == 3
+    assert "simulation/total" in payload["timers"]
+
+
+def test_monitor_http_endpoints():
+    db = _populate_db()
+    reg = param_registry()
+    reg.declare("serving.max_batch", 8, steerable=True)
+    srv = MonitorServer(0, db, reg, status_fn=lambda: {"iteration": 5})
+    port = srv.start()
+    try:
+        base = f"http://127.0.0.1:{port}"
+        timers = json.loads(urllib.request.urlopen(base + "/timers").read())
+        assert "simulation/total" in timers
+        status = json.loads(urllib.request.urlopen(base + "/status").read())
+        assert status["iteration"] == 5
+        html = urllib.request.urlopen(base + "/").read().decode()
+        assert "Timer report" in html
+        # steering via POST (paper Sec. 5)
+        req = urllib.request.Request(
+            base + "/params", data=json.dumps({"name": "serving.max_batch", "value": 4}).encode(),
+            method="POST",
+        )
+        resp = json.loads(urllib.request.urlopen(req).read())
+        assert resp["ok"] and reg.get("serving.max_batch") == 4
+    finally:
+        srv.stop()

@@ -1,0 +1,87 @@
+"""Scheduler: bins, auto-timers, ordering constraints, conditional routines."""
+
+import pytest
+
+from repro.core.schedule import BINS, RunState, ScheduleError, Scheduler
+from repro.core.timers import timer_db
+
+
+def test_lifecycle_order_and_auto_timers():
+    sch = Scheduler()
+    calls = []
+    for bin_name in BINS:
+        sch.schedule(
+            (lambda b: lambda s: calls.append((b, s.iteration)))(bin_name),
+            bin=bin_name, thorn="t", name=f"r_{bin_name}",
+        )
+    sch.run(RunState(max_iterations=2))
+    assert calls[0] == ("STARTUP", 0) and calls[1] == ("INITIAL", 0)
+    assert calls[-1] == ("SHUTDOWN", 2)
+    loop_calls = [c for c in calls if c[0] == "EVOL"]
+    assert loop_calls == [("EVOL", 0), ("EVOL", 1)]
+    db = sch.db
+    # every routine got a timer automatically
+    for bin_name in BINS:
+        assert db.exists(f"{bin_name}/t::r_{bin_name}")
+        assert db.exists(f"bin/{bin_name}")
+    assert db.get("simulation/total").count == 1
+
+
+def test_every_n_and_when_conditions():
+    sch = Scheduler()
+    ran = {"every": 0, "when": 0}
+    sch.schedule(lambda s: ran.__setitem__("every", ran["every"] + 1),
+                 bin="ANALYSIS", thorn="t", every=3)
+    sch.schedule(lambda s: ran.__setitem__("when", ran["when"] + 1),
+                 bin="ANALYSIS", thorn="t", name="w",
+                 when=lambda s: s.iteration >= 4)
+    sch.run(RunState(max_iterations=6))
+    assert ran["every"] == 2  # iterations 0, 3
+    assert ran["when"] == 2   # iterations 4, 5
+
+
+def test_before_after_ordering():
+    sch = Scheduler()
+    order = []
+    sch.schedule(lambda s: order.append("c"), bin="EVOL", thorn="t", name="c",
+                 after=["a"])
+    sch.schedule(lambda s: order.append("a"), bin="EVOL", thorn="t", name="a")
+    sch.schedule(lambda s: order.append("b"), bin="EVOL", thorn="t", name="b",
+                 before=["a"])
+    sch.run(RunState(max_iterations=1))
+    assert order.index("b") < order.index("a") < order.index("c")
+
+
+def test_cyclic_constraints_raise():
+    sch = Scheduler()
+    sch.schedule(lambda s: None, bin="EVOL", thorn="t", name="a", before=["b"])
+    sch.schedule(lambda s: None, bin="EVOL", thorn="t", name="b", before=["a"])
+    with pytest.raises(ScheduleError):
+        sch.run(RunState(max_iterations=1))
+
+
+def test_unknown_bin_raises():
+    sch = Scheduler()
+    with pytest.raises(ScheduleError):
+        sch.schedule(lambda s: None, bin="NOPE", thorn="t")
+
+
+def test_should_terminate_stops_loop():
+    sch = Scheduler()
+
+    def stopper(s):
+        if s.iteration == 2:
+            s.should_terminate = True
+
+    evols = []
+    sch.schedule(stopper, bin="PRESTEP", thorn="t")
+    sch.schedule(lambda s: evols.append(s.iteration), bin="EVOL", thorn="t")
+    sch.run(RunState(max_iterations=100))
+    assert evols == [0, 1]
+
+
+def test_routine_timer_accumulates_per_iteration():
+    sch = Scheduler()
+    sch.schedule(lambda s: None, bin="EVOL", thorn="t", name="step")
+    sch.run(RunState(max_iterations=5))
+    assert sch.db.get("EVOL/t::step").count == 5

@@ -1,0 +1,82 @@
+"""Logical-axis sharding rules: divisibility drops, axis dedup, tree mapping."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    FSDP_RULES,
+    Axes,
+    ShardingRules,
+    spec_for,
+    tree_shardings,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1-device mesh with named axes of size 1 won't exercise divisibility;
+    # build an abstract mesh via mesh_utils over 1 device but declared axes.
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_basic(mesh):
+    spec = spec_for(("embed", "heads"), (64, 32), mesh, DEFAULT_RULES)
+    assert spec == P(None, "model")
+
+
+def test_axis_absent_from_mesh_dropped(mesh):
+    rules = DEFAULT_RULES  # batch -> ("pod", "data"); mesh has no "pod"
+    spec = spec_for(("batch", "seq"), (8, 16), mesh, rules)
+    assert spec == P("data")
+
+
+def test_divisibility_drop():
+    big = jax.make_mesh((1, 1), ("data", "model"))
+    # fake a mesh with model=16 semantics by using rules vs a dim of 2 — the
+    # 1-sized axes always divide; exercise the logic with a custom rule table
+    rules = ShardingRules({"kv_heads": "model"})
+    spec = spec_for(("kv_heads",), (2,), big, rules)
+    assert spec == P("model")  # size-1 axis divides everything
+
+
+def test_axis_used_once_per_tensor(mesh):
+    rules = ShardingRules({"a": "model", "b": "model"})
+    spec = spec_for(("a", "b"), (4, 4), mesh, rules)
+    assert spec == P("model")  # second use dropped (trailing None trimmed)
+
+
+def test_multi_axis_dim(mesh):
+    rules = ShardingRules({"batch": ("data", "model")})
+    spec = spec_for(("batch", None), (4, 4), mesh, rules)
+    assert spec == P(("data", "model"))
+
+
+def test_fsdp_rules_shard_embed(mesh):
+    spec = spec_for(("embed", "ffn"), (64, 128), mesh, FSDP_RULES)
+    assert spec == P("data", "model")
+
+
+def test_tree_shardings_with_axes_leaves(mesh):
+    axes = {"w": Axes(("embed", "heads")), "scalar": Axes(()), "empty": ()}
+    shapes = {
+        "w": jax.ShapeDtypeStruct((8, 4), np.float32),
+        "scalar": jax.ShapeDtypeStruct((), np.float32),
+        "empty": (),
+    }
+    shardings = tree_shardings(axes, shapes, mesh, DEFAULT_RULES)
+    assert shardings["w"].spec == P(None, "model")
+    assert shardings["scalar"].spec == P()
+
+
+def test_mismatched_rank_raises(mesh):
+    with pytest.raises(ValueError):
+        spec_for(("embed",), (4, 4), mesh, DEFAULT_RULES)
+
+
+def test_rules_overrides():
+    r = DEFAULT_RULES.with_overrides(seq="data")
+    assert r.get("seq") == ("data",)
+    assert DEFAULT_RULES.get("seq") == ()  # original untouched

@@ -1,0 +1,125 @@
+"""End-to-end system tests: the scheduled training loop with adaptive
+checkpointing, restart determinism (fault tolerance), serving engine, and
+straggler detection."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.params import reset_param_registry
+from repro.core.timers import reset_timer_db
+from repro.launch.train import TrainSettings, run_training
+from repro.serving import Request, ServingEngine
+
+
+def _settings(tmp_path, steps, **kw):
+    base = dict(
+        arch="llama3.2-1b", smoke=True, steps=steps, global_batch=2, seq_len=32,
+        ckpt_dir=str(tmp_path / "ckpt"), ckpt_mode="adaptive",
+        ckpt_max_fraction=0.5, ckpt_max_interval_s=1e9, report_every=0,
+    )
+    base.update(kw)
+    return TrainSettings(**base)
+
+
+def _fresh():
+    reset_timer_db()
+    reset_param_registry()
+
+
+def test_training_loop_runs_and_profiles(tmp_path):
+    summary = run_training(_settings(tmp_path, steps=6))
+    assert summary["iterations"] == 6
+    assert np.isfinite(summary["final_metrics"]["loss"])
+    bins = summary["bin_seconds"]
+    assert bins["EVOL"] > 0 and bins["STARTUP"] > 0
+    assert summary["checkpoint"]["n_checkpoints"] >= 1
+
+
+def test_loss_decreases_on_learnable_task(tmp_path):
+    _fresh()
+    summary = run_training(
+        _settings(tmp_path, steps=60, ckpt_mode="off", peak_lr=1e-2, seq_len=64,
+                  global_batch=4, data_mode="skewed")
+    )
+    # uniform init -> ce = ln(256) = 5.55; the Zipf unigram is learnable fast
+    assert summary["final_metrics"]["ce"] < 4.9
+
+
+def test_restart_determinism(tmp_path):
+    """Fault tolerance: kill after N steps, restore, and land on the *same*
+    final loss as an uninterrupted run (bitwise-deterministic substrate)."""
+    # uninterrupted 8 steps
+    _fresh()
+    full = run_training(_settings(tmp_path / "a", steps=8, ckpt_max_fraction=1.0,
+                                  lr_total_steps=8))
+    # interrupted: 4 steps, then resume to 8 from the checkpoint (same LR horizon)
+    _fresh()
+    run_training(_settings(tmp_path / "b", steps=4, ckpt_max_fraction=1.0,
+                           lr_total_steps=8))
+    _fresh()
+    resumed = run_training(_settings(tmp_path / "b", steps=8, ckpt_max_fraction=1.0,
+                                     lr_total_steps=8))
+    assert resumed["iterations"] == 8
+    np.testing.assert_allclose(
+        resumed["final_metrics"]["loss"], full["final_metrics"]["loss"], rtol=1e-5
+    )
+
+
+def test_adaptive_bound_respected_with_slow_ckpt(tmp_path):
+    """With an artificially slow (synchronous) writer, AdaptCheck keeps the
+    checkpoint fraction near the bound while fixed-interval blows through it."""
+    _fresh()
+    adaptive = run_training(_settings(
+        tmp_path / "ad", steps=12, ckpt_mode="adaptive", ckpt_max_fraction=0.10,
+        ckpt_synchronous=True, ckpt_delay_s=0.05,
+    ))
+    _fresh()
+    fixed = run_training(_settings(
+        tmp_path / "fx", steps=12, ckpt_mode="fixed", ckpt_every=1,
+        ckpt_synchronous=True, ckpt_delay_s=0.05,
+    ))
+    # weak bound on a short run: early checkpoints may overshoot, but the
+    # controller must suppress and end up well below the every-step baseline
+    assert adaptive["checkpoint"]["n_suppressed"] > 0
+    assert adaptive["checkpoint"]["n_checkpoints"] < fixed["checkpoint"]["n_checkpoints"]
+    # proper bound adherence over long horizons is validated in
+    # benchmarks/bench_adaptive_checkpoint.py (Fig. 3 reproduction)
+
+
+def test_serving_engine_completes_and_steers():
+    _fresh()
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_batch=4, max_seq=64,
+                           target_decode_ms=1e-6)  # impossible target -> steer down
+    rng = np.random.default_rng(0)
+    for rid in range(8):
+        engine.submit(Request(rid, list(rng.integers(0, cfg.vocab_size, 16)), max_new_tokens=4))
+    done = engine.run()
+    assert len(done) == 8
+    assert all(len(r.output) == 4 for r in done)
+    assert engine.max_batch < 4  # steered down due to impossible latency target
+    stats = engine.stats()
+    assert stats["completed"] == 8.0
+
+
+def test_straggler_detection():
+    from repro.dist.stragglers import StragglerDetector
+
+    hits = []
+    det = StragglerDetector(n_hosts=4, window=8, threshold=1.5,
+                            on_straggler=lambda r: hits.append(r))
+    for step in range(8):
+        for host in range(4):
+            det.observe(host, 1.0 if host != 2 else 3.0)
+    report = det.check(step=8)
+    assert report.stragglers == [2]
+    assert hits and hits[0].stragglers == [2]

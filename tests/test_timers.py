@@ -1,0 +1,140 @@
+"""Timer + timer-database semantics (paper Sec. 2, Table 3)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import clocks as C
+from repro.core.timers import TimerError, timer_db
+
+
+def test_create_start_stop_read():
+    db = timer_db()
+    handle = db.create("Poisson: Evaluate residual")
+    assert handle >= 0
+    db.start(handle)
+    time.sleep(0.005)
+    db.stop(handle)
+    values = db.read(handle)
+    assert values["walltime"].scalar() >= 0.004
+    assert db.get(handle).count == 1
+
+
+def test_create_is_idempotent_by_name():
+    db = timer_db()
+    h1 = db.create("x")
+    h2 = db.create("x")
+    assert h1 == h2
+    with pytest.raises(TimerError):
+        db.create("x", exist_ok=False)
+
+
+def test_lookup_by_name_and_handle():
+    db = timer_db()
+    h = db.create("a/b")
+    assert db.get("a/b") is db.get(h)
+    with pytest.raises(TimerError):
+        db.get("missing")
+
+
+def test_timer_encapsulates_all_registered_clocks():
+    db = timer_db()
+    h = db.create("t")
+    timer = db.get(h)
+    assert set(timer.clocks) == set(C.clock_names())
+
+
+def test_clock_registered_after_timer_creation_appears():
+    """Extensibility: clocks registered mid-run show up on existing timers."""
+    db = timer_db()
+    h = db.create("t")
+    C.register_clock("late", lambda: C.CounterClock("late", {"late_events": "count"}))
+    db.start(h)
+    C.increment_counter("late_events", 3)
+    db.stop(h)
+    assert db.get(h).read_flat()["late_events"] == 3.0
+
+
+def test_double_start_raises():
+    db = timer_db()
+    h = db.create("t")
+    db.start(h)
+    with pytest.raises(TimerError):
+        db.start(h)
+    db.stop(h)
+    with pytest.raises(TimerError):
+        db.stop(h)
+
+
+def test_nesting_records_parent():
+    db = timer_db()
+    outer, inner = db.create("outer"), db.create("inner")
+    db.start(outer)
+    db.start(inner)
+    assert db.get(inner).parent_name == "outer"
+    db.stop(inner)
+    db.stop(outer)
+    assert db.get(outer).parent_name is None
+
+
+def test_overlapping_windows_allowed():
+    """Paper: several timers can run at the same time, overlapping."""
+    db = timer_db()
+    a, b = db.create("a"), db.create("b")
+    db.start(a); db.start(b)
+    db.stop(a); db.stop(b)  # out-of-order stop is fine
+    assert db.get(a).count == db.get(b).count == 1
+
+
+def test_snapshot_query():
+    db = timer_db()
+    h = db.create("routine")
+    db.start(h); db.stop(h)
+    snap = db.snapshot()
+    assert "routine" in snap and snap["routine"]["count"] == 1.0
+
+
+def test_timing_context_and_decorator():
+    from repro.core.timers import timed
+
+    db = timer_db()
+    with db.timing("ctx"):
+        time.sleep(0.002)
+    assert db.get("ctx").seconds() >= 0.001
+
+    @timed("deco")
+    def fn():
+        time.sleep(0.002)
+
+    fn()
+    assert db.get("deco").seconds() >= 0.001
+
+
+def test_thread_safety_of_concurrent_timers():
+    db = timer_db()
+    errors = []
+
+    def worker(i):
+        try:
+            for _ in range(50):
+                with db.timing(f"thread-{i}"):
+                    pass
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert all(db.get(f"thread-{i}").count == 50 for i in range(4))
+
+
+def test_reset_all():
+    db = timer_db()
+    h = db.create("t")
+    db.start(h); db.stop(h)
+    db.reset_all()
+    assert db.get(h).count == 0 and db.get(h).seconds() == 0.0
