@@ -8,23 +8,29 @@ interface" discussion cares about.
 
 from __future__ import annotations
 
+import argparse
+import json
+import platform
+import sys
 import time
 from typing import List, Tuple
 
-from repro.core import clocks as C
-from repro.core.schedule import RunState, Scheduler
-from repro.core.timers import reset_timer_db
 
-
-def _time_op(fn, n: int = 20000) -> float:
+def _time_op(fn, n: int = 20000, scale: float = 1.0) -> float:
     """us per call."""
+    n = max(int(n * scale), 50)
     t0 = time.perf_counter()
     for _ in range(n):
         fn()
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run() -> List[Tuple[str, float, str]]:
+def run(scale: float = 1.0) -> List[Tuple[str, float, str]]:
+    """``scale`` shrinks/grows every iteration count (CI smoke uses ~0.05)."""
+    from repro.core import clocks as C
+    from repro.core.schedule import RunState, Scheduler
+    from repro.core.timers import reset_timer_db
+
     rows: List[Tuple[str, float, str]] = []
     for name in ("walltime", "cputime", "perfcounter"):
         clk = C.make_clock(name)
@@ -32,12 +38,12 @@ def run() -> List[Tuple[str, float, str]]:
         def cycle(clk=clk):
             clk.start(); clk.stop()
 
-        rows.append((f"clock_start_stop/{name}", _time_op(cycle), "us_per_window"))
-        rows.append((f"clock_read/{name}", _time_op(clk.read), "us_per_read"))
+        rows.append((f"clock_start_stop/{name}", _time_op(cycle, scale=scale), "us_per_window"))
+        rows.append((f"clock_read/{name}", _time_op(clk.read, scale=scale), "us_per_read"))
 
     counter = C.CounterClock("io", {"io_bytes": "bytes", "io_ops": "count"})
-    rows.append(("clock_start_stop/counter2ch", _time_op(lambda: (counter.start(), counter.stop())), "us_per_window"))
-    rows.append(("counter_increment", _time_op(lambda: C.increment_counter("bench", 1.0)), "us_per_call"))
+    rows.append(("clock_start_stop/counter2ch", _time_op(lambda: (counter.start(), counter.stop()), scale=scale), "us_per_window"))
+    rows.append(("counter_increment", _time_op(lambda: C.increment_counter("bench", 1.0), scale=scale), "us_per_call"))
 
     db = reset_timer_db()
     handle = db.create("bench")
@@ -46,20 +52,55 @@ def run() -> List[Tuple[str, float, str]]:
         db.start(handle)
         db.stop(handle)
 
-    rows.append(("timer_start_stop_all_clocks", _time_op(timer_cycle, 5000), "us_per_window"))
+    rows.append(("timer_start_stop_all_clocks", _time_op(timer_cycle, 5000, scale), "us_per_window"))
     i = [0]
 
     def creator():
         db.create(f"t{i[0]}")
         i[0] += 1
 
-    rows.append(("timer_create", _time_op(creator, 2000), "us_per_create"))
+    rows.append(("timer_create", _time_op(creator, 2000, scale), "us_per_create"))
 
     sch = Scheduler(reset_timer_db())
     sch.schedule(lambda s: None, bin="EVOL", thorn="bench", name="noop")
     state = RunState(max_iterations=0)
     rows.append(
-        ("scheduler_bin_dispatch", _time_op(lambda: sch.run_bin("EVOL", state), 2000),
+        ("scheduler_bin_dispatch", _time_op(lambda: sch.run_bin("EVOL", state), 2000, scale),
          "us_per_bin")
     )
     return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Timing-primitive overheads (paper Tables 1-2 analogue)."
+    )
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="iteration-count multiplier (CI smoke: 0.05)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (BENCH_*.json perf trajectory)")
+    args = ap.parse_args(argv)
+    rows = run(scale=args.scale)
+    print("name,us_per_call,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.3f},{derived}")
+    if args.json:
+        payload = {
+            "bench": "clock_overhead",
+            "scale": args.scale,
+            "unix_time": time.time(),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "rows": [
+                {"name": name, "us_per_call": value, "derived": derived}
+                for name, value, derived in rows
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,7 +5,7 @@ from __future__ import annotations
 import time
 from typing import List, Tuple
 
-from repro.core.report import format_report, report_rows
+from repro.core.report import format_report
 from repro.core.timers import reset_timer_db
 
 

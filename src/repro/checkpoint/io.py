@@ -161,7 +161,7 @@ def load_checkpoint(
                     raise CheckpointCorrupt(f"{fpath}: CRC mismatch")
         arr = np.load(fpath)
         if entry.get("stored_dtype", entry["dtype"]) != entry["dtype"]:
-            import ml_dtypes  # jax dependency; registers bf16/fp8 dtypes
+            import ml_dtypes  # noqa: F401 - registers bf16/fp8 numpy dtypes
 
             arr = arr.view(np.dtype(entry["dtype"]))
         leaves.append(arr)

@@ -24,7 +24,7 @@ from .adaptive import (
     CheckpointDurationPredictor,
     Decision,
 )
-from .report import TimerLogger, bin_distribution, format_report, report_rows
+from .report import TimerLogger, bin_distribution, format_report, report_rows, straggler_rows
 from .params import Param, ParamRegistry, param_registry, reset_param_registry
 
 __all__ = [
@@ -57,6 +57,7 @@ __all__ = [
     "bin_distribution",
     "format_report",
     "report_rows",
+    "straggler_rows",
     "Param",
     "ParamRegistry",
     "param_registry",

@@ -30,7 +30,7 @@ Beyond-paper (the paper's stated future work, implemented here):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 __all__ = [

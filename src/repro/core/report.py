@@ -11,12 +11,17 @@ from __future__ import annotations
 import json
 import os
 import time
-from dataclasses import dataclass
-from typing import Dict, List, Mapping, Optional, Sequence, TextIO
+from typing import Dict, List, Mapping, Optional, Sequence
 
 from .timers import TimerDB, timer_db
 
-__all__ = ["format_report", "report_rows", "TimerLogger", "bin_distribution"]
+__all__ = [
+    "format_report",
+    "report_rows",
+    "straggler_rows",
+    "TimerLogger",
+    "bin_distribution",
+]
 
 
 def report_rows(
@@ -33,6 +38,35 @@ def report_rows(
         row: Dict[str, object] = {"timer": timer.name, "count": timer.count}
         for ch in channels:
             row[ch] = flat.get(ch, 0.0)
+        rows.append(row)
+    return rows
+
+
+def straggler_rows(
+    detector,
+    channels: Sequence[str] = ("walltime", "cputime"),
+    prefix: str = "DIST",
+) -> List[Dict[str, object]]:
+    """Fleet-health rows from a ``repro.dist.stragglers.StragglerDetector``.
+
+    Shaped exactly like :func:`report_rows` entries (one row per reporting
+    host, walltime = that host's total step seconds) for JSON summaries and
+    monitor endpoints; hosts flagged by the detector's most recent check are
+    tagged ``[STRAGGLER]``.  The Fig.-2 table itself needs no merging — the
+    detector's ``check()`` publishes ``DIST/host{h}::step`` timers straight
+    into the timer DB, which :func:`format_report` renders like any other
+    timer.  Duck-typed (needs ``host_stats()``/``reports``) to keep ``core``
+    free of a ``dist`` import.
+    """
+    latest = detector.reports[-1] if getattr(detector, "reports", None) else None
+    rows: List[Dict[str, object]] = []
+    for host, (count, total) in sorted(detector.host_stats().items()):
+        name = f"{prefix}/host{host}::step"
+        if latest is not None and host in latest.stragglers:
+            name += " [STRAGGLER]"
+        row: Dict[str, object] = {"timer": name, "count": count}
+        for ch in channels:
+            row[ch] = total if ch == "walltime" else 0.0
         rows.append(row)
     return rows
 
@@ -57,7 +91,7 @@ def format_report(
     for row in sorted(rows, key=lambda r: r["timer"]):
         line = str(row["timer"]).ljust(name_w) + str(row["count"]).rjust(col_w)
         for ch in channels:
-            line += " " + f"{row[ch]:.8f}"[:col_w].rjust(col_w)
+            line += " " + f"{float(row.get(ch, 0.0)):.8f}"[:col_w].rjust(col_w)
         lines.append(line)
     total = db.get("simulation/total").read_flat() if db.exists("simulation/total") else {}
     if total:

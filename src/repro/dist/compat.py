@@ -1,0 +1,84 @@
+"""Shims over jax API drift so the repo runs on the pinned container jax as
+well as current releases.
+
+Two surfaces moved between jax 0.4.x and 0.6+:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+  and renamed ``check_rep`` -> ``check_vma``;
+* ``jax.make_mesh`` grew an ``axis_types`` keyword.
+
+Callers use :func:`shard_map` / :func:`make_mesh` from here and stay agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions (older
+    releases return a one-element list of per-program dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check: bool = False,
+) -> Callable:
+    """Version-agnostic ``shard_map``.
+
+    ``check`` maps to ``check_vma`` (new jax) / ``check_rep`` (old jax); it
+    defaults off because the manual-collective kernels here (pipeline ticks,
+    compressed all-reduce) intentionally produce unreplicated intermediates.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        try:
+            return jax.shard_map(f, check_vma=check, **kwargs)
+        except TypeError:
+            pass
+        try:
+            # intermediate API generation: jax.shard_map with the old spelling
+            return jax.shard_map(f, check_rep=check, **kwargs)
+        except TypeError:
+            return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence[Any]] = None,
+    auto_axis_types: bool = False,
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` that tolerates jax versions without ``axis_types``."""
+    kwargs: dict = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if auto_axis_types and hasattr(jax.sharding, "AxisType"):
+        try:
+            return jax.make_mesh(
+                axis_shapes,
+                axis_names,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+                **kwargs,
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

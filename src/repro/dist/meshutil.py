@@ -1,0 +1,64 @@
+"""Local mesh construction for launchers, tests, and CI.
+
+``local_mesh`` builds a device mesh from a settings-style ``mesh_shape`` over
+whatever devices this process has — one CPU in unit tests, eight forced host
+devices in the mini dry-run, real accelerators in production — with clear
+errors when the requested shape cannot be satisfied.  Production pod topologies
+live in :mod:`repro.launch.mesh`; this module is the everything-else path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from .compat import make_mesh
+
+__all__ = ["local_mesh", "default_axis_names"]
+
+_AXIS_NAMES_BY_RANK = {
+    1: ("data",),
+    2: ("data", "model"),
+    3: ("pod", "data", "model"),
+}
+
+
+def default_axis_names(rank: int) -> Tuple[str, ...]:
+    """Conventional axis names for a mesh of the given rank."""
+    if rank not in _AXIS_NAMES_BY_RANK:
+        raise ValueError(
+            f"no default axis names for a rank-{rank} mesh; pass axis_names "
+            f"explicitly (defaults exist for ranks {sorted(_AXIS_NAMES_BY_RANK)})"
+        )
+    return _AXIS_NAMES_BY_RANK[rank]
+
+
+def local_mesh(
+    mesh_shape: Sequence[int] = (1, 1),
+    axis_names: Optional[Sequence[str]] = None,
+) -> Mesh:
+    """Build a mesh of ``mesh_shape`` from this process's devices.
+
+    CPU-friendly: a ``(1, 1)`` shape on a single-CPU host yields a 1-device
+    ``("data", "model")`` mesh, so the same launcher code path runs in CI and
+    at scale.  Uses the first ``prod(mesh_shape)`` devices, so a smaller mesh
+    than the host's device count is allowed.
+    """
+    shape = tuple(int(s) for s in mesh_shape)
+    if not shape or any(s < 1 for s in shape):
+        raise ValueError(f"mesh_shape must be non-empty positive ints, got {mesh_shape!r}")
+    names = tuple(axis_names) if axis_names is not None else default_axis_names(len(shape))
+    if len(names) != len(shape):
+        raise ValueError(f"axis_names {names} does not match mesh_shape {shape}")
+    n_needed = math.prod(shape)
+    devices = jax.devices()
+    if n_needed > len(devices):
+        raise ValueError(
+            f"mesh_shape {shape} needs {n_needed} devices but only "
+            f"{len(devices)} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_needed} for CPU dry-runs"
+        )
+    return make_mesh(shape, names, devices=devices[:n_needed])

@@ -1,0 +1,113 @@
+"""GPipe-style pipeline parallelism over one mesh axis.
+
+``gpipe_forward`` places consecutive layer stages on consecutive devices along
+a mesh axis and streams microbatches through them: at tick ``t`` stage 0
+ingests microbatch ``t`` while every other stage works on the activation its
+predecessor shipped via ``ppermute`` at tick ``t-1``.  After
+``n_micro + n_stages - 1`` ticks the last stage has emitted every microbatch.
+
+This is the forward-only schedule (serving / dry-run measurement path); the
+bubble fraction is ``(n_stages - 1) / (n_micro + n_stages - 1)``, so more
+microbatches amortize the fill/drain cost exactly as in the GPipe paper.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .compat import shard_map
+
+__all__ = ["gpipe_forward"]
+
+
+def gpipe_forward(
+    layer_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    stage_params: jax.Array,
+    x: jax.Array,
+    *,
+    mesh: Mesh,
+    axis: str,
+    n_micro: int,
+) -> jax.Array:
+    """Run ``x`` through stacked stages pipelined over ``mesh`` axis ``axis``.
+
+    ``stage_params`` has a leading stage dimension (``n_stages, ...``); stage
+    ``i`` computes ``layer_fn(stage_params[i], activation)`` and must preserve
+    the activation's shape and dtype (homogeneous pipeline).  ``n_stages`` must
+    be a multiple of the mesh axis size (each device runs a contiguous group of
+    stages) and ``x.shape[0]`` a multiple of ``n_micro``.
+    """
+    n_stages = int(stage_params.shape[0])
+    axis_size = int(mesh.shape[axis])
+    if n_stages % axis_size != 0:
+        raise ValueError(
+            f"n_stages={n_stages} must be a multiple of mesh axis {axis!r} "
+            f"size {axis_size}"
+        )
+    batch = int(x.shape[0])
+    if batch % n_micro != 0:
+        raise ValueError(f"batch {batch} not divisible by n_micro={n_micro}")
+    micro_batch = batch // n_micro
+    micro_shape = (micro_batch,) + x.shape[1:]
+
+    out_abstract = jax.eval_shape(
+        layer_fn,
+        jax.ShapeDtypeStruct(stage_params.shape[1:], stage_params.dtype),
+        jax.ShapeDtypeStruct(micro_shape, x.dtype),
+    )
+    if out_abstract.shape != micro_shape or out_abstract.dtype != x.dtype:
+        raise ValueError(
+            f"layer_fn must preserve activation shape/dtype for pipelining; "
+            f"got {out_abstract.shape}/{out_abstract.dtype} from "
+            f"{micro_shape}/{x.dtype}"
+        )
+
+    shift = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    n_ticks = n_micro + axis_size - 1
+
+    def pipelined(stages_local: jax.Array, x_full: jax.Array) -> jax.Array:
+        stage_index = jax.lax.axis_index(axis)
+        micro = x_full.reshape((n_micro,) + micro_shape)
+
+        def run_local_stages(activation: jax.Array) -> jax.Array:
+            def one_stage(act, w):
+                return layer_fn(w, act), None
+
+            result, _ = jax.lax.scan(one_stage, activation, stages_local)
+            return result
+
+        def tick(t, carry):
+            inflight, outputs = carry
+            feed = jax.lax.dynamic_index_in_dim(
+                micro, jnp.clip(t, 0, n_micro - 1), keepdims=False
+            )
+            activation = jnp.where(stage_index == 0, feed, inflight)
+            produced = run_local_stages(activation)
+            # the last device commits microbatch t-(axis_size-1); earlier
+            # devices (and warm-up ticks) leave the zero buffer untouched
+            out_index = jnp.clip(t - (axis_size - 1), 0, n_micro - 1)
+            commit = jnp.logical_and(t >= axis_size - 1, stage_index == axis_size - 1)
+            current = jax.lax.dynamic_index_in_dim(outputs, out_index, keepdims=False)
+            outputs = jax.lax.dynamic_update_index_in_dim(
+                outputs, jnp.where(commit, produced, current), out_index, 0
+            )
+            inflight = jax.lax.ppermute(produced, axis, shift)
+            return inflight, outputs
+
+        inflight0 = jnp.zeros(micro_shape, x.dtype)
+        outputs0 = jnp.zeros((n_micro,) + micro_shape, x.dtype)
+        _, outputs = jax.lax.fori_loop(0, n_ticks, tick, (inflight0, outputs0))
+        # only the last device holds non-zero outputs; psum replicates them
+        outputs = jax.lax.psum(outputs, axis)
+        return outputs.reshape((batch,) + x.shape[1:])
+
+    # P(axis) on the stage dimension leaves each device a contiguous
+    # (n_stages // axis_size, ...) block of consecutive stages
+    fn = shard_map(
+        pipelined, mesh=mesh, in_specs=(P(axis), P()), out_specs=P(), check=False
+    )
+    return fn(stage_params, x)

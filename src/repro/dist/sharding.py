@@ -1,0 +1,193 @@
+"""Logical-axis sharding: named tensor axes -> physical mesh axes.
+
+Model code never mentions physical mesh axes.  Parameters and activations are
+annotated with *logical* axis names (``"embed"``, ``"heads"``, ``"batch"`` ...)
+and a :class:`ShardingRules` table maps each logical axis to zero or more mesh
+axes.  :func:`spec_for` resolves one tensor's annotation into a
+``PartitionSpec`` with three safety semantics (exercised by
+``tests/test_sharding.py``):
+
+* **absent-axis drop** — a rule naming a mesh axis the current mesh does not
+  have is silently skipped, so the same rule table serves the 512-chip
+  multi-pod mesh and a 1-CPU smoke run;
+* **divisibility drop** — a mesh axis whose size does not divide the tensor
+  dimension is skipped (XLA would otherwise pad or error);
+* **once-per-tensor** — a mesh axis may shard at most one dimension of a given
+  tensor; later uses are dropped.
+
+Trailing ``None`` entries are trimmed so specs compare cleanly
+(``P("data")``, not ``P("data", None)``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "Axes",
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "FSDP_RULES",
+    "spec_for",
+    "tree_shardings",
+]
+
+AxisAssignment = Union[None, str, Sequence[str]]
+
+
+class Axes(tuple):
+    """Logical-axis annotation for one tensor (e.g. ``Axes(("embed", "heads"))``).
+
+    A ``tuple`` subclass so it behaves like the axis tuple everywhere, but —
+    unlike a plain tuple — jax's pytree machinery treats it as a *leaf*, which
+    lets whole-tree operations (:func:`tree_shardings`) map an axes tree
+    against a matching ``ShapeDtypeStruct`` tree.
+    """
+
+    __slots__ = ()
+
+    def __new__(cls, axes: Iterable[Optional[str]] = ()) -> "Axes":
+        return tuple.__new__(cls, tuple(axes))
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Axes{tuple.__repr__(self)}"
+
+
+def _normalize(assignment: AxisAssignment) -> Tuple[str, ...]:
+    if assignment is None:
+        return ()
+    if isinstance(assignment, str):
+        return (assignment,)
+    return tuple(assignment)
+
+
+class ShardingRules:
+    """Immutable table mapping logical axis names to mesh-axis assignments.
+
+    Values may be ``None`` (replicate), one mesh axis name, or a sequence of
+    mesh axes (the dimension is sharded over their product, e.g. ``"batch"``
+    over ``("pod", "data")``).  Unknown logical axes resolve to ``()``.
+    """
+
+    __slots__ = ("_table",)
+
+    def __init__(self, table: Mapping[str, AxisAssignment]) -> None:
+        object.__setattr__(
+            self, "_table", {k: _normalize(v) for k, v in table.items()}
+        )
+
+    def get(self, logical: str) -> Tuple[str, ...]:
+        """Mesh axes assigned to ``logical`` (``()`` if unmapped)."""
+        return self._table.get(logical, ())
+
+    def items(self):
+        return self._table.items()
+
+    def with_overrides(self, **overrides: AxisAssignment) -> "ShardingRules":
+        """A new table with some assignments replaced; ``self`` is untouched."""
+        table: Dict[str, AxisAssignment] = dict(self._table)
+        table.update(overrides)
+        return ShardingRules(table)
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, ShardingRules) and self._table == other._table
+
+    def __hash__(self) -> int:
+        return hash(tuple(sorted(self._table.items())))
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"ShardingRules({self._table!r})"
+
+
+#: Tensor-parallel default: contraction-heavy axes over "model", the global
+#: batch over ("pod", "data"); everything else replicated.
+DEFAULT_RULES = ShardingRules(
+    {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": (),
+        "ffn": ("model",),
+        "expert": ("model",),
+        "vocab": ("model",),
+        "layers": (),
+        "conv": (),
+    }
+)
+
+#: tp+fsdp preset: like DEFAULT but parameters' "embed" dimension is sharded
+#: over the data axis (ZeRO-3-style weight sharding; optimizer state inherits
+#: it through ``opt_state_axes``).
+FSDP_RULES = DEFAULT_RULES.with_overrides(embed=("data",))
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(mesh.shape)
+
+
+def spec_for(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules,
+) -> PartitionSpec:
+    """Resolve one tensor's logical axes into a ``PartitionSpec``.
+
+    ``axes`` and ``shape`` must have equal rank; ``None`` entries replicate
+    that dimension.  See the module docstring for the drop semantics.
+    """
+    axes = tuple(axes)
+    shape = tuple(shape)
+    if len(axes) != len(shape):
+        raise ValueError(
+            f"rank mismatch: axes {axes} (rank {len(axes)}) vs shape {shape} "
+            f"(rank {len(shape)})"
+        )
+    sizes = _mesh_sizes(mesh)
+    used: set = set()
+    entries: list = []
+    for logical, dim in zip(axes, shape):
+        assigned: list = []
+        if logical is not None:
+            factor = 1
+            for mesh_axis in rules.get(logical):
+                if mesh_axis not in sizes or mesh_axis in used:
+                    continue
+                grown = factor * sizes[mesh_axis]
+                if dim % grown != 0:
+                    continue
+                factor = grown
+                assigned.append(mesh_axis)
+                used.add(mesh_axis)
+        if not assigned:
+            entries.append(None)
+        elif len(assigned) == 1:
+            entries.append(assigned[0])
+        else:
+            entries.append(tuple(assigned))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def _is_axes_leaf(x: object) -> bool:
+    return isinstance(x, Axes)
+
+
+def tree_shardings(axes_tree, abstract_tree, mesh: Mesh, rules: ShardingRules):
+    """Map an :class:`Axes` tree against a matching abstract-value tree into
+    ``NamedSharding``s (the tree handed to ``jax.jit`` in/out shardings).
+
+    ``abstract_tree`` leaves need only a ``.shape`` (``ShapeDtypeStruct`` or
+    concrete arrays).  Empty subtrees (``()``/``{}``) pass through untouched.
+    """
+
+    def one(ax, abstract):
+        return NamedSharding(mesh, spec_for(tuple(ax), tuple(abstract.shape), mesh, rules))
+
+    return jax.tree.map(one, axes_tree, abstract_tree, is_leaf=_is_axes_leaf)

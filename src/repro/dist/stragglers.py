@@ -1,0 +1,192 @@
+"""Straggler detection from cross-host timer reductions (paper Sec. 1 & 5).
+
+The paper's adaptive story needs timing data aggregated *across processes*: a
+large run profiles itself and reacts.  :class:`StragglerDetector` is that
+reduction point for step walltimes — each host's per-step seconds stream in
+(directly via :meth:`observe`, or sampled out of the timer database via
+:meth:`observe_timer`), and :meth:`check` compares per-host windowed means
+against the fleet median.  Hosts slower than ``threshold`` x median are flagged
+in a :class:`StragglerReport`, handed to the ``on_straggler`` callback (the
+hook a launcher uses to re-shard, evict, or alert), and published back into the
+timer database as ``DIST/host{h}::step`` timers so distributed health appears
+in the Fig.-2-style report next to every other profile row.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from ..core.timers import TimerDB, timer_db
+
+__all__ = ["StragglerDetector", "StragglerReport"]
+
+
+@dataclass(frozen=True)
+class StragglerReport:
+    """One fleet-health snapshot produced by :meth:`StragglerDetector.check`."""
+
+    step: int
+    #: windowed mean step-seconds per host (only hosts with observations)
+    host_means: Dict[int, float]
+    #: median of ``host_means`` values — the fleet's "normal" step time
+    median: float
+    #: hosts whose mean exceeds ``threshold * median``
+    stragglers: List[int]
+    threshold: float
+
+    def slowdown(self, host: int) -> float:
+        """How many x slower than the fleet median ``host`` is."""
+        if self.median <= 0.0 or host not in self.host_means:
+            return 0.0
+        return self.host_means[host] / self.median
+
+
+class StragglerDetector:
+    """Windowed cross-host step-time reduction with median-ratio flagging.
+
+    Parameters
+    ----------
+    n_hosts:
+        Number of hosts expected to report (hosts are dense ints ``0..n-1``).
+    window:
+        Number of most-recent observations per host entering the mean.
+    threshold:
+        A host is a straggler when ``mean > threshold * median(all means)``.
+    on_straggler:
+        Called with the :class:`StragglerReport` whenever a check flags at
+        least one host.
+    publish:
+        When true (default), each :meth:`check` mirrors per-host totals into
+        the timer database as ``DIST/host{h}::step`` rows.
+    """
+
+    def __init__(
+        self,
+        n_hosts: int,
+        window: int = 32,
+        threshold: float = 2.0,
+        on_straggler: Optional[Callable[[StragglerReport], None]] = None,
+        publish: bool = True,
+        db: Optional[TimerDB] = None,
+    ) -> None:
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if threshold <= 1.0:
+            raise ValueError(f"threshold must exceed 1.0, got {threshold}")
+        self.n_hosts = n_hosts
+        self.window = window
+        self.threshold = threshold
+        self.on_straggler = on_straggler
+        self.publish = publish
+        self._db = db
+        self._windows: List[Deque[float]] = [deque(maxlen=window) for _ in range(n_hosts)]
+        self._totals: List[float] = [0.0] * n_hosts
+        self._counts: List[int] = [0] * n_hosts
+        #: (cumulative seconds, cumulative count) last sampled per db timer
+        self._timer_marks: Dict[Tuple[int, str], Tuple[float, int]] = {}
+        self.reports: List[StragglerReport] = []
+
+    # -- feeding observations --------------------------------------------------
+    def _record(self, host: int, mean_seconds: float, total: float, windows: int) -> None:
+        if not 0 <= host < self.n_hosts:
+            raise ValueError(f"host {host} out of range [0, {self.n_hosts})")
+        self._windows[host].append(float(mean_seconds))
+        self._totals[host] += float(total)
+        self._counts[host] += windows
+
+    def observe(self, host: int, seconds: float) -> None:
+        """Record one step walltime for ``host``."""
+        self._record(host, seconds, seconds, 1)
+
+    def observe_timer(self, host: int, timer_name: str, db: Optional[TimerDB] = None) -> None:
+        """Sample ``host``'s step time out of the timer database.
+
+        Reads the named timer's cumulative walltime and window count, and
+        observes the *mean seconds per window since the last sample* — the
+        cross-process reduction path: each host ships its timer-DB readings and
+        the detector diffs them, so instrumented code needs no extra hooks.
+        Samplers sparser than one call per step stay exact: the full delta
+        (all elapsed windows and seconds) is credited to :meth:`host_stats`,
+        while the windowed mean enters the straggler comparison once.
+        """
+        db = db or self._db or timer_db()
+        if not db.exists(timer_name):
+            return
+        timer = db.get(timer_name)
+        seconds, count = timer.seconds(), timer.count
+        last_seconds, last_count = self._timer_marks.get((host, timer_name), (0.0, 0))
+        d_count = count - last_count
+        if d_count > 0:
+            delta = seconds - last_seconds
+            self._record(host, delta / d_count, delta, d_count)
+            self._timer_marks[(host, timer_name)] = (seconds, count)
+
+    # -- queries ----------------------------------------------------------------
+    def host_stats(self) -> Dict[int, Tuple[int, float]]:
+        """{host: (n_observations, total_seconds)} over the whole run (hosts
+        with at least one observation only)."""
+        return {
+            host: (self._counts[host], self._totals[host])
+            for host in range(self.n_hosts)
+            if self._counts[host] > 0
+        }
+
+    def host_means(self) -> Dict[int, float]:
+        """Windowed mean step-seconds per host (hosts with data only)."""
+        return {
+            host: sum(w) / len(w)
+            for host, w in enumerate(self._windows)
+            if len(w) > 0
+        }
+
+    def check(self, step: int) -> StragglerReport:
+        """Reduce current windows into a report; flag, callback, and publish."""
+        means = self.host_means()
+        median = _median(list(means.values())) if means else 0.0
+        stragglers = sorted(
+            host
+            for host, mean in means.items()
+            if median > 0.0 and mean > self.threshold * median
+        )
+        report = StragglerReport(
+            step=step,
+            host_means=means,
+            median=median,
+            stragglers=stragglers,
+            threshold=self.threshold,
+        )
+        self.reports.append(report)
+        if self.publish:
+            self.publish_to_db(self._db or timer_db())
+        if stragglers and self.on_straggler is not None:
+            self.on_straggler(report)
+        return report
+
+    def publish_to_db(self, db: TimerDB, prefix: str = "DIST") -> None:
+        """Mirror per-host totals into ``{prefix}/host{h}::step`` timer rows.
+
+        Uses the clock ``set`` API (Cactus ``CCTK_TimerSet`` analogue), so the
+        fleet-health rows render in ``core.report.format_report`` exactly like
+        locally measured timers.
+        """
+        for host, (count, total) in self.host_stats().items():
+            timer = db.get(db.create(f"{prefix}/host{host}::step"))
+            walltime = timer.clocks.get("walltime")
+            if walltime is not None:
+                walltime.set({"walltime": total})
+            timer.count = count
+
+
+def _median(values: List[float]) -> float:
+    ordered = sorted(values)
+    n = len(ordered)
+    if n == 0:
+        return 0.0
+    mid = n // 2
+    if n % 2 == 1:
+        return ordered[mid]
+    return 0.5 * (ordered[mid - 1] + ordered[mid])

@@ -6,7 +6,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..common import default_interpret
 from . import kernel as K

@@ -59,9 +59,9 @@ def _mem_analysis(compiled) -> Dict[str, Any]:
 
 def _cost_analysis(compiled) -> Dict[str, float]:
     try:
-        cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):
-            cost = cost[0]
+        from ..dist.compat import cost_analysis
+
+        cost = cost_analysis(compiled)
         return {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
     except Exception as exc:  # noqa: BLE001
         return {"error_msg": 0.0, "_error": str(exc)}  # type: ignore[dict-item]

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, Tuple
+from typing import Dict
 
 __all__ = ["collective_bytes", "op_census", "parse_sizes"]
 
@@ -80,19 +80,26 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
             continue  # operand is the matching -start; avoid double count
         if base not in _COLLECTIVES:
             continue
-        # operands: first (...) group after the opcode
-        idx = line.find(opcode)
+        # operands: the (...) group at the opcode's call site.  Match
+        # "opcode(" — a bare find(opcode) would hit the *instruction name*
+        # ("%all-reduce-start.1 = (...) all-reduce-start(...)") and sum the
+        # async result-tuple type instead of the operands (2x the bytes).
+        idx = line.find(opcode + "(")
+        if idx < 0:
+            continue
         rest = line[idx + len(opcode):]
         om = _OPERANDS_RE.search(rest)
         if not om:
             continue
         args = om.group(1)
-        total = 0
-        for tok in args.split(","):
-            tok = tok.strip()
-            nm = _NAME_TOKEN.match(tok)
-            if nm and nm.group(1) in sizes:
-                total += sizes[nm.group(1)]
+        # modern HLO inlines operand types ("all-reduce(f32[2,64]{1,0} %x)"):
+        # sum the inline shapes; otherwise fall back to name -> size lookup
+        total = _type_bytes(args)
+        if total == 0:
+            for tok in args.split(","):
+                nm = _NAME_TOKEN.match(tok.strip())
+                if nm and nm.group(1) in sizes:
+                    total += sizes[nm.group(1)]
         out[base] += total
     return dict(out)
 

@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import time
 from typing import Any, Dict, Optional
 
@@ -35,6 +34,7 @@ from ..core import (
     format_report,
     increment_counter,
     param_registry,
+    straggler_rows,
     timer_db,
 )
 from ..data import DataLoader, SyntheticConfig, SyntheticLM
@@ -203,8 +203,10 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
 
     # --- ANALYSIS -------------------------------------------------------------------
     def analysis(s: RunState) -> None:
-        step_t = db.get("EVOL/trainer::train_step").seconds()
-        detector.observe(0, step_t / max(s.iteration + 1, 1))
+        # cross-process timer reduction: sample this host's step time straight
+        # out of the timer database (multi-host launchers feed one host index
+        # per process) and periodically reduce into a fleet-health report
+        detector.observe_timer(0, "EVOL/trainer::train_step", db=db)
         if s.iteration % 8 == 7:
             detector.check(s.iteration)
 
@@ -308,6 +310,7 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
             else 0.0
         ),
         "straggler_reports": len(detector.reports),
+        "straggler_rows": straggler_rows(detector),
     }
     return summary
 
@@ -341,6 +344,8 @@ def main(argv=None) -> int:
     summary = run_training(settings)
     print(json.dumps(summary, indent=1, default=str))
     if args.report:
+        # fleet-health DIST/host rows are already in the DB (StragglerDetector
+        # publishes them on every check)
         print(format_report(timer_db(), channels=("walltime", "cputime", "xla_flops")))
     return 0
 

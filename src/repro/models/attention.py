@@ -15,8 +15,7 @@ Shapes: q (B, S, H, hd); k/v (B, T, KV, hd); GQA group = H // KV.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ f32 WKV state and the two token-shift vectors.
 
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -11,7 +11,7 @@ KV cache of ``seq_len``).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 __all__ = ["MoESettings", "ArchConfig", "ShapeConfig", "SHAPES"]

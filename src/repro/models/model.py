@@ -20,16 +20,15 @@ Public surface:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..dist.context import constrain
 from .blocks import block_apply, block_cache_specs, block_specs
-from .config import ArchConfig, ShapeConfig
-from .layers import PSpec, abstract, axes_tree, count_params, is_pspec, materialize, rms_norm, rotary_embedding
+from .config import ArchConfig
+from .layers import PSpec, abstract, axes_tree, is_pspec, materialize, rms_norm, rotary_embedding
 
 __all__ = [
     "model_specs",

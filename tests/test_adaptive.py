@@ -12,7 +12,7 @@ Key invariants (paper Sec. 3.2):
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 from repro.core.adaptive import (
     AdaptiveCheckpointController,

@@ -1,6 +1,5 @@
 """Checkpointing: atomic roundtrip, async writes, corruption handling, retention."""
 
-import json
 import os
 
 import jax

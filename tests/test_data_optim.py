@@ -1,6 +1,5 @@
 """Data pipeline determinism/resume + optimizer correctness + compression."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,152 @@
+"""repro.dist unit coverage: ambient sharding context no-op semantics, mesh
+construction, and StragglerDetector fed from injected timer-database readings
+(the cross-process timer-reduction path of the paper's adaptive story)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.timers import timer_db
+from repro.dist.context import constrain, current_sharding, use_sharding
+from repro.dist.meshutil import local_mesh
+from repro.dist.sharding import DEFAULT_RULES
+from repro.dist.stragglers import StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# use_sharding / constrain
+# ---------------------------------------------------------------------------
+
+def test_constrain_is_noop_outside_context():
+    x = jnp.arange(12.0).reshape(3, 4)
+    assert current_sharding() is None
+    y = constrain(x, "batch", "embed")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_constrain_applies_inside_context_and_restores():
+    mesh = local_mesh((1, 1))
+    x = jnp.ones((4, 8))
+    with use_sharding(mesh, DEFAULT_RULES):
+        assert current_sharding() == (mesh, DEFAULT_RULES)
+        y = constrain(x, "batch", "embed")
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    assert current_sharding() is None
+
+
+def test_use_sharding_nests():
+    mesh = local_mesh((1, 1))
+    rules2 = DEFAULT_RULES.with_overrides(seq="data")
+    with use_sharding(mesh, DEFAULT_RULES):
+        with use_sharding(mesh, rules2):
+            assert current_sharding()[1] is rules2
+        assert current_sharding()[1] is DEFAULT_RULES
+
+
+def test_constrain_traces_under_jit():
+    mesh = local_mesh((1, 1))
+
+    @jax.jit
+    def f(x):
+        with use_sharding(mesh, DEFAULT_RULES):
+            return constrain(x * 2.0, "batch", "embed")
+
+    out = f(jnp.ones((2, 4)))
+    np.testing.assert_array_equal(np.asarray(out), 2.0 * np.ones((2, 4)))
+
+
+# ---------------------------------------------------------------------------
+# local_mesh
+# ---------------------------------------------------------------------------
+
+def test_local_mesh_default_axis_names():
+    mesh = local_mesh((1, 1))
+    assert mesh.axis_names == ("data", "model")
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+def test_local_mesh_rejects_oversized_shape():
+    with pytest.raises(ValueError, match="devices"):
+        local_mesh((1024, 1024))
+
+
+def test_local_mesh_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        local_mesh(())
+    with pytest.raises(ValueError):
+        local_mesh((0, 2))
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector fed from the timer database
+# ---------------------------------------------------------------------------
+
+def test_straggler_detector_from_injected_timer_readings():
+    """Per-host step timers are injected into the DB (as a cross-process
+    reduction would); host 2 runs 2x slower and must be flagged."""
+    db = timer_db()
+    n_hosts, steps = 4, 6
+    det = StragglerDetector(n_hosts=n_hosts, window=8, threshold=1.5, db=db)
+
+    for host in range(n_hosts):
+        db.create(f"host{host}/EVOL::step")
+    for step in range(steps):
+        for host in range(n_hosts):
+            timer = db.get(f"host{host}/EVOL::step")
+            seconds = (step + 1) * (2.0 if host == 2 else 1.0)
+            timer.clocks["walltime"].set({"walltime": seconds})
+            timer.count = step + 1
+            det.observe_timer(host, f"host{host}/EVOL::step")
+
+    report = det.check(step=steps)
+    assert report.stragglers == [2]
+    assert report.slowdown(2) == pytest.approx(2.0)
+    assert det.reports[-1] is report
+    # fleet health was published back into the timer DB as report rows
+    assert db.exists("DIST/host2::step")
+    assert db.get("DIST/host2::step").seconds() == pytest.approx(2.0 * steps)
+
+
+def test_observe_timer_sparse_sampling_keeps_exact_totals():
+    """Sampling every N steps must still credit all N windows/seconds."""
+    db = timer_db()
+    det = StragglerDetector(n_hosts=1, window=8, threshold=1.5, publish=False, db=db)
+    db.create("h0::step")
+    timer = db.get("h0::step")
+    # 6 windows of 0.5s each land before the detector samples twice (3 + 3)
+    for sampled_count, sampled_seconds in [(3, 1.5), (6, 3.0)]:
+        timer.clocks["walltime"].set({"walltime": sampled_seconds})
+        timer.count = sampled_count
+        det.observe_timer(0, "h0::step")
+    assert det.host_stats() == {0: (6, pytest.approx(3.0))}
+    assert det.host_means() == {0: pytest.approx(0.5)}
+
+
+def test_straggler_detector_observe_timer_ignores_missing_and_stale():
+    det = StragglerDetector(n_hosts=2, window=4, threshold=2.0, publish=False)
+    det.observe_timer(0, "does/not::exist")
+    assert det.host_means() == {}
+    db = timer_db()
+    db.create("host0::step")
+    det.observe_timer(0, "host0::step")  # count still 0 -> no observation
+    assert det.host_means() == {}
+
+
+def test_straggler_detector_validates_arguments():
+    with pytest.raises(ValueError):
+        StragglerDetector(n_hosts=0)
+    with pytest.raises(ValueError):
+        StragglerDetector(n_hosts=2, window=0)
+    with pytest.raises(ValueError):
+        StragglerDetector(n_hosts=2, threshold=1.0)
+    det = StragglerDetector(n_hosts=2, publish=False)
+    with pytest.raises(ValueError):
+        det.observe(5, 1.0)
+
+
+def test_single_host_never_flags_itself():
+    det = StragglerDetector(n_hosts=1, window=4, threshold=1.5, publish=False)
+    for seconds in (1.0, 5.0, 0.1, 9.0):
+        det.observe(0, seconds)
+    assert det.check(step=4).stragglers == []

@@ -10,6 +10,9 @@ import sys
 
 import pytest
 
+# compiles 8 mini dry-run cells in a forced 8-device subprocess (~1 min)
+pytestmark = [pytest.mark.slow, pytest.mark.multihost]
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MINI_SCRIPT = r"""
@@ -24,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 assert jax.device_count() == 8
 
 from repro.configs import get_smoke_config
+from repro.dist.compat import cost_analysis
 from repro.dist.sharding import DEFAULT_RULES
 from repro.launch.hlo import collective_bytes
 from repro.launch.steps import build_step, input_specs, rules_for
@@ -48,7 +52,7 @@ for arch in ["llama3.2-1b", "moonshot-v1-16b-a3b", "recurrentgemma-9b", "rwkv6-1
         coll = collective_bytes(compiled.as_text())
         out[f"{arch}:{kind}"] = {
             "collective_bytes": sum(coll.values()),
-            "flops": compiled.cost_analysis().get("flops", -1.0),
+            "flops": cost_analysis(compiled).get("flops", -1.0),
         }
 
 # --- pipeline parallelism over the pod axis ---------------------------------
@@ -69,6 +73,7 @@ y_ref = layer_fn(stage_w[1], layer_fn(stage_w[0], x))
 out["pipeline_max_err"] = float(jnp.max(jnp.abs(y_pp - y_ref)))
 
 # --- compressed cross-pod reduction inside shard_map -------------------------
+from repro.dist.compat import shard_map
 from repro.optim.compression import cross_pod_mean_compressed, ef_init
 
 g = jax.random.normal(jax.random.PRNGKey(2), (2, 64), jnp.float32)  # per-pod grads
@@ -78,9 +83,9 @@ def reducer(g_local, ef):
     return mean["g"], new_ef
 
 ef0 = ef_init({"g": g[0]})
-fn = jax.shard_map(
+fn = shard_map(
     reducer, mesh=pp_mesh, in_specs=(P("pod"), P()), out_specs=(P(), P()),
-    check_vma=False,
+    check=False,
 )
 mean, _ = fn(g, ef0)
 true_mean = jnp.mean(g, axis=0)

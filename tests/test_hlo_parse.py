@@ -61,3 +61,29 @@ ENTRY %e (a: f32[8], b: bf16[16]) -> f32[8] {
 """
     coll = collective_bytes(hlo)
     assert coll["all-reduce"] == 8 * 4 + 16 * 2
+
+
+def test_inline_operand_types_modern_dialect():
+    """Post-SPMD HLO inlines operand types; bytes come from the call site."""
+    hlo = """
+ENTRY %main () -> f32[2,64] {
+  %x = f32[2,64]{1,0} parameter(0)
+  %ar = f32[2,64]{1,0} all-reduce(f32[2,64]{1,0} %x), replica_groups=[4,2]<=[8], to_apply=%sum
+}
+"""
+    coll = collective_bytes(hlo)
+    assert coll["all-reduce"] == 2 * 64 * 4
+
+
+def test_async_start_counts_operands_not_result_tuple():
+    """The instruction *name* contains the opcode; the parser must sum the
+    operands at the call site, not the (operand, result) tuple type (2x)."""
+    hlo = """
+ENTRY %main () -> f32[2,64] {
+  %x = f32[2,64]{1,0} parameter(0)
+  %all-reduce-start.1 = (f32[2,64]{1,0}, f32[2,64]{1,0}) all-reduce-start(f32[2,64]{1,0} %x), to_apply=%sum
+  %all-reduce-done.1 = f32[2,64]{1,0} all-reduce-done((f32[2,64]{1,0}, f32[2,64]{1,0}) %all-reduce-start.1)
+}
+"""
+    coll = collective_bytes(hlo)
+    assert coll["all-reduce"] == 2 * 64 * 4  # operand only; -done skipped

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 from repro.kernels.rglru.kernel import rglru_pallas
 from repro.kernels.rglru.ops import linear_recurrence, linear_recurrence_assoc

@@ -3,7 +3,6 @@ the chunked default through a full model forward — wiring check that the
 kernel's layout transposes and GQA head mapping are correct in situ."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

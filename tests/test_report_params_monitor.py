@@ -1,7 +1,6 @@
 """Reports (Fig 2), steerable parameters (Sec 5), HTTP monitor (Sec 3.1)."""
 
 import json
-import os
 import time
 import urllib.request
 

@@ -3,7 +3,6 @@
 import pytest
 
 from repro.core.schedule import BINS, RunState, ScheduleError, Scheduler
-from repro.core.timers import timer_db
 
 
 def test_lifecycle_order_and_auto_timers():

@@ -13,6 +13,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_smoke_config
+
+# full-forward-vs-decode equivalence across every family: ~3-4 min of
+# compiles; tier-1 serving coverage lives in test_system's engine test
+pytestmark = pytest.mark.slow
 from repro.models import model as M
 
 B, S_PROMPT, S_DECODE = 2, 32, 6

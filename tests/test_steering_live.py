@@ -2,15 +2,17 @@
 mid-run (as the HTTP monitor would) takes effect on the controller, and the
 interval-only mode reproduces the paper's second §4 experiment semantics."""
 
-import sys
 
-import numpy as np
+
 import pytest
 
 from repro.core.adaptive import AdaptiveCheckpointController, AdaptiveCheckpointPolicy
-from repro.core.params import param_registry, reset_param_registry
+from repro.core.params import reset_param_registry
 from repro.core.timers import reset_timer_db
 from repro.launch.train import TrainSettings, run_training
+
+# two full (compiled) training runs; tier-1 steering coverage is unit-level
+pytestmark = pytest.mark.slow
 
 
 def test_steering_mid_run_changes_checkpoint_behavior(tmp_path):

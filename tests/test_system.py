@@ -2,7 +2,6 @@
 checkpointing, restart determinism (fault tolerance), serving engine, and
 straggler detection."""
 
-import os
 
 import jax
 import numpy as np
@@ -38,6 +37,7 @@ def test_training_loop_runs_and_profiles(tmp_path):
     assert summary["checkpoint"]["n_checkpoints"] >= 1
 
 
+@pytest.mark.slow
 def test_loss_decreases_on_learnable_task(tmp_path):
     _fresh()
     summary = run_training(
@@ -48,6 +48,7 @@ def test_loss_decreases_on_learnable_task(tmp_path):
     assert summary["final_metrics"]["ce"] < 4.9
 
 
+@pytest.mark.slow
 def test_restart_determinism(tmp_path):
     """Fault tolerance: kill after N steps, restore, and land on the *same*
     final loss as an uninterrupted run (bitwise-deterministic substrate)."""
@@ -68,6 +69,7 @@ def test_restart_determinism(tmp_path):
     )
 
 
+@pytest.mark.slow
 def test_adaptive_bound_respected_with_slow_ckpt(tmp_path):
     """With an artificially slow (synchronous) writer, AdaptCheck keeps the
     checkpoint fraction near the bound while fixed-interval blows through it."""
@@ -91,7 +93,6 @@ def test_adaptive_bound_respected_with_slow_ckpt(tmp_path):
 
 def test_serving_engine_completes_and_steers():
     _fresh()
-    import jax.numpy as jnp
 
     from repro.configs import get_smoke_config
     from repro.models import model as M
