@@ -1,0 +1,98 @@
+"""Perf-regression gate: compare two bench JSONs row by row.
+
+Used by the CI bench-smoke job to compare a freshly measured
+``BENCH_clock_overhead.json`` against the committed baseline under
+``benchmarks/baselines/``; exits non-zero when any matched row slowed down by
+more than ``--max-ratio``.
+
+Rows are matched by name.  Sub-resolution rows (both sides below ``--min-us``)
+are ignored — micro-benchmark noise at those magnitudes is not a regression
+signal.  Rows present in only one file are reported but do not fail the gate
+(benches gain and rename rows across PRs); the gate's teeth are on the rows
+both sides know about.
+
+Several fresh JSONs may be passed; each row gates on its *minimum* across
+them.  A real regression slows every run, while scheduler noise on a shared
+runner inflates individual runs at random — min-of-N is the standard
+microbenchmark noise filter (the bench itself already takes best-of-repeats
+within a run; this extends it across process launches).
+
+    python -m benchmarks.compare benchmarks/baselines/clock_overhead.json \
+        BENCH_1.json BENCH_2.json BENCH_3.json --max-ratio 2.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def _load_rows(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {row["name"]: float(row["us_per_call"]) for row in payload["rows"]}
+
+
+def compare(
+    base: Dict[str, float],
+    fresh: Dict[str, float],
+    max_ratio: float = 2.0,
+    min_us: float = 0.05,
+) -> int:
+    """Print the comparison table; return the number of failing rows."""
+    failures = 0
+    width = max([len(n) for n in {*base, *fresh}] + [len("row")]) + 2
+    print(f"{'row'.ljust(width)} {'base_us':>12} {'new_us':>12} {'ratio':>8}  verdict")
+    for name in sorted({*base, *fresh}):
+        b, n = base.get(name), fresh.get(name)
+        if b is None or n is None:
+            which = "baseline" if b is None else "fresh run"
+            print(f"{name.ljust(width)} {'-':>12} {'-':>12} {'-':>8}  SKIP (missing from {which})")
+            continue
+        if b < min_us and n < min_us:
+            print(f"{name.ljust(width)} {b:12.3f} {n:12.3f} {'-':>8}  SKIP (below {min_us}us floor)")
+            continue
+        ratio = n / b if b > 0 else float("inf")
+        verdict = "ok"
+        if ratio > max_ratio:
+            verdict = f"FAIL (> {max_ratio:g}x slowdown)"
+            failures += 1
+        print(f"{name.ljust(width)} {b:12.3f} {n:12.3f} {ratio:8.2f}  {verdict}")
+    return failures
+
+
+def _min_rows(paths) -> Dict[str, float]:
+    """Per-row minimum across several fresh runs (noise filter)."""
+    merged: Dict[str, float] = {}
+    for path in paths:
+        for name, value in _load_rows(path).items():
+            if name not in merged or value < merged[name]:
+                merged[name] = value
+    return merged
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("fresh", nargs="+",
+                    help="freshly measured JSON(s); rows gate on their minimum")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when new/base exceeds this (default 2.0)")
+    ap.add_argument("--min-us", type=float, default=0.05,
+                    help="ignore rows where both sides are below this (noise floor)")
+    args = ap.parse_args(argv)
+    failures = compare(
+        _load_rows(args.baseline), _min_rows(args.fresh),
+        max_ratio=args.max_ratio, min_us=args.min_us,
+    )
+    if failures:
+        print(f"\n{failures} row(s) regressed beyond {args.max_ratio:g}x", file=sys.stderr)
+        return 1
+    print("\nno perf regressions beyond the gate")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,10 +20,10 @@ from repro.core import (
     RunState,
     Scheduler,
     format_report,
-    increment_counter,
     register_clock,
     timer_db,
 )
+from repro.core.clocks import counter_cell
 
 # --- 1. manual caliper points (paper Table 3) --------------------------------
 db = timer_db()
@@ -45,11 +45,15 @@ _steps = [0.0]
 sch = Scheduler(db)
 
 
+# hot-loop counter: resolve the channel once, bump with one C-level call
+bump_flops = counter_cell("xla_flops")
+
+
 def evolve(state: RunState) -> None:
     y = jnp.sin(jnp.arange(4096.0))
     jax.block_until_ready(y)
     _steps[0] += 1
-    increment_counter("xla_flops", 4096.0)
+    bump_flops(4096.0)
 
 
 def analysis(state: RunState) -> None:

@@ -21,8 +21,12 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
-from ..core.clocks import increment_counter
+from ..core.clocks import counter_cell
 from .io import CheckpointCorrupt, checkpoint_nbytes, load_checkpoint, save_checkpoint
+
+# channel cells resolved once (lock-free C-level increment on the write path)
+_BUMP_IO_BYTES = counter_cell("io_bytes")
+_BUMP_IO_OPS = counter_cell("io_ops")
 
 __all__ = ["CheckpointManager"]
 
@@ -65,8 +69,8 @@ class CheckpointManager:
         path, nbytes = save_checkpoint(
             self.directory, step, host_tree, metadata, fsync=self.fsync
         )
-        increment_counter("io_bytes", nbytes)
-        increment_counter("io_ops", 1)
+        _BUMP_IO_BYTES(float(nbytes))
+        _BUMP_IO_OPS(1.0)
         self._gc()
         return path, nbytes
 

@@ -8,7 +8,9 @@ from .clocks import (
     ClockValues,
     CounterClock,
     clock_names,
+    counter_cell,
     counter_channel,
+    counter_values,
     increment_counter,
     make_all_clocks,
     make_clock,
@@ -33,7 +35,9 @@ __all__ = [
     "ClockValues",
     "CounterClock",
     "clock_names",
+    "counter_cell",
     "counter_channel",
+    "counter_values",
     "increment_counter",
     "make_all_clocks",
     "make_clock",

@@ -12,6 +12,26 @@ Hardware adaptation (see DESIGN.md): TPUs expose no user-readable PMU, so the
 PAPI-analogue clocks here are *derived* device clocks (``xla_flops``/``xla_bytes``)
 fed by XLA's compiled cost analysis, plus generic :class:`CounterClock` channels
 for framework events (checkpoint bytes, collective bytes, tokens processed).
+
+Performance architecture (paper: "a high performance interface"):
+
+* **Fused sampling.**  Built-in clocks implement :meth:`Clock.fused_sampler`,
+  returning a closure that reads the clock's raw channel values as a flat
+  sequence of floats.  :func:`channel_layout` composes every fused sampler of
+  the current registry into one :class:`ChannelLayout` whose ``sample()`` fills
+  a flat float array in a single pass — a timer start/stop window is two such
+  passes plus an element-wise diff, with no per-clock dicts or locks.  The
+  layout is stamped with the registry version and cached process-wide, so all
+  timers share one resolved layout per registry generation.
+* **Slow-path compatibility.**  Clocks without a fused sampler (e.g. a user
+  :class:`CallbackClock` with ``on_start``/``on_stop`` arming hooks) keep the
+  classic per-timer ``Clock`` object path.  New clocks must either implement
+  fused sampling or accept the slow-path cost.
+* **Lock-free counters.**  :func:`increment_counter` appends to a per-channel
+  pending list (``list.append`` is an atomic C operation under the GIL), and
+  readers fold pending amounts into a base total under a read-side lock.
+  Hot loops should resolve a channel once with :func:`counter_cell` and call
+  the returned cell directly — that is a single C-level call per increment.
 """
 
 from __future__ import annotations
@@ -20,7 +40,7 @@ import os
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Mapping, Optional, Sequence
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 __all__ = [
     "Clock",
@@ -32,12 +52,17 @@ __all__ = [
     "ThreadCPUClock",
     "RSSClock",
     "CounterClock",
+    "ChannelLayout",
+    "channel_layout",
     "register_clock",
     "unregister_clock",
     "clock_names",
+    "registry_version",
     "make_clock",
     "make_all_clocks",
+    "counter_cell",
     "counter_channel",
+    "counter_values",
     "increment_counter",
     "reset_default_clocks",
 ]
@@ -79,6 +104,15 @@ class Clock:
     # -- core sampling hook -------------------------------------------------
     def _now(self) -> Dict[str, float]:  # pragma: no cover - abstract
         raise NotImplementedError
+
+    def fused_sampler(self) -> Optional[Callable[[], Sequence[float]]]:
+        """Zero-arg closure returning this clock's raw channel values (ordered
+        as ``units``) as a flat float sequence, for the fused timer hot path.
+
+        Return ``None`` (the default) for clocks that need per-window object
+        state or arming hooks; such clocks take the per-timer slow path.
+        """
+        return None
 
     # -- Cactus clock API ----------------------------------------------------
     def start(self) -> None:
@@ -135,7 +169,9 @@ class CallbackClock(Clock):
     """A clock built from user callbacks — the paper's extension mechanism.
 
     ``sample`` returns the raw counter values; optional ``on_start``/``on_stop``
-    callbacks allow clocks that must arm hardware counters.
+    callbacks allow clocks that must arm hardware counters.  Callback clocks
+    keep the classic per-timer object path (no fused sampler) so their arming
+    hooks fire once per window, exactly as before.
     """
 
     def __init__(
@@ -176,15 +212,102 @@ class WalltimeClock(Clock):
     def _now(self) -> Dict[str, float]:
         return {"walltime": time.monotonic()}
 
+    def fused_sampler(self):
+        return _scalar_sampler(time.monotonic)
+
+
+# ---------------------------------------------------------------------------
+# Process CPU time: on most kernels ``time.process_time`` is a ~100ns vDSO
+# read, but on syscall-trapping sandboxes (gVisor and similar) it is a slow
+# trap (several microseconds).  The fused hot path therefore reads it through
+# a process-wide cache that is refreshed at most once per ``refresh_ns`` —
+# calibrated at import: exact (refresh 0) when the source is cheap, ~1 ms
+# granularity when it is not.  Totals telescope across windows (marks always
+# come from the same monotone cache), so long-run accumulation stays exact to
+# within one refresh interval; sub-interval windows see quantized CPU time.
+# Override with REPRO_CPUTIME_REFRESH_US (microseconds; 0 forces exact reads).
+# ---------------------------------------------------------------------------
+
+def _perf_counter_float() -> float:
+    return float(time.perf_counter_ns())
+
+
+def _scalar_sampler(fn: Callable[[], float]) -> Callable[[], Tuple[float]]:
+    """Wrap a single-value raw reader for the fused path.  Tagged with
+    ``scalar_fn`` so the layout builder can merge runs of adjacent
+    single-channel clocks into one closure (fewer calls and allocations)."""
+
+    def sample() -> Tuple[float]:
+        return (fn(),)
+
+    sample.scalar_fn = fn  # type: ignore[attr-defined]
+    return sample
+
+
+_CPUTIME_CACHE = [0.0, -(10 ** 18)]  # [value_sec, perf_ns at last refresh]
+_CPUTIME_REFRESH_LOCK = threading.Lock()
+
+
+def _calibrate_cputime_refresh_ns() -> int:
+    env = os.environ.get("REPRO_CPUTIME_REFRESH_US", "auto")
+    if env != "auto":
+        try:
+            return max(int(float(env) * 1000.0), 0)
+        except ValueError:
+            return 0
+    probe = time.process_time
+    perf = time.perf_counter_ns
+    # min of individual probes: one scheduler hiccup during calibration must
+    # not misclassify a cheap vDSO source as a trapping syscall
+    best = float("inf")
+    for _ in range(8):
+        t0 = perf()
+        probe()
+        best = min(best, perf() - t0)
+    # Cheap vDSO source: sample exactly. Trapping source: 1 ms granularity.
+    return 1_000_000 if best > 2_000 else 0
+
+
+_CPUTIME_REFRESH_NS = _calibrate_cputime_refresh_ns()
+
+
+def _refresh_cputime_cache(now_ns: int) -> float:
+    """Serialized refresh: concurrent refreshers must never write the cache
+    backwards (a torn older value would yield negative window deltas)."""
+    cache = _CPUTIME_CACHE
+    with _CPUTIME_REFRESH_LOCK:
+        if now_ns - cache[1] >= _CPUTIME_REFRESH_NS:  # still stale once inside
+            value = time.process_time()
+            cache[:] = (value, time.perf_counter_ns())
+    return cache[0]
+
+
+def _cputime_cached() -> float:
+    now_ns = time.perf_counter_ns()
+    cache = _CPUTIME_CACHE
+    if now_ns - cache[1] >= _CPUTIME_REFRESH_NS:
+        return _refresh_cputime_cache(now_ns)
+    return cache[0]
+
 
 class CPUTimeClock(Clock):
-    """Process CPU time (the paper's ``getrusage``: user+system seconds)."""
+    """Process CPU time (the paper's ``getrusage``: user+system seconds).
+
+    The direct object path (``_now``) always reads the exact source; the fused
+    timer path samples through the rate-limited cache described above.
+    """
 
     name = "cputime"
     units = {"cputime": "sec"}
 
     def _now(self) -> Dict[str, float]:
         return {"cputime": time.process_time()}
+
+    def fused_sampler(self):
+        if _CPUTIME_REFRESH_NS <= 0:
+            # exact mode (cheap vDSO source): read directly, no cache, no lock
+            return _scalar_sampler(time.process_time)
+        return _scalar_sampler(_cputime_cached)
 
 
 class ThreadCPUClock(Clock):
@@ -196,6 +319,9 @@ class ThreadCPUClock(Clock):
 
     def _now(self) -> Dict[str, float]:
         return {"thread_cputime": time.thread_time()}
+
+    def fused_sampler(self):
+        return _scalar_sampler(time.thread_time)
 
 
 class PerfCounterClock(Clock):
@@ -209,6 +335,9 @@ class PerfCounterClock(Clock):
 
     def _now(self) -> Dict[str, float]:
         return {"perfcounter": float(time.perf_counter_ns())}
+
+    def fused_sampler(self):
+        return _scalar_sampler(_perf_counter_float)
 
 
 class RSSClock(Clock):
@@ -231,6 +360,10 @@ class RSSClock(Clock):
         except (OSError, IndexError, ValueError):  # pragma: no cover
             return {"rss": 0.0}
 
+    def fused_sampler(self):
+        now = self._now
+        return _scalar_sampler(lambda: now()["rss"])
+
 
 # ---------------------------------------------------------------------------
 # Counter channels: process-global monotonically increasing event counters that
@@ -238,20 +371,145 @@ class RSSClock(Clock):
 # executed steps, ...).  A CounterClock snapshots a channel at start/stop, so a
 # timer window captures exactly the events that happened inside it.  This is
 # the TPU-era stand-in for PAPI event counters.
+#
+# Storage: one cell per channel, holding a folded ``base`` total plus a
+# ``pending`` list of raw amounts.  Writers only ever ``pending.append(x)`` —
+# an atomic C-level operation, safe from any thread without a lock.  Readers
+# fold ``pending[:n]`` into ``base`` and delete the folded prefix under
+# _COUNTER_READ_LOCK; concurrent appends land past the folded prefix and are
+# never lost.  Channels that are written but never read grow their pending
+# list; in this framework every open timer window reads the counter clocks,
+# which bounds growth in practice.
 # ---------------------------------------------------------------------------
 
-_COUNTERS: Dict[str, float] = {}
-_COUNTER_LOCK = threading.Lock()
+
+class _CounterCell:
+    __slots__ = ("base", "pending")
+
+    def __init__(self) -> None:
+        self.base = 0.0
+        self.pending: List[float] = []
 
 
-def counter_channel(name: str) -> float:
-    with _COUNTER_LOCK:
-        return _COUNTERS.get(name, 0.0)
+_CELLS: Dict[str, _CounterCell] = {}
+_CELL_APPENDS: Dict[str, Callable[[float], None]] = {}
+_COUNTER_READ_LOCK = threading.Lock()
+_CELLS_CREATE_LOCK = threading.Lock()
+
+
+def _new_cell(name: str) -> _CounterCell:
+    with _CELLS_CREATE_LOCK:
+        cell = _CELLS.get(name)
+        if cell is None:
+            cell = _CounterCell()
+            # publish the append before the cell so _CELL_APPENDS lookups in
+            # increment_counter never see a cell without its fast path
+            _CELL_APPENDS[name] = cell.pending.append
+            _CELLS[name] = cell
+        return cell
+
+
+def counter_cell(name: str) -> Callable[[float], None]:
+    """Resolve a channel once; returns the lock-free increment callable.
+
+    The returned cell is ``list.append`` bound to the channel's pending list —
+    a single C-level call per increment, safe from any thread.  This is the
+    recommended hot-loop API (the counter analogue of timer handles)::
+
+        bump = counter_cell("xla_flops")
+        ...
+        bump(flops_this_step)   # ~50ns, no lock
+    """
+    cell = _CELL_APPENDS.get(name)
+    if cell is None:
+        _new_cell(name)
+        cell = _CELL_APPENDS[name]
+    return cell
 
 
 def increment_counter(name: str, amount: float) -> None:
-    with _COUNTER_LOCK:
-        _COUNTERS[name] = _COUNTERS.get(name, 0.0) + float(amount)
+    """Add ``amount`` to channel ``name`` (lock-free fast path).
+
+    Name-resolved per call; hot loops should use :func:`counter_cell`.
+    ``amount + 0.0`` both coerces ints to float and raises ``TypeError`` here,
+    at the call site, for non-numeric input (never poisoning the channel).
+    """
+    try:
+        _CELL_APPENDS[name](amount + 0.0)
+    except KeyError:
+        _new_cell(name).pending.append(float(amount))
+    except TypeError:
+        _CELL_APPENDS[name](float(amount))  # e.g. numeric strings
+
+
+def _fold_cells_into(append: Callable[[float], None], cells) -> None:
+    """Fold each cell's pending amounts into its base total and emit the
+    totals via ``append``.  Caller holds the read lock.
+
+    This is the single fold implementation shared by the name-based readers
+    and every fused sampler, so the semantics below hold everywhere:
+    ``len``/slice-copy/``del prefix`` are each atomic; concurrent appends go
+    past index ``n`` and survive the prefix delete, so no update is lost.
+    Non-numeric values (possible only through a raw :func:`counter_cell`
+    handle, which skips call-site validation) are dropped rather than left to
+    poison every later read of the channel.
+    """
+    for cell in cells:
+        pending = cell.pending
+        n = len(pending)
+        if n:
+            chunk = pending[:n]
+            del pending[:n]
+            try:
+                cell.base += float(sum(chunk))
+            except TypeError:
+                cell.base += float(
+                    sum(x for x in chunk if isinstance(x, (int, float)))
+                )
+        append(cell.base)
+
+
+def _fold_cell_locked(cell: _CounterCell) -> float:
+    """One cell's folded total; caller holds the read lock."""
+    out: List[float] = []
+    _fold_cells_into(out.append, (cell,))
+    return out[0]
+
+
+def counter_channel(name: str) -> float:
+    with _COUNTER_READ_LOCK:
+        cell = _CELLS.get(name)
+        return _fold_cell_locked(cell) if cell is not None else 0.0
+
+
+def counter_values(names: Sequence[str]) -> List[float]:
+    """Merged totals for several channels in one read-lock acquisition."""
+    with _COUNTER_READ_LOCK:
+        cells = _CELLS
+        out = []
+        for name in names:
+            cell = cells.get(name)
+            out.append(_fold_cell_locked(cell) if cell is not None else 0.0)
+        return out
+
+
+def _make_counter_sampler(names: Tuple[str, ...]) -> Callable[[], List[float]]:
+    """Fused sampler over counter channels: one read-lock acquisition, folds
+    inlined, cells resolved once at layout build (cells are never deleted).
+    Tagged with ``counter_names`` so the layout builder can merge adjacent
+    counter clocks into a single lock acquisition per sample pass."""
+    lock = _COUNTER_READ_LOCK
+    cells = tuple(_new_cell(name) for name in names)
+    fold = _fold_cells_into
+
+    def sample() -> List[float]:
+        out: List[float] = []
+        with lock:
+            fold(out.append, cells)
+        return out
+
+    sample.counter_names = names  # type: ignore[attr-defined]
+    return sample
 
 
 class CounterClock(Clock):
@@ -263,7 +521,11 @@ class CounterClock(Clock):
         super().__init__()
 
     def _now(self) -> Dict[str, float]:
-        return {ch: counter_channel(ch) for ch in self.units}
+        names = tuple(self.units)
+        return dict(zip(names, counter_values(names)))
+
+    def fused_sampler(self):
+        return _make_counter_sampler(tuple(self.units))
 
 
 # ---------------------------------------------------------------------------
@@ -296,8 +558,9 @@ def clock_names() -> List[str]:
 
 
 def registry_version() -> int:
-    with _REGISTRY_LOCK:
-        return _REGISTRY_VERSION[0]
+    # Lock-free: a single list-element read is atomic under the GIL, and the
+    # version is monotone — the timer fast path polls this every window.
+    return _REGISTRY_VERSION[0]
 
 
 def make_clock(name: str) -> Clock:
@@ -310,6 +573,300 @@ def make_all_clocks() -> Dict[str, Clock]:
     with _REGISTRY_LOCK:
         factories = dict(_REGISTRY)
     return {name: factory() for name, factory in factories.items()}
+
+
+# ---------------------------------------------------------------------------
+# Channel layout: the resolved struct-of-arrays schema of the current registry.
+# One flat float slot per channel of every fused clock, in registration order;
+# clocks without a fused sampler are listed for the per-timer slow path.  Flat
+# channel names are collision-namespaced: when two clocks export the same
+# channel name, every colliding export is renamed ``<clock>.<channel>`` so no
+# reading silently overwrites another in flattened views.
+# ---------------------------------------------------------------------------
+
+
+class ChannelLayout:
+    """Immutable resolved layout for one registry version (shared by all
+    timers; rebuild is triggered by a version-stamp mismatch)."""
+
+    __slots__ = (
+        "version",
+        "sample",
+        "n_fused",
+        "fused_keys",
+        "fused_flat",
+        "key_index",
+        "flat_index",
+        "clock_meta",
+        "nonfused_names",
+        "nonfused_flat",
+        "walltime_index",
+    )
+
+    def __init__(
+        self,
+        version: int,
+        samplers: List[Callable[[], Sequence[float]]],
+        fused_keys: List[Tuple[str, str]],
+        fused_flat: List[str],
+        clock_meta: List[Tuple[str, slice, Tuple[str, ...], Dict[str, str]]],
+        nonfused_names: List[str],
+        nonfused_flat: Dict[str, Dict[str, str]],
+    ) -> None:
+        self.version = version
+        self.n_fused = len(fused_keys)
+        self.fused_keys = tuple(fused_keys)
+        self.fused_flat = tuple(fused_flat)
+        self.key_index = {key: i for i, key in enumerate(fused_keys)}
+        self.flat_index = {name: i for i, name in enumerate(fused_flat)}
+        self.clock_meta = tuple(clock_meta)
+        self.nonfused_names = tuple(nonfused_names)
+        self.nonfused_flat = nonfused_flat
+        self.walltime_index = self.key_index.get(("walltime", "walltime"))
+        if self.walltime_index is None:
+            self.walltime_index = self.flat_index.get("walltime")
+        fns = tuple(samplers)
+
+        if (
+            len(fns) == 2
+            and getattr(fns[0], "time3", False)
+            and getattr(fns[1], "counter_names", None) is not None
+        ):
+            # the default registry shape: collapse to one closure, zero
+            # composition overhead on the hot path
+            fns = (
+                _make_default_sampler(
+                    fns[1].counter_names,
+                    exact_cpu=getattr(fns[0], "exact_cpu", False),
+                ),
+            )
+
+        if len(fns) == 0:
+
+            def sample() -> List[float]:
+                return []
+
+        elif len(fns) == 1:
+            single = fns[0]
+
+            def sample() -> List[float]:
+                return list(single())
+
+        elif len(fns) == 2:
+            first, second = fns
+
+            def sample() -> List[float]:
+                return [*first(), *second()]
+
+        else:
+
+            def sample() -> List[float]:
+                out: List[float] = []
+                for fn in fns:
+                    out += fn()
+                return out
+
+        self.sample = sample
+
+
+_LAYOUT_CACHE: Dict[int, ChannelLayout] = {}
+
+
+def channel_layout() -> ChannelLayout:
+    """The resolved layout for the current registry version (cached)."""
+    version = _REGISTRY_VERSION[0]
+    cached = _LAYOUT_CACHE.get(version)
+    if cached is not None:
+        return cached
+    with _REGISTRY_LOCK:
+        version = _REGISTRY_VERSION[0]
+        factories = list(_REGISTRY.items())
+    layout = _build_layout(version, factories)
+    if len(_LAYOUT_CACHE) > 8:  # keep the cache tiny; stale versions are dead
+        _LAYOUT_CACHE.clear()
+    _LAYOUT_CACHE[version] = layout
+    return layout
+
+
+def _time3_sampler(
+    mono=time.monotonic,
+    perf=time.perf_counter_ns,
+    cache=_CPUTIME_CACHE,
+) -> Tuple[float, float, float]:
+    """Hand-fused walltime/cputime/perfcounter pass for the default layout:
+    one perf_counter read serves both the perfcounter channel and the cputime
+    cache age check."""
+    p = perf()
+    if p - cache[1] >= _CPUTIME_REFRESH_NS:
+        cpu = _refresh_cputime_cache(p)
+    else:
+        cpu = cache[0]
+    return (mono(), cpu, float(p))
+
+
+_time3_sampler.time3 = True  # type: ignore[attr-defined]
+
+
+def _time3_exact_sampler(
+    mono=time.monotonic,
+    cpu=time.process_time,
+    perf=time.perf_counter_ns,
+) -> Tuple[float, float, float]:
+    """Exact-mode variant of :func:`_time3_sampler` for kernels where the
+    CPU-time source is a cheap vDSO read: no cache, no lock."""
+    return (mono(), cpu(), float(perf()))
+
+
+_time3_exact_sampler.time3 = True  # type: ignore[attr-defined]
+_time3_exact_sampler.exact_cpu = True  # type: ignore[attr-defined]
+
+
+def _make_default_sampler(
+    names: Tuple[str, ...],
+    exact_cpu: bool,
+    mono=time.monotonic,
+    perf=time.perf_counter_ns,
+    cpu_read=time.process_time,
+    cache=_CPUTIME_CACHE,
+) -> Callable[[], List[float]]:
+    """Fully fused single closure for the default registry shape
+    (walltime/cputime/perfcounter followed by counter clocks): one call, one
+    output list, no composition loop."""
+    lock = _COUNTER_READ_LOCK
+    cells = tuple(_new_cell(name) for name in names)
+    fold = _fold_cells_into
+
+    def sample() -> List[float]:
+        p = perf()
+        if exact_cpu:
+            cpu = cpu_read()
+        elif p - cache[1] >= _CPUTIME_REFRESH_NS:
+            cpu = _refresh_cputime_cache(p)
+        else:
+            cpu = cache[0]
+        out = [mono(), cpu, float(p)]
+        with lock:
+            fold(out.append, cells)
+        return out
+
+    return sample
+
+
+def _merge_scalar_run(fns: List[Callable[[], float]]) -> Callable[[], Sequence[float]]:
+    if fns == [time.monotonic, _cputime_cached, _perf_counter_float]:
+        return _time3_sampler
+    if fns == [time.monotonic, time.process_time, _perf_counter_float]:
+        return _time3_exact_sampler
+    n = len(fns)
+    if n == 1:
+        f = fns[0]
+        return lambda: (f(),)
+    if n == 2:
+        f, g = fns
+        return lambda: (f(), g())
+    if n == 3:
+        f, g, h = fns
+        return lambda: (f(), g(), h())
+    if n == 4:
+        f, g, h, k = fns
+        return lambda: (f(), g(), h(), k())
+    frozen = tuple(fns)
+    return lambda: [fn() for fn in frozen]
+
+
+def _merge_samplers(
+    samplers: List[Callable[[], Sequence[float]]],
+) -> List[Callable[[], Sequence[float]]]:
+    """Fuse runs of adjacent mergeable samplers.
+
+    Channel slots of adjacent clocks are contiguous in the flat layout, so a
+    merged sampler emits the concatenated values in place of the run: runs of
+    counter clocks share one read-lock acquisition; runs of single-value raw
+    readers (the built-in time clocks) share one closure call and one tuple.
+    """
+    merged: List[Callable[[], Sequence[float]]] = []
+    counter_run: List[str] = []
+    scalar_run: List[Callable[[], float]] = []
+
+    def flush() -> None:
+        if counter_run:
+            merged.append(_make_counter_sampler(tuple(counter_run)))
+            counter_run.clear()
+        if scalar_run:
+            merged.append(_merge_scalar_run(list(scalar_run)))
+            scalar_run.clear()
+
+    for sampler in samplers:
+        names = getattr(sampler, "counter_names", None)
+        scalar = getattr(sampler, "scalar_fn", None)
+        if names is not None:
+            if scalar_run:
+                flush()
+            counter_run.extend(names)
+        elif scalar is not None:
+            if counter_run:
+                flush()
+            scalar_run.append(scalar)
+        else:
+            flush()
+            merged.append(sampler)
+    flush()
+    return merged
+
+
+def _build_layout(
+    version: int, factories: List[Tuple[str, Callable[[], Clock]]]
+) -> ChannelLayout:
+    prototypes: List[Tuple[str, Clock]] = [(name, factory()) for name, factory in factories]
+
+    # collision detection across every clock's exported channels
+    seen: Dict[str, int] = {}
+    for _, proto in prototypes:
+        for ch in proto._channels():
+            seen[ch] = seen.get(ch, 0) + 1
+
+    def flat_name(clock_name: str, channel: str) -> str:
+        return f"{clock_name}.{channel}" if seen.get(channel, 0) > 1 else channel
+
+    samplers: List[Callable[[], Sequence[float]]] = []
+    fused_keys: List[Tuple[str, str]] = []
+    fused_flat: List[str] = []
+    clock_meta: List[Tuple[str, slice, Tuple[str, ...], Dict[str, str]]] = []
+    nonfused_names: List[str] = []
+    nonfused_flat: Dict[str, Dict[str, str]] = {}
+
+    for name, proto in prototypes:
+        channels = tuple(proto._channels())
+        sampler = proto.fused_sampler()
+        if sampler is not None and channels:
+            # one-time arity check: a mis-sized user sampler would silently
+            # shift every later clock's values onto wrong channel slots
+            probe = tuple(sampler())
+            if len(probe) != len(channels):
+                raise ValueError(
+                    f"clock {name!r}: fused_sampler returned {len(probe)} "
+                    f"values for {len(channels)} channels {channels}"
+                )
+        if sampler is None or not channels:
+            nonfused_names.append(name)
+            nonfused_flat[name] = {ch: flat_name(name, ch) for ch in channels}
+            continue
+        lo = len(fused_keys)
+        samplers.append(sampler)
+        for ch in channels:
+            fused_keys.append((name, ch))
+            fused_flat.append(flat_name(name, ch))
+        clock_meta.append((name, slice(lo, len(fused_keys)), channels, dict(proto.units)))
+
+    return ChannelLayout(
+        version=version,
+        samplers=_merge_samplers(samplers),
+        fused_keys=fused_keys,
+        fused_flat=fused_flat,
+        clock_meta=clock_meta,
+        nonfused_names=nonfused_names,
+        nonfused_flat=nonfused_flat,
+    )
 
 
 def reset_default_clocks(extra: bool = False) -> None:

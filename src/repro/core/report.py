@@ -24,6 +24,26 @@ __all__ = [
 ]
 
 
+def _channel_value(flat: Dict[str, float], channel: str) -> float:
+    """Look up a flat channel, tolerating collision-namespaced layouts.
+
+    When two clocks export the same channel name the snapshot renames every
+    colliding export ``<clock>.<channel>``; a report column asked for by plain
+    name then takes the *first* namespaced export (layout order, i.e. clock
+    registration order).  Colliding clocks frequently read the same underlying
+    source, so summing would double-count; picking one is deterministic and
+    right whenever the sources agree.
+    """
+    value = flat.get(channel)
+    if value is not None:
+        return value
+    suffix = "." + channel
+    for key, v in flat.items():
+        if key.endswith(suffix):
+            return v
+    return 0.0
+
+
 def report_rows(
     db: Optional[TimerDB] = None,
     channels: Sequence[str] = ("walltime", "cputime"),
@@ -37,7 +57,7 @@ def report_rows(
         flat = timer.read_flat()
         row: Dict[str, object] = {"timer": timer.name, "count": timer.count}
         for ch in channels:
-            row[ch] = flat.get(ch, 0.0)
+            row[ch] = _channel_value(flat, ch)
         rows.append(row)
     return rows
 
@@ -98,7 +118,7 @@ def format_report(
         lines.append("-" * len(header))
         line = "Total time for simulation".ljust(name_w) + "".rjust(col_w)
         for ch in channels:
-            line += " " + f"{total.get(ch, 0.0):.8f}"[:col_w].rjust(col_w)
+            line += " " + f"{_channel_value(total, ch):.8f}"[:col_w].rjust(col_w)
         lines.append(line)
     return "\n".join(lines)
 

@@ -98,6 +98,10 @@ class Scheduler:
         self._routines: Dict[str, List[ScheduledRoutine]] = {b: [] for b in BINS}
         self._sorted: Dict[str, Optional[List[ScheduledRoutine]]] = {b: None for b in BINS}
         self._total_handle = self._db.create("simulation/total")
+        # resolved-once timer handles: bin dispatch stays on the handle-indexed
+        # TimerDB fast path instead of re-resolving names every invocation
+        self._routine_handles: Dict[str, int] = {}
+        self._bin_handles: Dict[str, int] = {}
 
     @property
     def db(self) -> TimerDB:
@@ -180,7 +184,10 @@ class Scheduler:
     # -- execution ---------------------------------------------------------------
     def _run_routine(self, routine: ScheduledRoutine, state: RunState) -> None:
         timer_name = f"{routine.bin}/{routine.qualified}"
-        handle = self._db.create(timer_name)
+        handle = self._routine_handles.get(timer_name)
+        if handle is None:
+            handle = self._db.create(timer_name)
+            self._routine_handles[timer_name] = handle
         self._db.start(handle)
         try:
             routine.fn(state)
@@ -188,7 +195,10 @@ class Scheduler:
             self._db.stop(handle)
 
     def run_bin(self, bin: str, state: RunState) -> None:
-        bin_handle = self._db.create(schedule_bin_timer_name(bin))
+        bin_handle = self._bin_handles.get(bin)
+        if bin_handle is None:
+            bin_handle = self._db.create(schedule_bin_timer_name(bin))
+            self._bin_handles[bin] = bin_handle
         self._db.start(bin_handle)
         try:
             for routine in self._order(bin):

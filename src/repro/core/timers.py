@@ -8,25 +8,177 @@ handle — the Cactus C API style (``CCTK_TimerCreate`` → handle,
 hierarchical attribution (self time vs. child time) without explicit nesting
 annotations.
 
-Overhead notes (paper: "a high performance interface"): creating a timer
-allocates (do not create in inner loops); start/stop costs the underlying clock
-samples plus one list push/pop — benchmarked in
-``benchmarks/bench_clock_overhead.py``.
+Hot-path architecture (paper: "a high performance interface"):
+
+* A timer does **not** hold a dict of clock objects on the fast path.  It holds
+  two flat float arrays — accumulated totals and window marks — laid out by the
+  process-wide :class:`~repro.core.clocks.ChannelLayout` for the current clock
+  registry version.  ``start`` is one fused sampling pass into the marks array;
+  ``stop`` is a second pass plus an element-wise diff into the accumulators.
+* Clocks without a fused sampler (user :class:`~repro.core.clocks.CallbackClock`
+  with arming hooks, exotic subclasses) keep the classic per-timer ``Clock``
+  object path and are started/stopped around the fused pass.
+* Clock instantiation is lazy: creating a timer allocates nothing clock-related;
+  the layout is resolved on first start/read and re-resolved only when the
+  registry version changes, so a clock registered mid-run appears on existing
+  timers from their next window (the paper's extensibility guarantee).
+* ``TimerDB.start/stop`` take a handle-indexed fast path — no name resolution
+  and no database RLock for already-created timers; ``create`` and name lookups
+  keep the locked slow path.
+* ``Timer.clocks`` remains available as the compatibility view: fused clocks
+  are exposed as array-backed proxy objects supporting the full Cactus clock
+  API (``read/get/set/reset/start/stop``) over the timer's flat storage.
+
+Flattened views namespace colliding channel names as ``<clock>.<channel>``
+(two clocks exporting the same channel no longer silently overwrite each
+other).
 """
 
 from __future__ import annotations
 
+import functools
 import threading
 from contextlib import contextmanager
-from typing import Callable, Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List, Mapping, Optional
 
 from . import clocks as _clocks
+from .clocks import _REGISTRY_VERSION as _VERSION  # atomic int read; hot path
 
 __all__ = ["Timer", "TimerDB", "timer_db", "timed", "reset_timer_db"]
 
 
 class TimerError(RuntimeError):
     pass
+
+
+class _FusedClockView:
+    """Cactus clock API over one fused clock's slice of a timer's flat arrays.
+
+    ``read``/``get``/``set``/``reset`` operate on the timer's accumulators for
+    this clock's channels; ``start``/``stop`` open an independent accumulation
+    window (marks local to the view) for code driving a single clock directly.
+
+    Views resolve their channel indices against the timer's *current* layout
+    on every use (cold path), so a view held across a mid-run clock
+    registration keeps working; channels no longer present resolve to ``None``
+    and read 0.0.  Layout sync itself only ever happens between windows.
+    """
+
+    __slots__ = ("name", "units", "_timer", "_channels", "_vmarks",
+                 "_cached_layout", "_cached_indices")
+
+    def __init__(self, timer: "Timer", name: str, channels, units) -> None:
+        self.name = name
+        self.units = dict(units)
+        self._timer = timer
+        self._channels = tuple(channels)
+        self._vmarks: Optional[Dict[str, float]] = None
+        self._cached_layout: Optional[_clocks.ChannelLayout] = None
+        self._cached_indices: tuple = ()
+
+    # -- helpers (timer lock held) --------------------------------------------
+    def _indices_locked(self) -> tuple:
+        layout = self._timer._layout
+        if layout is not self._cached_layout:
+            get = layout.key_index.get
+            self._cached_indices = tuple(get((self.name, ch)) for ch in self._channels)
+            self._cached_layout = layout
+        return self._cached_indices
+
+    def _current_locked(self) -> List[float]:
+        """Channel values incl. live timer window; timer lock held."""
+        timer = self._timer
+        accum = timer._accum
+        indices = self._indices_locked()
+        vals = [accum[i] if i is not None else 0.0 for i in indices]
+        live = timer._layout.sample() if (timer.running or self._vmarks) else None
+        if timer.running:
+            marks = timer._marks
+            vals = [
+                v + live[i] - marks[i] if i is not None else v
+                for v, i in zip(vals, indices)
+            ]
+        if self._vmarks is not None:
+            vmarks = self._vmarks
+            vals = [
+                v + live[i] - vmarks[ch] if i is not None and ch in vmarks else v
+                for v, i, ch in zip(vals, indices, self._channels)
+            ]
+        return vals
+
+    # -- Cactus clock API ----------------------------------------------------
+    def read(self) -> _clocks.ClockValues:
+        with self._timer._lock:
+            if not self._timer.running:
+                self._timer._sync_layout_locked()
+            vals = self._current_locked()
+        return _clocks.ClockValues(
+            values=dict(zip(self._channels, vals)), units=dict(self.units)
+        )
+
+    def get(self) -> Dict[str, float]:
+        return self.read().values
+
+    def set(self, values: Mapping[str, float]) -> None:
+        timer = self._timer
+        with timer._lock:
+            if not timer.running:
+                timer._sync_layout_locked()
+            indices = self._indices_locked()
+            accum = timer._accum
+            for i, ch in zip(indices, self._channels):
+                if i is not None:
+                    accum[i] = float(values.get(ch, 0.0))
+            if timer.running or self._vmarks is not None:
+                live = timer._layout.sample()
+                if timer.running:
+                    for i in indices:
+                        if i is not None:
+                            timer._marks[i] = live[i]
+                if self._vmarks is not None:
+                    self._vmarks = {
+                        ch: live[i]
+                        for ch, i in zip(self._channels, indices)
+                        if i is not None
+                    }
+
+    def reset(self) -> None:
+        self.set({})
+
+    def start(self) -> None:
+        timer = self._timer
+        with timer._lock:
+            if self._vmarks is not None:
+                return
+            if not timer.running:  # never re-layout under an open window
+                timer._sync_layout_locked()
+            live = timer._layout.sample()
+            self._vmarks = {
+                ch: live[i]
+                for ch, i in zip(self._channels, self._indices_locked())
+                if i is not None
+            }
+
+    def stop(self) -> None:
+        timer = self._timer
+        with timer._lock:
+            if self._vmarks is None:
+                return
+            live = timer._layout.sample()
+            accum = timer._accum
+            vmarks = self._vmarks
+            for ch, i in zip(self._channels, self._indices_locked()):
+                if i is not None and ch in vmarks:
+                    accum[i] += live[i] - vmarks[ch]
+            self._vmarks = None
+
+    def destroy(self) -> None:
+        with self._timer._lock:
+            self._vmarks = None
+
+    @property
+    def is_running(self) -> bool:
+        return self._vmarks is not None
 
 
 class Timer:
@@ -36,84 +188,240 @@ class Timer:
     __slots__ = (
         "name",
         "handle",
-        "clocks",
         "count",
         "running",
-        "_clock_version",
         "parent_name",
         "_lock",
+        "_layout",
+        "_accum",
+        "_marks",
+        "_nonfused",
+        "_views",
     )
 
     def __init__(self, name: str, handle: int) -> None:
         self.name = name
         self.handle = handle
-        self.clocks: Dict[str, _clocks.Clock] = _clocks.make_all_clocks()
-        self._clock_version = _clocks.registry_version()
         self.count = 0  # number of completed start/stop windows
         self.running = False
         self.parent_name: Optional[str] = None
         self._lock = threading.Lock()
+        # lazy: resolved on first start/read, re-resolved on registry bumps
+        self._layout: Optional[_clocks.ChannelLayout] = None
+        self._accum: List[float] = []
+        self._marks: List[float] = []
+        self._nonfused: Dict[str, _clocks.Clock] = {}
+        self._views: Optional[Dict[str, object]] = None
+
+    # -- layout management (lock held) ----------------------------------------
+    def _sync_layout_locked(self) -> None:
+        """Adopt the current registry layout, carrying accumulated values over
+        by (clock, channel) key.  Must not be called mid-window."""
+        layout = self._layout
+        if layout is not None and layout.version == _VERSION[0]:
+            return
+        new = _clocks.channel_layout()
+        if new is layout:
+            return
+        accum = [0.0] * new.n_fused
+        if layout is not None:
+            old_accum = self._accum
+            get = new.key_index.get
+            for i, key in enumerate(layout.fused_keys):
+                j = get(key)
+                if j is not None:
+                    accum[j] = old_accum[i]
+        nonfused: Dict[str, _clocks.Clock] = {}
+        for name in new.nonfused_names:
+            clock = self._nonfused.get(name)
+            nonfused[name] = clock if clock is not None else _clocks.make_clock(name)
+        self._layout = new
+        self._accum = accum
+        self._nonfused = nonfused
+        self._views = None
 
     # -- lifecycle -----------------------------------------------------------
-    def _refresh_clocks(self) -> None:
-        """Pick up newly registered clocks (extensibility: a clock registered
-        mid-run appears on existing timers from their next window)."""
-        if self._clock_version == _clocks.registry_version():
-            return
-        existing = set(self.clocks)
-        for name in _clocks.clock_names():
-            if name not in existing:
-                self.clocks[name] = _clocks.make_clock(name)
-        for name in list(self.clocks):
-            if name not in _clocks.clock_names():
-                del self.clocks[name]
-        self._clock_version = _clocks.registry_version()
-
     def start(self) -> None:
         with self._lock:
             if self.running:
                 raise TimerError(f"timer {self.name!r} already running")
-            self._refresh_clocks()
-            for clock in self.clocks.values():
-                clock.start()
+            layout = self._layout
+            if layout is None or layout.version != _VERSION[0]:
+                self._sync_layout_locked()
+                layout = self._layout
+            # sample before flipping state: a sampler exception must not leave
+            # the timer stuck "running" with stale marks
+            marks = layout.sample()
+            if self._nonfused:
+                started = []
+                try:
+                    for clock in self._nonfused.values():
+                        clock.start()
+                        started.append(clock)
+                except BaseException:
+                    # unwind: a failed arming hook must not leave earlier
+                    # clocks mid-window (their next start would no-op)
+                    for clock in started:
+                        clock.stop()
+                    raise
+            self._marks = marks
             self.running = True
 
     def stop(self) -> None:
         with self._lock:
             if not self.running:
                 raise TimerError(f"timer {self.name!r} is not running")
-            for clock in self.clocks.values():
-                clock.stop()
+            # stop non-fused clocks first: their on_stop hooks can raise, and
+            # a retried stop() must not re-apply the fused diff (Clock.stop
+            # no-ops when already stopped, so the retry is safe either way)
+            if self._nonfused:
+                for clock in self._nonfused.values():
+                    clock.stop()
+            now = self._layout.sample()
+            marks = self._marks
+            self._accum = [
+                a + v - m for a, v, m in zip(self._accum, now, marks)
+            ]
             self.running = False
             self.count += 1
 
     def reset(self) -> None:
         with self._lock:
-            for clock in self.clocks.values():
+            if self._layout is not None:
+                self._accum = [0.0] * self._layout.n_fused
+                if self.running:
+                    self._marks = self._layout.sample()
+            for clock in self._nonfused.values():
                 clock.reset()
             self.count = 0
+
+    # -- queries ---------------------------------------------------------------
+    def _values_locked(self) -> List[float]:
+        vals = list(self._accum)
+        if self.running:
+            now = self._layout.sample()
+            marks = self._marks
+            vals = [a + n - m for a, n, m in zip(vals, now, marks)]
+        return vals
 
     def read(self) -> Dict[str, _clocks.ClockValues]:
         """Readings for all clocks (running timers report up-to-now values)."""
         with self._lock:
-            return {name: clock.read() for name, clock in self.clocks.items()}
+            if not self.running:
+                self._sync_layout_locked()
+            layout = self._layout
+            vals = self._values_locked()
+            out: Dict[str, _clocks.ClockValues] = {}
+            for name, sl, channels, units in layout.clock_meta:
+                out[name] = _clocks.ClockValues(
+                    values=dict(zip(channels, vals[sl])), units=dict(units)
+                )
+            for name, clock in self._nonfused.items():
+                out[name] = clock.read()
+        return out
 
     def read_flat(self) -> Dict[str, float]:
-        """Flattened {channel: value} view across all clocks."""
-        flat: Dict[str, float] = {}
-        for values in self.read().values():
-            flat.update(values.values)
+        """Flattened {channel: value} view across all clocks.
+
+        Channel names colliding across clocks come back namespaced as
+        ``<clock>.<channel>`` (every colliding export is renamed, so no clock's
+        reading silently overwrites another's).
+        """
+        with self._lock:
+            if not self.running:
+                self._sync_layout_locked()
+            layout = self._layout
+            flat = dict(zip(layout.fused_flat, self._values_locked()))
+            for name, clock in self._nonfused.items():
+                mapping = layout.nonfused_flat.get(name, {})
+                for ch, v in clock.read().values.items():
+                    flat[mapping.get(ch, ch)] = v
         return flat
 
     def seconds(self) -> float:
         """Accumulated wall seconds (the most common query)."""
-        clock = self.clocks.get("walltime")
-        return clock.read().scalar() if clock is not None else 0.0
+        with self._lock:
+            if not self.running:
+                self._sync_layout_locked()
+            layout = self._layout
+            idx = layout.walltime_index
+            if idx is None:
+                clock = self._nonfused.get("walltime")
+                return clock.read().scalar() if clock is not None else 0.0
+            if not self.running:
+                return self._accum[idx]
+            now = self._layout.sample()
+            return self._accum[idx] + now[idx] - self._marks[idx]
+
+    def channel(self, name: str) -> float:
+        """One flat channel's current value (0.0 when absent) — the cheap
+        single-metric read used by cross-process reducers."""
+        with self._lock:
+            if not self.running:
+                self._sync_layout_locked()
+            idx = self._layout.flat_index.get(name)
+            if idx is not None:
+                if not self.running:
+                    return self._accum[idx]
+                now = self._layout.sample()
+                return self._accum[idx] + now[idx] - self._marks[idx]
+        return self.read_flat().get(name, 0.0)
+
+    def set_channel(self, name: str, value: float) -> None:
+        """Directly set one flat channel's accumulated value (Cactus
+        ``CCTK_TimerSet`` analogue; used by reducers publishing remote
+        measurements into the database)."""
+        with self._lock:
+            if not self.running:
+                self._sync_layout_locked()
+            idx = self._layout.flat_index.get(name)
+            if idx is None:
+                # plain name that got collision-namespaced: the canonical
+                # export is the clock named like its channel (e.g. walltime),
+                # mirroring the read-side fallback in seconds()
+                idx = self._layout.key_index.get((name, name))
+            if idx is None:
+                for clock_name, clock in self._nonfused.items():
+                    mapping = self._layout.nonfused_flat.get(clock_name, {})
+                    for ch, flat in mapping.items():
+                        if flat == name:
+                            values = dict(clock.read().values)
+                            values[ch] = float(value)
+                            clock.set(values)
+                            return
+                raise TimerError(
+                    f"timer {self.name!r} has no channel {name!r}"
+                )
+            self._accum[idx] = float(value)
+            if self.running:
+                now = self._layout.sample()
+                self._marks[idx] = now[idx]
+
+    @property
+    def clocks(self) -> Dict[str, object]:
+        """Compatibility view: {clock name: clock object}.  Fused clocks are
+        array-backed proxies over this timer's flat storage; slow-path clocks
+        are the real per-timer ``Clock`` instances."""
+        with self._lock:
+            if not self.running:
+                self._sync_layout_locked()
+            if self._views is None:
+                layout = self._layout
+                views: Dict[str, object] = {}
+                for name, _sl, channels, units in layout.clock_meta:
+                    views[name] = _FusedClockView(self, name, channels, units)
+                views.update(self._nonfused)
+                self._views = views
+            return self._views
 
 
 class TimerDB:
     """The queryable timer database.  Any routine can obtain timing statistics
-    for any other routine by querying this database (paper Sec. 2)."""
+    for any other routine by querying this database (paper Sec. 2).
+
+    ``start``/``stop`` by integer handle bypass the database lock entirely:
+    the timer list is append-only, so an index read is safe under the GIL.
+    """
 
     def __init__(self) -> None:
         self._lock = threading.RLock()
@@ -159,27 +467,48 @@ class TimerDB:
 
     # -- running stack (hierarchy) ----------------------------------------------
     def _stack(self) -> List[str]:
-        if not hasattr(self._tls, "stack"):
-            self._tls.stack = []
-        return self._tls.stack
+        try:
+            return self._tls.stack
+        except AttributeError:
+            stack: List[str] = []
+            self._tls.stack = stack
+            return stack
 
     def start(self, ref: "int | str") -> None:
-        timer = self.get(ref)
-        stack = self._stack()
+        timers = self._timers
+        if type(ref) is int and 0 <= ref < len(timers):
+            timer = timers[ref]  # fast path: append-only list, no lock
+        else:
+            timer = self.get(ref)
+        try:
+            stack = self._tls.stack
+        except AttributeError:
+            stack = self._tls.stack = []
         timer.parent_name = stack[-1] if stack else None
         timer.start()
         stack.append(timer.name)
 
     def stop(self, ref: "int | str") -> None:
-        timer = self.get(ref)
+        timers = self._timers
+        if type(ref) is int and 0 <= ref < len(timers):
+            timer = timers[ref]
+        else:
+            timer = self.get(ref)
         timer.stop()
-        stack = self._stack()
-        # Tolerate out-of-order stops (paper allows overlapping measurement
-        # windows); remove the most recent occurrence.
-        for i in range(len(stack) - 1, -1, -1):
-            if stack[i] == timer.name:
-                del stack[i]
-                break
+        try:
+            stack = self._tls.stack
+        except AttributeError:
+            stack = self._tls.stack = []
+        if stack:
+            if stack[-1] == timer.name:  # common LIFO case
+                stack.pop()
+                return
+            # Tolerate out-of-order stops (paper allows overlapping measurement
+            # windows); remove the most recent occurrence.
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i] == timer.name:
+                    del stack[i]
+                    break
 
     def reset(self, ref: "int | str") -> None:
         self.get(ref).reset()
@@ -209,10 +538,14 @@ class TimerDB:
     # -- sugar -----------------------------------------------------------------
     @contextmanager
     def timing(self, name: str) -> Iterator[Timer]:
-        handle = self.create(name)
+        # dict reads are atomic and names are never deleted, so the common
+        # already-created case skips the database lock entirely
+        handle = self._by_name.get(name)
+        if handle is None:
+            handle = self.create(name)
         self.start(handle)
         try:
-            yield self.get(handle)
+            yield self._timers[handle]
         finally:
             self.stop(handle)
 
@@ -238,13 +571,11 @@ def timed(name: Optional[str] = None) -> Callable:
     def deco(fn: Callable) -> Callable:
         label = name or f"func/{fn.__qualname__}"
 
+        @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             with _DB.timing(label):
                 return fn(*args, **kwargs)
 
-        wrapper.__name__ = fn.__name__
-        wrapper.__qualname__ = fn.__qualname__
-        wrapper.__doc__ = fn.__doc__
         return wrapper
 
     return deco

@@ -117,6 +117,8 @@ class StragglerDetector:
         if not db.exists(timer_name):
             return
         timer = db.get(timer_name)
+        # seconds() is the single-channel fast read off the flat accumulator
+        # and stays correct when a collision namespaces the walltime channel
         seconds, count = timer.seconds(), timer.count
         last_seconds, last_count = self._timer_marks.get((host, timer_name), (0.0, 0))
         d_count = count - last_count
@@ -169,15 +171,18 @@ class StragglerDetector:
     def publish_to_db(self, db: TimerDB, prefix: str = "DIST") -> None:
         """Mirror per-host totals into ``{prefix}/host{h}::step`` timer rows.
 
-        Uses the clock ``set`` API (Cactus ``CCTK_TimerSet`` analogue), so the
-        fleet-health rows render in ``core.report.format_report`` exactly like
-        locally measured timers.
+        Uses the timer ``set_channel`` API (Cactus ``CCTK_TimerSet`` analogue),
+        so the fleet-health rows render in ``core.report.format_report``
+        exactly like locally measured timers.
         """
+        from ..core.timers import TimerError
+
         for host, (count, total) in self.host_stats().items():
             timer = db.get(db.create(f"{prefix}/host{host}::step"))
-            walltime = timer.clocks.get("walltime")
-            if walltime is not None:
-                walltime.set({"walltime": total})
+            try:
+                timer.set_channel("walltime", total)
+            except TimerError:  # no walltime clock registered: count-only row
+                pass
             timer.count = count
 
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
+from ..core.timers import timed
 from ..dist.context import use_sharding
 from ..dist.sharding import DEFAULT_RULES, FSDP_RULES, ShardingRules, spec_for, tree_shardings
 from ..models import model as M
@@ -137,8 +138,12 @@ class BuiltStep:
     in_shardings: Tuple
     out_shardings: Any
     abstract_state: Dict[str, Any]  # {"params": ..., "opt_state": ...} abstract
+    #: tokens consumed per invocation — launchers feed this into the "tokens"
+    #: counter channel (one counter_cell bump per executed step)
+    tokens_per_call: int = 0
 
 
+@timed("STARTUP/steps::make_train_step")
 def make_train_step(
     cfg: ArchConfig,
     mesh: Mesh,
@@ -213,9 +218,11 @@ def make_train_step(
         in_shardings=(p_shard, o_shard, b_shard),
         out_shardings=(p_shard, o_shard, None),
         abstract_state={"params": p_abs, "opt_state": o_abs},
+        tokens_per_call=shape.global_batch * shape.seq_len,
     )
 
 
+@timed("STARTUP/steps::make_prefill_step")
 def make_prefill_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: ShapeConfig) -> BuiltStep:
     p_axes = M.param_axes(cfg)
     p_abs = M.abstract_params(cfg)
@@ -241,9 +248,11 @@ def make_prefill_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: 
         in_shardings=(p_shard, b_shard, c_shard),
         out_shardings=(c_shard, None),
         abstract_state={"params": p_abs},
+        tokens_per_call=shape.global_batch * shape.seq_len,
     )
 
 
+@timed("STARTUP/steps::make_serve_step")
 def make_serve_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: ShapeConfig) -> BuiltStep:
     p_axes = M.param_axes(cfg)
     p_abs = M.abstract_params(cfg)
@@ -270,6 +279,7 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: Sh
         in_shardings=(p_shard, c_shard, tok_shard),
         out_shardings=(c_shard, None),
         abstract_state={"params": p_abs},
+        tokens_per_call=shape.global_batch,  # one new token per sequence
     )
 
 

@@ -32,11 +32,11 @@ from ..core import (
     TimerLogger,
     bin_distribution,
     format_report,
-    increment_counter,
     param_registry,
     straggler_rows,
     timer_db,
 )
+from ..core.clocks import CounterClock, counter_cell, register_clock
 from ..data import DataLoader, SyntheticConfig, SyntheticLM
 from ..dist.meshutil import local_mesh
 from ..dist.stragglers import StragglerDetector
@@ -110,6 +110,16 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
     monitor = None
     detector = StragglerDetector(n_hosts=1)
     model_flops = _flops_per_step(cfg, settings.global_batch * settings.seq_len)
+    # training-event clock registered mid-run (the paper's extensibility path:
+    # every timer picks it up from its next window) + lock-free channel cells
+    # resolved once for the hot loop
+    register_clock(
+        "events",
+        lambda: CounterClock("events", {"tokens": "count", "steps": "count"}),
+    )
+    bump_flops = counter_cell("xla_flops")
+    bump_tokens = counter_cell("tokens")
+    bump_steps = counter_cell("steps")
 
     # --- STARTUP ----------------------------------------------------------------
     def startup(s: RunState) -> None:
@@ -197,7 +207,9 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
         metrics = jax.block_until_ready(metrics)
         s["params"], s["opt_state"] = params, opt_state
         s["metrics"] = {k: float(v) for k, v in metrics.items()}
-        increment_counter("xla_flops", model_flops)
+        bump_flops(model_flops)
+        bump_tokens(float(s["built"].tokens_per_call))
+        bump_steps(1.0)
 
     sch.schedule(train_step, bin="EVOL", thorn="trainer")
 

@@ -87,3 +87,54 @@ def test_multivalue_clock():
     clk.stop()
     values = clk.read()
     assert values["xla_flops"] == 1e9 and values["xla_bytes"] == 2e6
+
+
+def test_counter_cell_fast_path():
+    """counter_cell resolves a channel once; the returned cell is the lock-free
+    hot-loop increment and is visible to name-based reads and clock windows."""
+    cell = C.counter_cell("cell_bytes")
+    before = C.counter_channel("cell_bytes")
+    cell(10.0)
+    cell(5.0)
+    assert C.counter_channel("cell_bytes") == before + 15.0
+    C.register_clock(
+        "cellclk", lambda: C.CounterClock("cellclk", {"cell_bytes": "bytes"})
+    )
+    clk = C.make_clock("cellclk")
+    clk.start()
+    cell(2.5)
+    C.increment_counter("cell_bytes", 2.5)  # both APIs hit the same channel
+    clk.stop()
+    assert clk.read()["cell_bytes"] == 5.0
+
+
+def test_channel_layout_caching_and_version_stamp():
+    layout = C.channel_layout()
+    assert C.channel_layout() is layout  # cached per registry version
+    assert layout.version == C.registry_version()
+    C.register_clock("extra", C.WalltimeClock)
+    new = C.channel_layout()
+    assert new is not layout and new.version == C.registry_version()
+
+
+def test_fused_sample_matches_channel_order():
+    layout = C.channel_layout()
+    values = layout.sample()
+    assert len(values) == len(layout.fused_flat) == layout.n_fused
+    idx = layout.flat_index["walltime"]
+    import time as _t
+    lo = _t.monotonic()
+    assert abs(values[idx] - lo) < 5.0  # same clock source, sampled just before
+
+
+def test_increment_counter_rejects_non_numeric_without_poisoning():
+    """Regression: a bad amount raises at the call site and must not leave the
+    channel permanently unreadable."""
+    C.increment_counter("poison_test", 3)          # int coerced
+    with pytest.raises(TypeError):
+        C.increment_counter("poison_test", None)
+    assert C.counter_channel("poison_test") == 3.0  # channel still readable
+    cell = C.counter_cell("poison_test")
+    cell("junk")  # raw cells skip validation; fold drops non-numerics
+    cell(2.0)
+    assert C.counter_channel("poison_test") == 5.0

@@ -138,3 +138,160 @@ def test_reset_all():
     db.start(h); db.stop(h)
     db.reset_all()
     assert db.get(h).count == 0 and db.get(h).seconds() == 0.0
+
+
+def test_read_flat_namespaces_colliding_channels():
+    """Two clocks exporting the same channel name must not silently overwrite
+    each other in flattened views: every colliding export is renamed
+    ``<clock>.<channel>``."""
+    C.register_clock("src_a", lambda: C.CounterClock("src_a", {"dup": "count"}))
+    C.register_clock("src_b", lambda: C.CounterClock("src_b", {"dup": "count"}))
+    db = timer_db()
+    h = db.create("t")
+    db.start(h)
+    C.increment_counter("dup", 7.0)
+    db.stop(h)
+    flat = db.get(h).read_flat()
+    assert "dup" not in flat
+    assert flat["src_a.dup"] == 7.0 and flat["src_b.dup"] == 7.0
+    # non-colliding channels keep their plain names
+    assert "walltime" in flat
+
+
+def test_timed_preserves_introspection():
+    """timed() must behave like functools.wraps: decorated step functions stay
+    introspectable (signature, __wrapped__, __module__)."""
+    import inspect
+
+    from repro.core.timers import timed
+
+    @timed("wrapped")
+    def stepper(x: int, y: int = 2) -> int:
+        """Docstring survives."""
+        return x + y
+
+    assert stepper.__name__ == "stepper"
+    assert stepper.__doc__ == "Docstring survives."
+    assert stepper.__module__ == __name__
+    assert stepper.__wrapped__ is not None
+    assert list(inspect.signature(stepper).parameters) == ["x", "y"]
+    assert stepper(1) == 3
+
+
+def test_callback_clock_slow_path_on_timers():
+    """A CallbackClock registered mid-run takes the per-timer slow path but
+    still appears on existing timers from their next window, with arming
+    hooks firing once per window."""
+    events = {"n": 0.0, "starts": 0, "stops": 0}
+
+    def arm():
+        events["starts"] += 1
+
+    def disarm():
+        events["stops"] += 1
+
+    db = timer_db()
+    h = db.create("t")
+    db.start(h); db.stop(h)  # window before registration
+    C.register_clock(
+        "cb",
+        lambda: C.CallbackClock(
+            "cb", lambda: {"cb_events": events["n"]}, {"cb_events": "count"},
+            on_start=arm, on_stop=disarm,
+        ),
+    )
+    db.start(h)
+    events["n"] += 4
+    db.stop(h)
+    assert db.get(h).read_flat()["cb_events"] == 4.0
+    assert events["starts"] == 1 and events["stops"] == 1
+
+
+def test_view_start_during_open_timer_window_does_not_corrupt():
+    """Regression: a clock-view window opened while the timer is running and
+    the registry changed mid-window must not resync the layout (which would
+    desync the open window's marks)."""
+    db = timer_db()
+    h = db.create("t")
+    view = db.get(h).clocks["walltime"]
+    db.start(h)
+    # registry bump while the timer window is open
+    C.register_clock("late2", lambda: C.CounterClock("late2", {"late2_ev": "count"}))
+    view.start()   # must not re-layout mid-window
+    view.stop()
+    db.stop(h)     # would IndexError if the layout had been swapped mid-window
+    assert db.get(h).count == 1
+    # the new clock appears from the next window
+    db.start(h)
+    C.increment_counter("late2_ev", 2.0)
+    db.stop(h)
+    assert db.get(h).read_flat()["late2_ev"] == 2.0
+
+
+def test_view_survives_layout_change():
+    """A held view keeps working after the registry (and thus layout) changes."""
+    db = timer_db()
+    h = db.create("t")
+    view = db.get(h).clocks["walltime"]
+    view.set({"walltime": 3.0})
+    C.register_clock("late3", lambda: C.CounterClock("late3", {"late3_ev": "count"}))
+    assert view.read()["walltime"] == pytest.approx(3.0)  # carried across layouts
+    view.set({"walltime": 5.0})
+    assert db.get(h).read_flat()["walltime"] == pytest.approx(5.0)
+
+
+def test_poisoned_cell_does_not_break_timer_windows():
+    """Regression: junk appended through a raw counter_cell must not make
+    every subsequent timer window raise (fused fold drops it, like
+    counter_channel does)."""
+    db = timer_db()
+    h = db.create("t")
+    C.counter_cell("io_bytes")("junk")
+    db.start(h)
+    C.counter_cell("io_bytes")(32.0)
+    db.stop(h)
+    assert db.get(h).read_flat()["io_bytes"] == 32.0
+
+
+def test_failed_sampler_does_not_leave_timer_stuck_running():
+    """Regression: an exception escaping a fused sampler during start must not
+    leave the timer permanently in the running state."""
+    calls = {"n": 0}
+
+    class ExplodingClock(C.Clock):
+        name = "boom"
+        units = {"boom": "count"}
+
+        def _now(self):
+            return {"boom": 0.0}
+
+        def fused_sampler(self):
+            def sample():
+                calls["n"] += 1
+                if calls["n"] == 1:
+                    raise RuntimeError("sampler exploded")
+                return (0.0,)
+            return sample
+
+    C.register_clock("boom", ExplodingClock)
+    db = timer_db()
+    h = db.create("t")
+    with pytest.raises(RuntimeError):
+        db.start(h)
+    assert not db.get(h).running
+    db.start(h)  # recovers once the sampler behaves
+    db.stop(h)
+    assert db.get(h).count == 1
+
+
+def test_set_channel_tolerates_walltime_collision():
+    """Regression: publishing remote walltime totals (stragglers) must keep
+    working when another clock also exports a 'walltime' channel."""
+    C.register_clock(
+        "other", lambda: C.CounterClock("other", {"walltime": "sec"})
+    )
+    db = timer_db()
+    timer = db.get(db.create("DIST/host0::step"))
+    timer.set_channel("walltime", 12.5)
+    assert timer.seconds() == pytest.approx(12.5)
+    assert timer.read_flat()["walltime.walltime"] == pytest.approx(12.5)

@@ -1,0 +1,164 @@
+"""Concurrency exactness of the lock-free timing hot path.
+
+The PR-2 rearchitecture made ``increment_counter`` lock-free (per-channel
+pending lists folded on read) and gave ``TimerDB.start/stop`` a lock-skipping
+handle fast path.  These tests hammer both from many threads and assert that
+counts and accumulated totals are *exact* — no lost updates."""
+
+import threading
+
+import pytest
+
+from repro.core import clocks as C
+from repro.core.timers import timer_db
+
+
+N_THREADS = 8
+
+
+def _run_threads(worker):
+    errors = []
+
+    def wrapped(i):
+        try:
+            worker(i)
+        except Exception as exc:  # noqa: BLE001 - surfaced via assert below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=wrapped, args=(i,)) for i in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+
+def test_concurrent_distinct_timers_exact_counts():
+    db = timer_db()
+    windows = 300
+
+    def worker(i):
+        for _ in range(windows):
+            with db.timing(f"conc/thread-{i}"):
+                pass
+
+    _run_threads(worker)
+    for i in range(N_THREADS):
+        timer = db.get(f"conc/thread-{i}")
+        assert timer.count == windows
+        assert timer.read_flat()["walltime"] >= 0.0
+
+
+def test_concurrent_shared_timer_exact_counts_and_captured_events():
+    """A shared timer serialized by an external mutex: every window completes,
+    every captured counter event lands in exactly one window."""
+    db = timer_db()
+    gate = threading.Lock()
+    windows = 150
+    C.register_clock(
+        "conc", lambda: C.CounterClock("conc", {"conc_events": "count"})
+    )
+    bump = C.counter_cell("conc_events")
+    baseline = C.counter_channel("conc_events")
+
+    def worker(i):
+        for _ in range(windows):
+            with gate:
+                with db.timing("conc/shared"):
+                    bump(1.0)
+
+    _run_threads(worker)
+    timer = db.get("conc/shared")
+    assert timer.count == N_THREADS * windows
+    assert C.counter_channel("conc_events") - baseline == N_THREADS * windows
+    # every bump happened inside some window of this timer, so the timer's
+    # own captured delta is exact too
+    assert timer.read_flat().get("conc_events", 0.0) == N_THREADS * windows
+
+
+def test_concurrent_increment_counter_no_lost_updates():
+    per_thread = 4000
+    shared0 = C.counter_channel("conc_shared")
+
+    def worker(i):
+        own = f"conc_own_{i}"
+        for _ in range(per_thread):
+            C.increment_counter("conc_shared", 1.0)
+            C.increment_counter(own, 2.0)
+
+    _run_threads(worker)
+    assert C.counter_channel("conc_shared") - shared0 == N_THREADS * per_thread
+    for i in range(N_THREADS):
+        assert C.counter_channel(f"conc_own_{i}") == per_thread * 2.0
+
+
+def test_concurrent_counter_cells_no_lost_updates():
+    """The hot-path cell API: one shared cell hammered from all threads while
+    readers concurrently fold."""
+    per_thread = 4000
+    cell = C.counter_cell("conc_cell")
+    base = C.counter_channel("conc_cell")
+    stop_reading = threading.Event()
+
+    def reader():
+        while not stop_reading.is_set():
+            C.counter_channel("conc_cell")  # concurrent folds must not drop appends
+
+    reader_thread = threading.Thread(target=reader)
+    reader_thread.start()
+    try:
+        _run_threads(lambda i: [cell(1.0) for _ in range(per_thread)])
+    finally:
+        stop_reading.set()
+        reader_thread.join()
+    assert C.counter_channel("conc_cell") - base == N_THREADS * per_thread
+
+
+def test_clock_registered_while_hammering():
+    """Extensibility under concurrency: registering a clock mid-hammer never
+    corrupts running windows; timers pick the clock up from a later window."""
+    db = timer_db()
+    windows = 200
+    started = threading.Barrier(N_THREADS + 1)
+
+    def worker(i):
+        started.wait()
+        for _ in range(windows):
+            with db.timing(f"conc/reg-{i}"):
+                pass
+
+    registered = []
+
+    def registrar():
+        started.wait()
+        C.register_clock(
+            "midrun", lambda: C.CounterClock("midrun", {"midrun_events": "count"})
+        )
+        registered.append(True)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(N_THREADS)]
+    threads.append(threading.Thread(target=registrar))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert registered
+    for i in range(N_THREADS):
+        timer = db.get(f"conc/reg-{i}")
+        assert timer.count == windows
+        # next window after registration sees the new channel
+        with db.timing(f"conc/reg-{i}"):
+            C.increment_counter("midrun_events", 1.0)
+        assert timer.read_flat()["midrun_events"] >= 1.0
+
+
+def test_shared_timer_double_start_still_raises():
+    """The fast path must preserve the double-start contract."""
+    from repro.core.timers import TimerError
+
+    db = timer_db()
+    h = db.create("conc/double")
+    db.start(h)
+    with pytest.raises(TimerError):
+        db.start(h)
+    db.stop(h)
