@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import os
 import sys
-from typing import List, Tuple
 
 import numpy as np
 
@@ -26,8 +25,8 @@ from amr_adaptive_checkpoint import AMRSettings, run_experiment  # noqa: E402
 from repro.checkpoint import CheckpointManager  # noqa: E402
 
 
-def run(iterations: int = 90) -> List[Tuple[str, float, str]]:
-    rows: List[Tuple[str, float, str]] = []
+def run(iterations: int = 90) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
     fixed = run_experiment(AMRSettings(mode="fixed", iterations=iterations))
     adaptive = run_experiment(AMRSettings(mode="adaptive", iterations=iterations))
 

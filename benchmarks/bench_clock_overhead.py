@@ -20,7 +20,6 @@ import json
 import platform
 import sys
 import time
-from typing import List, Tuple
 
 
 def _time_op(fn, n: int = 20000, scale: float = 1.0, per: int = 1, repeats: int = 5) -> float:
@@ -35,13 +34,13 @@ def _time_op(fn, n: int = 20000, scale: float = 1.0, per: int = 1, repeats: int 
     return best / (n * per) * 1e6
 
 
-def run(scale: float = 1.0) -> List[Tuple[str, float, str]]:
+def run(scale: float = 1.0) -> list[tuple[str, float, str]]:
     """``scale`` shrinks/grows every iteration count (CI smoke uses ~0.05)."""
     from repro.core import clocks as C
     from repro.core.schedule import RunState, Scheduler
     from repro.core.timers import reset_timer_db
 
-    rows: List[Tuple[str, float, str]] = []
+    rows: list[tuple[str, float, str]] = []
 
     # -- individual clock objects (classic slow-path API) ---------------------
     for name in ("walltime", "cputime", "perfcounter"):

@@ -3,14 +3,12 @@ a real (small) training run through the full driver."""
 
 from __future__ import annotations
 
-from typing import List, Tuple
-
 from repro.core.params import reset_param_registry
 from repro.core.timers import reset_timer_db
 from repro.launch.train import TrainSettings, run_training
 
 
-def run() -> List[Tuple[str, float, str]]:
+def run() -> list[tuple[str, float, str]]:
     reset_timer_db()
     reset_param_registry()
     summary = run_training(TrainSettings(
@@ -18,7 +16,7 @@ def run() -> List[Tuple[str, float, str]]:
         ckpt_dir="/tmp/bench_stage_ckpt", ckpt_mode="adaptive",
         ckpt_max_fraction=0.2, report_every=0, restore=False,
     ))
-    rows: List[Tuple[str, float, str]] = []
+    rows: list[tuple[str, float, str]] = []
     total = sum(summary["bin_seconds"].values()) or 1.0
     for bin_name, seconds in sorted(summary["bin_seconds"].items()):
         rows.append((f"bin_seconds/{bin_name}", seconds * 1e6, "us_total"))

@@ -3,14 +3,13 @@
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
 
 from repro.core.report import format_report
 from repro.core.timers import reset_timer_db
 
 
-def run() -> List[Tuple[str, float, str]]:
-    rows: List[Tuple[str, float, str]] = []
+def run() -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
     for n_timers in (10, 100, 500):
         db = reset_timer_db()
         for i in range(n_timers):

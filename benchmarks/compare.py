@@ -19,25 +19,43 @@ within a run; this extends it across process launches).
 
     python -m benchmarks.compare benchmarks/baselines/clock_overhead.json \
         BENCH_1.json BENCH_2.json BENCH_3.json --max-ratio 2.0
+
+Re-baselining from CI instead of the committed container numbers:
+
+* ``--emit-baseline OUT`` writes the merged per-row minimum of the fresh runs
+  as a baseline-shaped JSON.  The CI bench-smoke job emits and uploads this as
+  the canonical re-baseline artifact, measured on the *actual runner fleet*.
+* ``--baseline-from-artifact PATH`` reads the baseline from a downloaded CI
+  artifact — a JSON file or a directory containing one (as
+  ``actions/download-artifact`` produces).  Pass ``-`` as the positional
+  baseline so no fresh run is mistaken for it::
+
+      python -m benchmarks.compare - BENCH_1.json BENCH_2.json \
+          --baseline-from-artifact ./artifact-dir
+
+  To re-baseline permanently, commit the artifact's
+  ``BENCH_baseline_candidate.json`` over ``benchmarks/baselines/``.
+  ``- BENCH_*.json --emit-baseline OUT`` (no artifact) emits without gating.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
 import sys
-from typing import Dict
 
 
-def _load_rows(path: str) -> Dict[str, float]:
+def _load_rows(path: str) -> dict[str, float]:
     with open(path) as f:
         payload = json.load(f)
     return {row["name"]: float(row["us_per_call"]) for row in payload["rows"]}
 
 
 def compare(
-    base: Dict[str, float],
-    fresh: Dict[str, float],
+    base: dict[str, float],
+    fresh: dict[str, float],
     max_ratio: float = 2.0,
     min_us: float = 0.05,
 ) -> int:
@@ -63,9 +81,9 @@ def compare(
     return failures
 
 
-def _min_rows(paths) -> Dict[str, float]:
+def _min_rows(paths) -> dict[str, float]:
     """Per-row minimum across several fresh runs (noise filter)."""
-    merged: Dict[str, float] = {}
+    merged: dict[str, float] = {}
     for path in paths:
         for name, value in _load_rows(path).items():
             if name not in merged or value < merged[name]:
@@ -73,18 +91,76 @@ def _min_rows(paths) -> Dict[str, float]:
     return merged
 
 
+def _resolve_artifact(path: str) -> str:
+    """A downloaded-artifact baseline: the JSON itself, or the directory
+    ``actions/download-artifact`` unpacked it into."""
+    if os.path.isdir(path):
+        candidates = sorted(glob.glob(os.path.join(path, "BENCH_*.json"))) or sorted(
+            glob.glob(os.path.join(path, "*.json"))
+        )
+        if not candidates:
+            raise SystemExit(f"no baseline JSON found inside artifact dir {path!r}")
+        return candidates[0]
+    return path
+
+
+def _emit_baseline(out_path: str, fresh_paths, merged: dict[str, float]) -> None:
+    """Write the min-of-N merge as a baseline-shaped JSON (same schema the
+    bench emits, so it can be committed over ``benchmarks/baselines/`` or fed
+    back through ``--baseline-from-artifact`` unchanged)."""
+    with open(fresh_paths[0]) as f:
+        payload = json.load(f)
+    payload["rows"] = [
+        {"name": name, "us_per_call": merged[name]} for name in sorted(merged)
+    ]
+    payload["rebaseline"] = {"merged_from": len(fresh_paths), "filter": "per-row min"}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"re-baseline candidate ({len(merged)} rows) written to {out_path}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
-    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("baseline",
+                    help="committed baseline JSON, or '-' when the baseline "
+                         "comes from --baseline-from-artifact (or for an "
+                         "emit-only run); '-' keeps every following path a "
+                         "fresh run — an optional positional would silently "
+                         "swallow the first one")
     ap.add_argument("fresh", nargs="+",
                     help="freshly measured JSON(s); rows gate on their minimum")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when new/base exceeds this (default 2.0)")
     ap.add_argument("--min-us", type=float, default=0.05,
                     help="ignore rows where both sides are below this (noise floor)")
+    ap.add_argument("--baseline-from-artifact", metavar="PATH", default=None,
+                    help="baseline from a downloaded CI artifact (JSON file or "
+                         "directory); pass '-' as the positional baseline")
+    ap.add_argument("--emit-baseline", metavar="OUT", default=None,
+                    help="also write the fresh runs' per-row minimum as a "
+                         "baseline-shaped JSON (the CI re-baseline artifact)")
     args = ap.parse_args(argv)
+
+    merged = _min_rows(args.fresh)
+    if args.emit_baseline:
+        _emit_baseline(args.emit_baseline, args.fresh, merged)
+
+    if args.baseline_from_artifact is not None:
+        if args.baseline != "-":
+            ap.error("pass '-' as the positional baseline with "
+                     "--baseline-from-artifact (got both)")
+        baseline_path = _resolve_artifact(args.baseline_from_artifact)
+        print(f"baseline from artifact: {baseline_path}")
+    elif args.baseline == "-":
+        if args.emit_baseline:
+            return 0  # emit-only invocation: nothing to gate against
+        ap.error("'-' skips the gate only with --emit-baseline or "
+                 "--baseline-from-artifact")
+    else:
+        baseline_path = args.baseline
+
     failures = compare(
-        _load_rows(args.baseline), _min_rows(args.fresh),
+        _load_rows(baseline_path), merged,
         max_ratio=args.max_ratio, min_us=args.min_us,
     )
     if failures:

@@ -26,7 +26,6 @@ import glob
 import json
 import os
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
 
 PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
 HBM_BW = 819e9            # bytes/s per chip
@@ -67,7 +66,7 @@ def _model_flops(record: dict) -> float:
     return mult * record["params_active"] * record["tokens_per_step"] / record["n_chips"]
 
 
-def analyze_record(record: dict) -> Optional[RooflineRow]:
+def analyze_record(record: dict) -> RooflineRow | None:
     if record.get("status") != "ok":
         return None
     cost = record["cost_analysis"]
@@ -107,8 +106,8 @@ def analyze_record(record: dict) -> Optional[RooflineRow]:
 
 
 def load_rows(
-    artifact_dir: str = ARTIFACT_DIR, mesh: str = "single", variant: Optional[str] = "baseline"
-) -> List[RooflineRow]:
+    artifact_dir: str = ARTIFACT_DIR, mesh: str = "single", variant: str | None = "baseline"
+) -> list[RooflineRow]:
     rows = []
     for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
         record = json.load(open(path))
@@ -122,7 +121,7 @@ def load_rows(
     return rows
 
 
-def format_table(rows: List[RooflineRow]) -> str:
+def format_table(rows: list[RooflineRow]) -> str:
     header = (
         f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
         f"{'collect_s':>10s} {'dominant':>10s} {'6ND/HLO':>8s} {'roofline':>9s}"
@@ -137,9 +136,9 @@ def format_table(rows: List[RooflineRow]) -> str:
     return "\n".join(lines)
 
 
-def run() -> List[Tuple[str, float, str]]:
+def run() -> list[tuple[str, float, str]]:
     """Benchmark-harness entry: roofline fraction per cell (single-pod)."""
-    out: List[Tuple[str, float, str]] = []
+    out: list[tuple[str, float, str]] = []
     rows = load_rows()
     for r in rows:
         out.append(

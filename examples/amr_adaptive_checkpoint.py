@@ -28,7 +28,6 @@ import json
 import sys
 import time
 from dataclasses import dataclass
-from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -63,13 +62,13 @@ class AMRSettings:
     seed: int = 0
 
 
-def _make_level(grid: int, key) -> Dict[str, jax.Array]:
+def _make_level(grid: int, key) -> dict[str, jax.Array]:
     u = 0.1 * jax.random.normal(key, (grid, grid, grid), jnp.float32)
     return {"u": u, "v": jnp.zeros_like(u)}
 
 
 @jax.jit
-def _wave_step(level: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+def _wave_step(level: dict[str, jax.Array]) -> dict[str, jax.Array]:
     """Leapfrog step of the 3D wave equation with a 7-point Laplacian."""
     u, v = level["u"], level["v"]
     lap = (
@@ -83,7 +82,7 @@ def _wave_step(level: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
     return {"u": u, "v": v}
 
 
-def run_experiment(settings: AMRSettings) -> Dict[str, object]:
+def run_experiment(settings: AMRSettings) -> dict[str, object]:
     db = reset_timer_db()
     sch = Scheduler(db)
     st = RunState(max_iterations=settings.iterations)
@@ -109,7 +108,7 @@ def run_experiment(settings: AMRSettings) -> Dict[str, object]:
             use_predictor=settings.mode != "fixed",
         )
     controller = AdaptiveCheckpointController(policy)
-    fraction_trace: List[Dict[str, float]] = []
+    fraction_trace: list[dict[str, float]] = []
 
     def startup(s: RunState) -> None:
         key = jax.random.PRNGKey(settings.seed)

@@ -1,0 +1,37 @@
+"""Runtime adaptation — the control plane that turns timer measurements into
+actions (the paper's "profile itself and dynamically adapt itself to a
+changing environment at run time", Sec. 1 & 3).
+
+The layering:
+
+.. code-block:: text
+
+    repro.core            measure   clocks -> timers -> TimerDB -> report
+    repro.dist            reduce    per-host step times -> StragglerDetector
+    repro.adapt (here)    decide    Controller registry polled by ControlLoop
+    launcher / fleet      act       rebalance plans, evict hosts, rebuild
+                                    meshes, admit checkpoints
+
+``ControlLoop`` polls each registered :class:`Controller`'s timer-DB channels
+once per step and records every decision as an ``ADAPT/`` row in the decision
+log and the Fig.-2 report.  Shipped controllers: :class:`CheckpointControl`
+(AdaptCheck admission, paper Sec. 3.2) and :class:`StragglerResponse`
+(rebalance microbatch shares, evict persistent stragglers, trigger mesh
+rebuilds).  :class:`SimulatedFleet` packages an n-host, CPU-only simulation of
+the whole loop for tests and demos.
+"""
+
+from .checkpoint import CheckpointControl
+from .controller import ControlAction, Controller, ControlLoop, Measurement
+from .fleet import SimulatedFleet
+from .stragglers import StragglerResponse
+
+__all__ = [
+    "ControlAction",
+    "Controller",
+    "ControlLoop",
+    "Measurement",
+    "CheckpointControl",
+    "StragglerResponse",
+    "SimulatedFleet",
+]

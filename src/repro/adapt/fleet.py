@@ -1,0 +1,165 @@
+"""A CPU-only simulated multi-host fleet for closing the adapt loop in tests.
+
+Real deployments run one process per host: each publishes its step walltime
+through a collective-backed transport, one reducing process runs the control
+loop, and eviction rebuilds the device mesh
+(:func:`repro.dist.meshutil.remove_host`).  :class:`SimulatedFleet` compresses
+that topology into one process so the whole measure → decide → rebalance →
+evict → rebuild chain is exercisable in CI:
+
+* every simulated host "executes" its :class:`~repro.dist.pipeline.MicrobatchPlan`
+  share per fleet step; its step walltime is *synthetic* — per-microbatch cost
+  x assigned share, no sleeping — so tests are fast and deterministic;
+* the walltimes travel through the same injectable
+  :class:`~repro.dist.stragglers.LocalTransport` a real launcher would back
+  with an all-gather;
+* eviction triggers a mesh rebuild through :mod:`repro.dist.meshutil` (each
+  surviving host gets a fresh local mesh; ``mesh_generation`` counts
+  rebuilds), mirroring what a launcher does with ``remove_host`` on a real
+  multi-host mesh;
+* optionally (``run_pipeline=True``) each host really feeds its share through
+  :func:`~repro.dist.pipeline.gpipe_forward` on its local mesh, proving the
+  rebalanced assignment produces working pipeline calls end to end.
+
+Inject a slowdown with :meth:`slow_host`, drive steps with :meth:`run_step`,
+and read convergence off :meth:`spread`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.timers import TimerDB, timer_db
+from ..dist.meshutil import local_mesh
+from ..dist.pipeline import MicrobatchPlan, gpipe_forward
+from ..dist.stragglers import LocalTransport, StragglerDetector
+from .stragglers import StragglerResponse
+
+__all__ = ["SimulatedFleet"]
+
+
+class SimulatedFleet:
+    """n simulated hosts, a shared microbatch plan, and a straggler responder.
+
+    The fleet owns the full wiring: transport -> detector -> response
+    controller; register :attr:`controller` on a
+    :class:`~repro.adapt.controller.ControlLoop` and alternate
+    ``fleet.run_step(i)`` / ``loop.poll(i)``.
+    """
+
+    def __init__(
+        self,
+        n_hosts: int,
+        n_micro: int,
+        *,
+        per_micro_seconds: float = 1.0,
+        window: int = 4,
+        threshold: float = 1.5,
+        check_every: int = 1,
+        confirm_after: int = 1,
+        evict_after: int = 4,
+        min_weight: float = 0.25,
+        db: TimerDB | None = None,
+        run_pipeline: bool = False,
+        micro_batch: int = 2,
+        feature_dim: int = 4,
+    ) -> None:
+        self.db = db if db is not None else timer_db()
+        self.transport = LocalTransport()
+        self.plan = MicrobatchPlan.equal(range(n_hosts), n_micro)
+        self.detector = StragglerDetector(
+            n_hosts,
+            window=window,
+            threshold=threshold,
+            transport=self.transport,
+            db=self.db,
+        )
+        self.controller = StragglerResponse(
+            self.detector,
+            self.plan,
+            check_every=check_every,
+            confirm_after=confirm_after,
+            evict_after=evict_after,
+            min_weight=min_weight,
+            on_evict=self._rebuild_meshes,
+        )
+        #: per-microbatch execution cost of each host (seconds, synthetic)
+        self.costs: dict[int, float] = {h: float(per_micro_seconds) for h in range(n_hosts)}
+        self.run_pipeline = run_pipeline
+        self.micro_batch = micro_batch
+        self.feature_dim = feature_dim
+        self.evicted: list[int] = []
+        self.mesh_generation = 0
+        self.meshes: dict[int, object] = {}
+        self.last_step_seconds: dict[int, float] = {}
+        self._rebuild_meshes(host=None, report=None)
+
+    # -- environment --------------------------------------------------------------
+    def slow_host(self, host: int, factor: float) -> None:
+        """Inject a slowdown: host's per-microbatch cost multiplies by
+        ``factor`` (a degraded node, thermal throttling, a noisy neighbor)."""
+        if host not in self.costs:
+            raise ValueError(f"unknown host {host}")
+        self.costs[host] *= float(factor)
+
+    # -- one fleet step ------------------------------------------------------------
+    def run_step(self, step: int) -> dict[int, float]:
+        """Execute one fleet step: every active host runs its share and
+        publishes its (synthetic) walltime through the transport.  Returns
+        {host: step seconds}."""
+        shares = self.plan.shares()
+        seconds: dict[int, float] = {}
+        for host, share in shares.items():
+            if self.run_pipeline:
+                self._run_host_pipeline(host, share)
+            seconds[host] = self.costs[host] * share
+            self.transport.publish(host, seconds[host])
+        self.last_step_seconds = seconds
+        return seconds
+
+    def _run_host_pipeline(self, host: int, share: int) -> None:
+        """Really push the host's microbatch share through gpipe_forward on
+        its local mesh (1 stage, tiny tensors) — correctness ballast for the
+        simulated timing."""
+        mesh = self.meshes[host]
+        stage_w = jnp.ones((1, self.feature_dim), jnp.float32) * 0.5
+        x = jnp.ones((share * self.micro_batch, self.feature_dim), jnp.float32)
+        y = gpipe_forward(
+            lambda w, a: a * w,
+            stage_w,
+            x,
+            mesh=mesh,
+            axis="pod",
+            n_micro=share,
+        )
+        jax.block_until_ready(y)
+        if y.shape != x.shape:
+            raise AssertionError(f"pipeline shape drift: {y.shape} != {x.shape}")
+
+    # -- queries -------------------------------------------------------------------
+    def active_hosts(self) -> list[int]:
+        return self.plan.hosts
+
+    def spread(self) -> float:
+        """Max - min step seconds across active hosts at the last step — the
+        cross-host imbalance the control loop is trying to shrink."""
+        vals = [
+            s for h, s in self.last_step_seconds.items() if h in self.plan.weights
+        ]
+        if not vals:
+            return 0.0
+        return max(vals) - min(vals)
+
+    # -- eviction actuator -----------------------------------------------------------
+    def _rebuild_meshes(self, host, report) -> None:
+        """(Re)build every active host's local mesh — the simulated analogue
+        of ``remove_host`` on a real fleet-spanning mesh.  Called at
+        construction and again by the response controller on every eviction."""
+        if host is not None:
+            self.evicted.append(host)
+            self.meshes.pop(host, None)
+            self.costs.pop(host, None)
+            self.last_step_seconds.pop(host, None)
+            self.mesh_generation += 1
+        self.meshes = {h: local_mesh((1,), ("pod",)) for h in self.plan.hosts}

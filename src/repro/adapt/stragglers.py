@@ -1,0 +1,353 @@
+"""Straggler response: rebalance microbatch shares, then evict — the paper's
+"dynamically adapt itself to a changing environment" loop closed at fleet
+scale (cf. the Cactus Worm migration experiments, Allen et al. cs/0108001:
+measure, decide, migrate).
+
+:class:`StragglerResponse` sits between the measurement reduction
+(:class:`~repro.dist.stragglers.StragglerDetector`, fed by all hosts through
+an injectable transport) and two actuators:
+
+* **rebalance** — set the flagged host's weight in the fleet's
+  :class:`~repro.dist.pipeline.MicrobatchPlan` to its equilibrium (nominal
+  weight / per-microbatch slowdown, floored at ``min_weight``), so its share
+  of the pipelined microbatches matches its degraded capacity.  Slowdown is
+  *share-normalized*: a host deliberately provisioned with a larger weight is
+  not "slow" merely for taking proportionally longer steps;
+* **restore** — the inverse: a derated host whose per-unit time is back in
+  line (the slowdown was transient — a noisy neighbor, thermal throttling
+  that cleared) earns its weight back by the same equilibrium rule, capped at
+  its *original* weight, so a one-off hiccup never permanently costs the
+  fleet capacity;
+* **evict** — when a host stays flagged at the minimum weight (it is too slow
+  to be worth its guaranteed share) or keeps getting flagged past the streak
+  backstop, remove it: from the plan, from the detector's median, and from
+  the transport, then hand the host to ``on_evict`` so the launcher rebuilds
+  its mesh (:func:`repro.dist.meshutil.remove_host`).
+
+After every weight change the host's detector window and streak are reset:
+samples measured under the old assignment no longer describe the host, and
+judging the new assignment on stale samples compounds derates into spurious
+evictions of already-fixed hosts.
+
+Every decision is returned as a :class:`ControlAction` so the control loop
+records it in the ``ADAPT/`` log with the triggering ``DIST/host{h}::step``
+channel.
+"""
+
+from __future__ import annotations
+
+import statistics
+from collections.abc import Callable, Mapping
+
+from ..dist.pipeline import MicrobatchPlan
+from ..dist.stragglers import StragglerDetector, StragglerReport
+from .controller import ControlAction, Measurement
+
+__all__ = ["StragglerResponse"]
+
+
+class StragglerResponse:
+    """Rebalance-then-evict policy over a straggler detector and a plan.
+
+    Parameters
+    ----------
+    detector:
+        The cross-host reduction point.  The controller drains its transport
+        and runs :meth:`~repro.dist.stragglers.StragglerDetector.check` every
+        ``check_every`` polls.
+    plan:
+        The fleet's microbatch assignment to act on.
+    check_every:
+        Polls between fleet checks (mirrors a launcher checking every N
+        steps; the check fires on polls where ``(step + 1) % check_every == 0``).
+    confirm_after:
+        Consecutive flagged checks before the first rebalance — one flagged
+        window can be a transient (GC pause, kernel hiccup); a confirmed
+        straggler is one that stays slow.
+    evict_after:
+        Consecutive flagged checks after which the host is evicted regardless
+        of weight.  The streak resets on every weight change, whenever the
+        flag turns out share-induced (per-unit time fine), and whenever the
+        raw flag clears — so escalation only counts checks where the host was
+        genuinely slow and no rebalance could absorb it (already at the
+        weight floor, or share granularity exhausted).
+    min_weight:
+        Floor for a rebalanced host's weight.  A host flagged *at* the floor
+        has already been derated as far as policy allows and is evicted.
+    rel_tol:
+        Minimum relative weight change worth acting on (hysteresis guard
+        against churning the plan for measurement noise).
+    local_feed:
+        Optional ``(host, timer_name)``: each poll additionally samples this
+        process's own step timer straight out of the timer database — the
+        single-process path the training launcher uses alongside (or instead
+        of) a transport.
+    on_rebalance / on_evict:
+        Actuator callbacks: ``on_rebalance(host, weight, report)`` after a
+        weight change, ``on_evict(host, report)`` after an eviction (where the
+        launcher rebuilds the mesh).
+    """
+
+    def __init__(
+        self,
+        detector: StragglerDetector,
+        plan: MicrobatchPlan,
+        *,
+        check_every: int = 1,
+        confirm_after: int = 1,
+        evict_after: int = 4,
+        min_weight: float = 0.25,
+        rel_tol: float = 0.05,
+        local_feed: tuple[int, str] | None = None,
+        on_rebalance: Callable[[int, float, StragglerReport], None] | None = None,
+        on_evict: Callable[[int, StragglerReport], None] | None = None,
+    ) -> None:
+        if check_every < 1:
+            raise ValueError(f"check_every must be >= 1, got {check_every}")
+        if confirm_after < 1:
+            raise ValueError(f"confirm_after must be >= 1, got {confirm_after}")
+        if evict_after < confirm_after:
+            raise ValueError(
+                f"evict_after ({evict_after}) must be >= confirm_after ({confirm_after})"
+            )
+        if not 0.0 < min_weight <= 1.0:
+            raise ValueError(f"min_weight must be in (0, 1], got {min_weight}")
+        self.name = "stragglers"
+        self.detector = detector
+        self.plan = plan
+        self.check_every = check_every
+        self.confirm_after = confirm_after
+        self.evict_after = evict_after
+        self.min_weight = min_weight
+        self.rel_tol = rel_tol
+        self.local_feed = local_feed
+        self.on_rebalance = on_rebalance
+        self.on_evict = on_evict
+        self.channels = tuple(
+            f"DIST/host{h}::step" for h in range(detector.n_hosts)
+        )
+        self._streak: dict[int, int] = {}
+        #: each host's weight at registration — the ceiling restores climb
+        #: back to (plans may assign above-1.0 weights to bigger hosts)
+        self._full_weight: dict[int, float] = dict(plan.weights)
+
+    # -- Controller protocol ------------------------------------------------------
+    def control(
+        self, step: int, measurements: Mapping[str, Measurement]
+    ) -> list[ControlAction]:
+        detector = self.detector
+        if self.local_feed is not None:
+            host, timer_name = self.local_feed
+            detector.observe_timer(host, timer_name)
+        detector.drain_transport()
+        if (step + 1) % self.check_every != 0:
+            return []
+        report = detector.check(step)
+        flagged = set(report.stragglers)
+        for host in list(self._streak):
+            if host not in flagged:
+                self._streak[host] = 0
+        # snapshot the shares the report's means were measured under: acting
+        # on the first of two simultaneous stragglers changes every host's
+        # live share, and dividing the second host's (old-share) mean by its
+        # new share would misjudge it as share-induced
+        shares = self.plan.shares()
+        actions: list[ControlAction] = []
+        for host in sorted(flagged):
+            self._streak[host] = self._streak.get(host, 0) + 1
+            action = self._respond(step, host, report, shares)
+            if action is not None:
+                actions.append(action)
+        for host in self.plan.hosts:
+            if host not in flagged:
+                action = self._restore(step, host, report, shares)
+                if action is not None:
+                    actions.append(action)
+        return actions
+
+    # -- policy -------------------------------------------------------------------
+    def _unit_slowdown(
+        self, host: int, report: StragglerReport, shares: Mapping[int, int]
+    ) -> float | None:
+        """Per-microbatch slowdown vs the fleet's median per-microbatch time.
+
+        The detector flags on *raw* step time — the right fleet-health signal,
+        but it conflates "slow per unit of work" with "deliberately assigned
+        more work" (a weight-2 host takes proportionally longer steps by
+        design).  The response policy therefore normalizes by each host's
+        share before deciding, so only genuine per-unit slowness is ever
+        acted on.  ``shares`` is the caller's per-check snapshot — the
+        apportionment the report's means were measured under.
+        """
+        per_unit = {
+            h: mean / shares[h]
+            for h, mean in report.host_means.items()
+            if shares.get(h)
+        }
+        if host not in per_unit:
+            return None
+        med = statistics.median(per_unit.values())
+        if med <= 0.0:
+            return None
+        return per_unit[host] / med
+
+    def _target_weight(self, host: int, slowdown: float) -> float:
+        """Equilibrium weight: nominal capacity derated by per-unit slowdown."""
+        full = self._full_weight.get(host, 1.0)
+        return min(max(full / slowdown, self.min_weight), full)
+
+    def _weight_dropping_share(self, host: int) -> float | None:
+        """Largest probed weight >= ``min_weight`` that sheds one microbatch.
+
+        The weight->share mapping is stepped (largest-remainder with a
+        reserved minimum), so a host can sit at its equilibrium *weight*
+        while rounding parks one extra microbatch on it.  Probing the actual
+        apportionment separates that case (shed the microbatch) from true
+        granularity exhaustion (``None``: nothing below ``min_weight`` moves
+        the share — escalation is all that is left).  The plan is restored
+        before returning; the loop is synchronous, so the in-place probe is
+        not observable.
+        """
+        plan = self.plan
+        current = plan.shares()[host]
+        if current <= 1:
+            return None
+        saved = plan.weights[host]
+        found = None
+        probe = saved
+        try:
+            while probe > self.min_weight + 1e-12:
+                probe = max(probe * 0.75, self.min_weight)
+                plan.weights[host] = probe
+                if plan.shares()[host] < current:
+                    found = probe
+                    break
+        finally:
+            plan.weights[host] = saved
+        return found
+
+    def _respond(
+        self, step: int, host: int, report: StragglerReport, shares: Mapping[int, int]
+    ) -> ControlAction | None:
+        plan = self.plan
+        streak = self._streak[host]
+        if streak < self.confirm_after:
+            return None  # not yet confirmed: wait out transients
+        weight = plan.weights.get(host)
+        if weight is None:  # host not in this plan (already gone)
+            return None
+        slowdown = self._unit_slowdown(host, report, shares)
+        if slowdown is None or slowdown <= self.detector.threshold:
+            # the raw-step-time flag was share-induced, not per-unit slowness
+            self._streak[host] = 0
+            return None
+        at_floor = weight <= self.min_weight * (1.0 + 1e-9)
+        if (at_floor or streak >= self.evict_after) and len(plan.weights) > 1:
+            return self._evict(step, host, report, slowdown)
+        desired = self._target_weight(host, slowdown)
+        if desired >= weight * (1.0 - self.rel_tol):
+            # Weight already matches the degraded capacity, yet the host is
+            # still raw-flagged.  Two distinct causes:
+            #  - apportionment rounding parked one extra microbatch on the
+            #    derated host -> shed it (a weight that actually drops the
+            #    share exists);
+            #  - share granularity is exhausted (already at the 1-microbatch
+            #    minimum / weight floor) -> leave the streak growing, which
+            #    is exactly the case the evict_after backstop exists for.
+            shed = self._weight_dropping_share(host)
+            if shed is None:
+                return None
+            desired = shed
+        self._set_weight(host, desired, report)
+        return ControlAction(
+            step=step,
+            controller=self.name,
+            trigger=f"DIST/host{host}::step",
+            action="rebalance",
+            detail={
+                "host": host,
+                "slowdown": round(slowdown, 3),
+                "weight": round(desired, 4),
+                "shares": plan.shares(),
+            },
+        )
+
+    def _restore(
+        self, step: int, host: int, report: StragglerReport, shares: Mapping[int, int]
+    ) -> ControlAction | None:
+        """Give a derated, now-healthy host its weight back (same equilibrium
+        rule as rebalance, capped at the host's original weight)."""
+        weight = self.plan.weights.get(host)
+        if weight is None or not shares.get(host):
+            return None
+        full = self._full_weight.get(host, 1.0)
+        if weight >= full:
+            return None
+        slowdown = self._unit_slowdown(host, report, shares)
+        if slowdown is None or slowdown <= 0.0:
+            return None
+        desired = self._target_weight(host, slowdown)
+        if desired <= weight * (1.0 + self.rel_tol):
+            return None  # not measurably under-loaded: leave it
+        # Anti-oscillation: a still-unit-slow host sitting one granularity
+        # step below a share that re-flags it must not ping-pong
+        # shed -> restore every check — predict the step time at the restored
+        # share and stay put if it would immediately re-flag.  Hosts whose
+        # per-unit time is healthy are exempt: their raw flags are
+        # share-induced (deliberately heavy hosts) and filtered in _respond.
+        if slowdown > self.detector.threshold:
+            saved = self.plan.weights[host]
+            self.plan.weights[host] = desired
+            try:
+                new_share = self.plan.shares()[host]
+            finally:
+                self.plan.weights[host] = saved
+            unit_seconds = report.host_means[host] / shares[host]
+            predicted = unit_seconds * new_share
+            fleet_median = statistics.median(report.host_means.values())
+            if fleet_median > 0.0 and predicted > self.detector.threshold * fleet_median:
+                return None
+        self._set_weight(host, desired, report)
+        return ControlAction(
+            step=step,
+            controller=self.name,
+            trigger=f"DIST/host{host}::step",
+            action="restore",
+            detail={
+                "host": host,
+                "slowdown": round(slowdown, 3),
+                "weight": round(desired, 4),
+                "shares": self.plan.shares(),
+            },
+        )
+
+    def _set_weight(self, host: int, weight: float, report: StragglerReport) -> None:
+        """Apply a weight change; stale-sample hygiene lives here.  The
+        detector window and the streak are reset so the host's *next*
+        judgment uses only samples measured under the new assignment."""
+        self.plan.set_weight(host, weight)
+        self.detector.reset_window(host)
+        self._streak[host] = 0
+        if self.on_rebalance is not None:
+            self.on_rebalance(host, weight, report)
+
+    def _evict(
+        self, step: int, host: int, report: StragglerReport, slowdown: float
+    ) -> ControlAction:
+        self.plan.evict(host)
+        self.detector.evict(host)
+        self._streak.pop(host, None)
+        if self.on_evict is not None:
+            self.on_evict(host, report)
+        return ControlAction(
+            step=step,
+            controller=self.name,
+            trigger=f"DIST/host{host}::step",
+            action="evict",
+            detail={
+                "host": host,
+                "slowdown": round(slowdown, 3),
+                "survivors": self.plan.hosts,
+                "shares": self.plan.shares(),
+            },
+        )

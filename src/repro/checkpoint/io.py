@@ -19,7 +19,7 @@ from __future__ import annotations
 import json
 import os
 import zlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np
@@ -75,9 +75,9 @@ def save_checkpoint(
     directory: str,
     step: int,
     tree: Any,
-    metadata: Optional[Dict[str, Any]] = None,
+    metadata: dict[str, Any] | None = None,
     fsync: bool = False,
-) -> Tuple[str, int]:
+) -> tuple[str, int]:
     """Write atomically; returns (final_path, bytes_written).
 
     ``tree`` leaves must already be host arrays (the manager snapshots devices
@@ -145,8 +145,8 @@ class CheckpointCorrupt(RuntimeError):
 
 
 def load_checkpoint(
-    path: str, shardings: Optional[Any] = None, verify: bool = True
-) -> Tuple[int, Any, Dict[str, Any]]:
+    path: str, shardings: Any | None = None, verify: bool = True
+) -> tuple[int, Any, dict[str, Any]]:
     """Load one checkpoint directory. Returns (step, tree, metadata)."""
     if not os.path.exists(os.path.join(path, _COMMIT)):
         raise CheckpointCorrupt(f"{path}: missing commit marker")

@@ -16,13 +16,15 @@ import re
 import signal
 import threading
 import time
+from collections.abc import Callable
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any
 
 import jax
 
 from ..core.clocks import counter_cell
 from .io import CheckpointCorrupt, checkpoint_nbytes, load_checkpoint, save_checkpoint
+
 
 # channel cells resolved once (lock-free C-level increment on the write path)
 _BUMP_IO_BYTES = counter_cell("io_bytes")
@@ -55,14 +57,14 @@ class CheckpointManager:
         self.delay_s_per_mb = delay_s_per_mb
         os.makedirs(directory, exist_ok=True)
         self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")
-        self._pending: Optional[Future] = None
+        self._pending: Future | None = None
         self._lock = threading.Lock()
         self.n_saves = 0
         self.total_blocking_seconds = 0.0
         self.total_bytes = 0
 
     # -- save ------------------------------------------------------------------
-    def _write(self, step: int, host_tree, metadata) -> Tuple[str, int]:
+    def _write(self, step: int, host_tree, metadata) -> tuple[str, int]:
         if self.delay_s or self.delay_s_per_mb:
             nbytes = checkpoint_nbytes(host_tree)
             time.sleep(self.delay_s + self.delay_s_per_mb * nbytes / 1e6)
@@ -75,8 +77,8 @@ class CheckpointManager:
         return path, nbytes
 
     def save(
-        self, step: int, tree: Any, metadata: Optional[Dict[str, Any]] = None
-    ) -> Dict[str, float]:
+        self, step: int, tree: Any, metadata: dict[str, Any] | None = None
+    ) -> dict[str, float]:
         """Snapshot + write. Returns stats incl. blocking seconds and bytes."""
         t0 = time.monotonic()
         self.wait()  # never queue more than one outstanding write
@@ -103,7 +105,7 @@ class CheckpointManager:
             self._pending = None
 
     # -- restore ---------------------------------------------------------------
-    def checkpoints(self) -> List[Tuple[int, str]]:
+    def checkpoints(self) -> list[tuple[int, str]]:
         out = []
         for name in os.listdir(self.directory):
             m = _STEP_RE.match(name)
@@ -112,10 +114,10 @@ class CheckpointManager:
         return sorted(out)
 
     def restore_latest(
-        self, shardings: Optional[Any] = None
-    ) -> Optional[Tuple[int, Any, Dict[str, Any]]]:
+        self, shardings: Any | None = None
+    ) -> tuple[int, Any, dict[str, Any]] | None:
         """Latest valid checkpoint (corrupt/uncommitted ones are skipped)."""
-        for step, path in reversed(self.checkpoints()):
+        for _step, path in reversed(self.checkpoints()):
             try:
                 return load_checkpoint(path, shardings=shardings)
             except (CheckpointCorrupt, FileNotFoundError, ValueError):
@@ -130,7 +132,7 @@ class CheckpointManager:
 
             shutil.rmtree(path, ignore_errors=True)
 
-    def install_sigterm_handler(self, state_fn: Callable[[], Tuple[int, Any]]) -> None:
+    def install_sigterm_handler(self, state_fn: Callable[[], tuple[int, Any]]) -> None:
         """Emergency checkpoint on SIGTERM (pre-emption / queue kill)."""
 
         def handler(signum, frame):  # pragma: no cover - signal path

@@ -3,14 +3,13 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
 
 from ..models.config import ArchConfig
 
 __all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "list_archs"]
 
 #: arch id -> module name
-_MODULES: Dict[str, str] = {
+_MODULES: dict[str, str] = {
     "glm4-9b": "glm4_9b",
     "llama3.2-1b": "llama3_2_1b",
     "qwen3-14b": "qwen3_14b",
@@ -40,5 +39,5 @@ def get_smoke_config(arch: str) -> ArchConfig:
     return _module(arch).SMOKE_CONFIG
 
 
-def list_archs() -> List[str]:
+def list_archs() -> list[str]:
     return list(ARCH_IDS)

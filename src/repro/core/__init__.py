@@ -2,6 +2,12 @@
 (clocks + timers + scheduler-integrated caliper points) and profiling-driven
 adaptation (AdaptCheck).  See DESIGN.md §2-3 for the Cactus → JAX mapping."""
 
+from .adaptive import (
+    AdaptiveCheckpointController,
+    AdaptiveCheckpointPolicy,
+    CheckpointDurationPredictor,
+    Decision,
+)
 from .clocks import (
     CallbackClock,
     Clock,
@@ -11,6 +17,7 @@ from .clocks import (
     counter_cell,
     counter_channel,
     counter_values,
+    fold_pending_counters,
     increment_counter,
     make_all_clocks,
     make_clock,
@@ -18,16 +25,19 @@ from .clocks import (
     reset_default_clocks,
     unregister_clock,
 )
-from .timers import Timer, TimerDB, reset_timer_db, timed, timer_db
-from .schedule import BINS, RunState, ScheduledRoutine, Scheduler
-from .adaptive import (
-    AdaptiveCheckpointController,
-    AdaptiveCheckpointPolicy,
-    CheckpointDurationPredictor,
-    Decision,
-)
-from .report import TimerLogger, bin_distribution, format_report, report_rows, straggler_rows
 from .params import Param, ParamRegistry, param_registry, reset_param_registry
+from .report import (
+    TimerLogger,
+    adapt_rows,
+    bin_distribution,
+    format_adapt_report,
+    format_report,
+    report_rows,
+    straggler_rows,
+)
+from .schedule import BINS, RunState, ScheduledRoutine, Scheduler
+from .timers import Timer, TimerDB, reset_timer_db, timed, timer_db
+
 
 __all__ = [
     "CallbackClock",
@@ -38,6 +48,7 @@ __all__ = [
     "counter_cell",
     "counter_channel",
     "counter_values",
+    "fold_pending_counters",
     "increment_counter",
     "make_all_clocks",
     "make_clock",
@@ -58,7 +69,9 @@ __all__ = [
     "CheckpointDurationPredictor",
     "Decision",
     "TimerLogger",
+    "adapt_rows",
     "bin_distribution",
+    "format_adapt_report",
     "format_report",
     "report_rows",
     "straggler_rows",

@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
 
 __all__ = [
     "CheckpointDurationPredictor",
@@ -47,7 +46,7 @@ class CheckpointDurationPredictor:
     def __init__(self, window: int = 16, default_seconds: float = 1.0) -> None:
         self.window = int(window)
         self.default_seconds = float(default_seconds)
-        self._history: List[Tuple[float, float]] = []  # (bytes, seconds)
+        self._history: list[tuple[float, float]] = []  # (bytes, seconds)
 
     def observe(self, seconds: float, nbytes: float = 0.0) -> None:
         if seconds < 0 or not math.isfinite(seconds):
@@ -60,7 +59,7 @@ class CheckpointDurationPredictor:
     def n_observations(self) -> int:
         return len(self._history)
 
-    def predict(self, nbytes: Optional[float] = None) -> float:
+    def predict(self, nbytes: float | None = None) -> float:
         """Predicted duration for a checkpoint of ``nbytes`` (or 'like recent')."""
         if not self._history:
             return self.default_seconds
@@ -101,7 +100,7 @@ class AdaptiveCheckpointPolicy:
     #: use the duration predictor to stay close to the bound from below.
     use_predictor: bool = True
     #: wall-time budget for the whole run (queue allocation); None = unlimited.
-    queue_seconds: Optional[float] = None
+    queue_seconds: float | None = None
     #: safety margin multiplier applied to the predicted final-ckpt duration.
     deadline_safety: float = 2.0
 
@@ -141,12 +140,12 @@ class AdaptiveCheckpointController:
         policy.validate()
         self.policy = policy
         self.predictor = CheckpointDurationPredictor()
-        self._last_checkpoint_at: Optional[float] = None
-        self._started_at: Optional[float] = None
+        self._last_checkpoint_at: float | None = None
+        self._started_at: float | None = None
         self._final_done = False
         self.n_checkpoints = 0
         self.n_suppressed = 0
-        self.decisions: List[Decision] = []
+        self.decisions: list[Decision] = []
 
     # -- lifecycle ------------------------------------------------------------
     def start_run(self, now: float) -> None:
@@ -172,7 +171,7 @@ class AdaptiveCheckpointController:
         now: float,
         total_seconds: float,
         checkpoint_seconds: float,
-        next_checkpoint_bytes: Optional[float] = None,
+        next_checkpoint_bytes: float | None = None,
     ) -> Decision:
         p = self.policy
         predicted = self.predictor.predict(next_checkpoint_bytes)

@@ -39,8 +39,9 @@ from __future__ import annotations
 import os
 import threading
 import time
+from collections.abc import Callable, Mapping, Sequence
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
 
 __all__ = [
     "Clock",
@@ -64,6 +65,7 @@ __all__ = [
     "counter_channel",
     "counter_values",
     "increment_counter",
+    "fold_pending_counters",
     "reset_default_clocks",
 ]
 
@@ -73,8 +75,8 @@ class ClockValues:
     """A multi-valued clock reading (a clock can measure several values at once,
     e.g. multiple PAPI counters)."""
 
-    values: Dict[str, float]
-    units: Dict[str, str]
+    values: dict[str, float]
+    units: dict[str, str]
 
     def __getitem__(self, key: str) -> float:
         return self.values[key]
@@ -98,14 +100,14 @@ class Clock:
 
     def __init__(self) -> None:
         self._running = False
-        self._accum: Dict[str, float] = {}
-        self._mark: Dict[str, float] = {}
+        self._accum: dict[str, float] = {}
+        self._mark: dict[str, float] = {}
 
     # -- core sampling hook -------------------------------------------------
-    def _now(self) -> Dict[str, float]:  # pragma: no cover - abstract
+    def _now(self) -> dict[str, float]:  # pragma: no cover - abstract
         raise NotImplementedError
 
-    def fused_sampler(self) -> Optional[Callable[[], Sequence[float]]]:
+    def fused_sampler(self) -> Callable[[], Sequence[float]] | None:
         """Zero-arg closure returning this clock's raw channel values (ordered
         as ``units``) as a flat float sequence, for the fused timer hot path.
 
@@ -145,7 +147,7 @@ class Clock:
         return ClockValues(values=values, units=dict(self.units))
 
     # Cactus `get`/`set`: direct access to the accumulator.
-    def get(self) -> Dict[str, float]:
+    def get(self) -> dict[str, float]:
         return self.read().values
 
     def set(self, values: Mapping[str, float]) -> None:
@@ -179,8 +181,8 @@ class CallbackClock(Clock):
         name: str,
         sample: Callable[[], Mapping[str, float]],
         units: Mapping[str, str],
-        on_start: Optional[Callable[[], None]] = None,
-        on_stop: Optional[Callable[[], None]] = None,
+        on_start: Callable[[], None] | None = None,
+        on_stop: Callable[[], None] | None = None,
     ) -> None:
         self.name = name
         self.units = dict(units)
@@ -189,7 +191,7 @@ class CallbackClock(Clock):
         self._on_stop = on_stop
         super().__init__()
 
-    def _now(self) -> Dict[str, float]:
+    def _now(self) -> dict[str, float]:
         return dict(self._sample())
 
     def start(self) -> None:
@@ -209,7 +211,7 @@ class WalltimeClock(Clock):
     name = "walltime"
     units = {"walltime": "sec"}
 
-    def _now(self) -> Dict[str, float]:
+    def _now(self) -> dict[str, float]:
         return {"walltime": time.monotonic()}
 
     def fused_sampler(self):
@@ -232,12 +234,12 @@ def _perf_counter_float() -> float:
     return float(time.perf_counter_ns())
 
 
-def _scalar_sampler(fn: Callable[[], float]) -> Callable[[], Tuple[float]]:
+def _scalar_sampler(fn: Callable[[], float]) -> Callable[[], tuple[float]]:
     """Wrap a single-value raw reader for the fused path.  Tagged with
     ``scalar_fn`` so the layout builder can merge runs of adjacent
     single-channel clocks into one closure (fewer calls and allocations)."""
 
-    def sample() -> Tuple[float]:
+    def sample() -> tuple[float]:
         return (fn(),)
 
     sample.scalar_fn = fn  # type: ignore[attr-defined]
@@ -300,7 +302,7 @@ class CPUTimeClock(Clock):
     name = "cputime"
     units = {"cputime": "sec"}
 
-    def _now(self) -> Dict[str, float]:
+    def _now(self) -> dict[str, float]:
         return {"cputime": time.process_time()}
 
     def fused_sampler(self):
@@ -317,7 +319,7 @@ class ThreadCPUClock(Clock):
     name = "thread_cputime"
     units = {"thread_cputime": "sec"}
 
-    def _now(self) -> Dict[str, float]:
+    def _now(self) -> dict[str, float]:
         return {"thread_cputime": time.thread_time()}
 
     def fused_sampler(self):
@@ -333,7 +335,7 @@ class PerfCounterClock(Clock):
     name = "perfcounter"
     units = {"perfcounter": "nsec"}
 
-    def _now(self) -> Dict[str, float]:
+    def _now(self) -> dict[str, float]:
         return {"perfcounter": float(time.perf_counter_ns())}
 
     def fused_sampler(self):
@@ -352,9 +354,9 @@ class RSSClock(Clock):
 
     _PAGE = 4096
 
-    def _now(self) -> Dict[str, float]:
+    def _now(self) -> dict[str, float]:
         try:
-            with open("/proc/self/statm", "r") as f:
+            with open("/proc/self/statm") as f:
                 parts = f.read().split()
             return {"rss": float(int(parts[1]) * self._PAGE)}
         except (OSError, IndexError, ValueError):  # pragma: no cover
@@ -377,10 +379,25 @@ class RSSClock(Clock):
 # an atomic C-level operation, safe from any thread without a lock.  Readers
 # fold ``pending[:n]`` into ``base`` and delete the folded prefix under
 # _COUNTER_READ_LOCK; concurrent appends land past the folded prefix and are
-# never lost.  Channels that are written but never read grow their pending
-# list; in this framework every open timer window reads the counter clocks,
-# which bounds growth in practice.
+# never lost.
+#
+# Write-only channels (written but never exported through a registered
+# CounterClock) have no reader to fold them, so their pending lists are capped:
+# ``increment_counter`` self-folds its channel when pending exceeds
+# _PENDING_FOLD_CAP (amortized: one locked fold per CAP appends), and the
+# fused counter samplers — which already hold the read lock every timer
+# window — sweep *all* cells every _PENDING_SWEEP_EVERY passes, folding any
+# overflowing cell (this catches raw ``counter_cell`` handles, whose append is
+# a bare C call that cannot check anything).  ``fold_pending_counters()`` is
+# the explicit maintenance entry point for timer-less processes holding raw
+# cells on never-read channels.
 # ---------------------------------------------------------------------------
+
+#: fold a channel's pending list once it holds this many unfolded amounts
+_PENDING_FOLD_CAP = 4096
+#: fused counter samplers sweep all cells for overflow every N sample passes
+_PENDING_SWEEP_EVERY = 1024
+_SWEEP_STATE = [0]
 
 
 class _CounterCell:
@@ -388,11 +405,11 @@ class _CounterCell:
 
     def __init__(self) -> None:
         self.base = 0.0
-        self.pending: List[float] = []
+        self.pending: list[float] = []
 
 
-_CELLS: Dict[str, _CounterCell] = {}
-_CELL_APPENDS: Dict[str, Callable[[float], None]] = {}
+_CELLS: dict[str, _CounterCell] = {}
+_CELL_APPENDS: dict[str, Callable[[float], None]] = {}
 _COUNTER_READ_LOCK = threading.Lock()
 _CELLS_CREATE_LOCK = threading.Lock()
 
@@ -433,13 +450,44 @@ def increment_counter(name: str, amount: float) -> None:
     Name-resolved per call; hot loops should use :func:`counter_cell`.
     ``amount + 0.0`` both coerces ints to float and raises ``TypeError`` here,
     at the call site, for non-numeric input (never poisoning the channel).
+    Self-folds the channel when its pending list hits the overflow cap, so a
+    write-only channel cannot grow without bound.
     """
     try:
-        _CELL_APPENDS[name](amount + 0.0)
+        append = _CELL_APPENDS[name]
     except KeyError:
         _new_cell(name).pending.append(float(amount))
+        return
+    try:
+        append(amount + 0.0)
     except TypeError:
-        _CELL_APPENDS[name](float(amount))  # e.g. numeric strings
+        append(float(amount))  # e.g. numeric strings
+    # bound write-only channels: the bound append's __self__ IS the pending
+    # list, so the overflow probe costs one attribute read + len
+    pending = append.__self__
+    if len(pending) >= _PENDING_FOLD_CAP:
+        with _COUNTER_READ_LOCK:
+            _fold_cell_locked(_CELLS[name])
+
+
+def fold_pending_counters() -> None:
+    """Fold every channel's pending amounts into its base total now.
+
+    Maintenance entry point for processes that hold raw :func:`counter_cell`
+    handles on channels no registered clock ever reads *and* never run a
+    timer window (which would sweep them): call this periodically to keep
+    those pending lists bounded.  Totals are unchanged.
+    """
+    with _COUNTER_READ_LOCK:
+        for cell in list(_CELLS.values()):
+            _fold_cell_locked(cell)
+
+
+def _sweep_overflow_locked() -> None:
+    """Fold any cell whose pending list overflowed; read lock held."""
+    for cell in list(_CELLS.values()):
+        if len(cell.pending) >= _PENDING_FOLD_CAP:
+            _fold_cell_locked(cell)
 
 
 def _fold_cells_into(append: Callable[[float], None], cells) -> None:
@@ -471,7 +519,7 @@ def _fold_cells_into(append: Callable[[float], None], cells) -> None:
 
 def _fold_cell_locked(cell: _CounterCell) -> float:
     """One cell's folded total; caller holds the read lock."""
-    out: List[float] = []
+    out: list[float] = []
     _fold_cells_into(out.append, (cell,))
     return out[0]
 
@@ -482,7 +530,7 @@ def counter_channel(name: str) -> float:
         return _fold_cell_locked(cell) if cell is not None else 0.0
 
 
-def counter_values(names: Sequence[str]) -> List[float]:
+def counter_values(names: Sequence[str]) -> list[float]:
     """Merged totals for several channels in one read-lock acquisition."""
     with _COUNTER_READ_LOCK:
         cells = _CELLS
@@ -493,7 +541,7 @@ def counter_values(names: Sequence[str]) -> List[float]:
         return out
 
 
-def _make_counter_sampler(names: Tuple[str, ...]) -> Callable[[], List[float]]:
+def _make_counter_sampler(names: tuple[str, ...]) -> Callable[[], list[float]]:
     """Fused sampler over counter channels: one read-lock acquisition, folds
     inlined, cells resolved once at layout build (cells are never deleted).
     Tagged with ``counter_names`` so the layout builder can merge adjacent
@@ -501,11 +549,18 @@ def _make_counter_sampler(names: Tuple[str, ...]) -> Callable[[], List[float]]:
     lock = _COUNTER_READ_LOCK
     cells = tuple(_new_cell(name) for name in names)
     fold = _fold_cells_into
+    sweep_state = _SWEEP_STATE
 
-    def sample() -> List[float]:
-        out: List[float] = []
+    def sample() -> list[float]:
+        out: list[float] = []
         with lock:
             fold(out.append, cells)
+            tick = sweep_state[0] + 1
+            if tick >= _PENDING_SWEEP_EVERY:
+                sweep_state[0] = 0
+                _sweep_overflow_locked()
+            else:
+                sweep_state[0] = tick
         return out
 
     sample.counter_names = names  # type: ignore[attr-defined]
@@ -520,7 +575,7 @@ class CounterClock(Clock):
         self.units = dict(channels)
         super().__init__()
 
-    def _now(self) -> Dict[str, float]:
+    def _now(self) -> dict[str, float]:
         names = tuple(self.units)
         return dict(zip(names, counter_values(names)))
 
@@ -533,7 +588,7 @@ class CounterClock(Clock):
 # registered by name; every Timer created afterwards instantiates all of them.
 # ---------------------------------------------------------------------------
 
-_REGISTRY: "Dict[str, Callable[[], Clock]]" = {}
+_REGISTRY: dict[str, Callable[[], Clock]] = {}
 _REGISTRY_LOCK = threading.Lock()
 _REGISTRY_VERSION = [0]
 
@@ -552,7 +607,7 @@ def unregister_clock(name: str) -> None:
         _REGISTRY_VERSION[0] += 1
 
 
-def clock_names() -> List[str]:
+def clock_names() -> list[str]:
     with _REGISTRY_LOCK:
         return sorted(_REGISTRY.keys())
 
@@ -569,7 +624,7 @@ def make_clock(name: str) -> Clock:
     return factory()
 
 
-def make_all_clocks() -> Dict[str, Clock]:
+def make_all_clocks() -> dict[str, Clock]:
     with _REGISTRY_LOCK:
         factories = dict(_REGISTRY)
     return {name: factory() for name, factory in factories.items()}
@@ -606,12 +661,12 @@ class ChannelLayout:
     def __init__(
         self,
         version: int,
-        samplers: List[Callable[[], Sequence[float]]],
-        fused_keys: List[Tuple[str, str]],
-        fused_flat: List[str],
-        clock_meta: List[Tuple[str, slice, Tuple[str, ...], Dict[str, str]]],
-        nonfused_names: List[str],
-        nonfused_flat: Dict[str, Dict[str, str]],
+        samplers: list[Callable[[], Sequence[float]]],
+        fused_keys: list[tuple[str, str]],
+        fused_flat: list[str],
+        clock_meta: list[tuple[str, slice, tuple[str, ...], dict[str, str]]],
+        nonfused_names: list[str],
+        nonfused_flat: dict[str, dict[str, str]],
     ) -> None:
         self.version = version
         self.n_fused = len(fused_keys)
@@ -643,25 +698,25 @@ class ChannelLayout:
 
         if len(fns) == 0:
 
-            def sample() -> List[float]:
+            def sample() -> list[float]:
                 return []
 
         elif len(fns) == 1:
             single = fns[0]
 
-            def sample() -> List[float]:
+            def sample() -> list[float]:
                 return list(single())
 
         elif len(fns) == 2:
             first, second = fns
 
-            def sample() -> List[float]:
+            def sample() -> list[float]:
                 return [*first(), *second()]
 
         else:
 
-            def sample() -> List[float]:
-                out: List[float] = []
+            def sample() -> list[float]:
+                out: list[float] = []
                 for fn in fns:
                     out += fn()
                 return out
@@ -669,7 +724,7 @@ class ChannelLayout:
         self.sample = sample
 
 
-_LAYOUT_CACHE: Dict[int, ChannelLayout] = {}
+_LAYOUT_CACHE: dict[int, ChannelLayout] = {}
 
 
 def channel_layout() -> ChannelLayout:
@@ -692,7 +747,7 @@ def _time3_sampler(
     mono=time.monotonic,
     perf=time.perf_counter_ns,
     cache=_CPUTIME_CACHE,
-) -> Tuple[float, float, float]:
+) -> tuple[float, float, float]:
     """Hand-fused walltime/cputime/perfcounter pass for the default layout:
     one perf_counter read serves both the perfcounter channel and the cputime
     cache age check."""
@@ -711,7 +766,7 @@ def _time3_exact_sampler(
     mono=time.monotonic,
     cpu=time.process_time,
     perf=time.perf_counter_ns,
-) -> Tuple[float, float, float]:
+) -> tuple[float, float, float]:
     """Exact-mode variant of :func:`_time3_sampler` for kernels where the
     CPU-time source is a cheap vDSO read: no cache, no lock."""
     return (mono(), cpu(), float(perf()))
@@ -722,21 +777,22 @@ _time3_exact_sampler.exact_cpu = True  # type: ignore[attr-defined]
 
 
 def _make_default_sampler(
-    names: Tuple[str, ...],
+    names: tuple[str, ...],
     exact_cpu: bool,
     mono=time.monotonic,
     perf=time.perf_counter_ns,
     cpu_read=time.process_time,
     cache=_CPUTIME_CACHE,
-) -> Callable[[], List[float]]:
+) -> Callable[[], list[float]]:
     """Fully fused single closure for the default registry shape
     (walltime/cputime/perfcounter followed by counter clocks): one call, one
     output list, no composition loop."""
     lock = _COUNTER_READ_LOCK
     cells = tuple(_new_cell(name) for name in names)
     fold = _fold_cells_into
+    sweep_state = _SWEEP_STATE
 
-    def sample() -> List[float]:
+    def sample() -> list[float]:
         p = perf()
         if exact_cpu:
             cpu = cpu_read()
@@ -747,12 +803,18 @@ def _make_default_sampler(
         out = [mono(), cpu, float(p)]
         with lock:
             fold(out.append, cells)
+            tick = sweep_state[0] + 1
+            if tick >= _PENDING_SWEEP_EVERY:
+                sweep_state[0] = 0
+                _sweep_overflow_locked()
+            else:
+                sweep_state[0] = tick
         return out
 
     return sample
 
 
-def _merge_scalar_run(fns: List[Callable[[], float]]) -> Callable[[], Sequence[float]]:
+def _merge_scalar_run(fns: list[Callable[[], float]]) -> Callable[[], Sequence[float]]:
     if fns == [time.monotonic, _cputime_cached, _perf_counter_float]:
         return _time3_sampler
     if fns == [time.monotonic, time.process_time, _perf_counter_float]:
@@ -775,8 +837,8 @@ def _merge_scalar_run(fns: List[Callable[[], float]]) -> Callable[[], Sequence[f
 
 
 def _merge_samplers(
-    samplers: List[Callable[[], Sequence[float]]],
-) -> List[Callable[[], Sequence[float]]]:
+    samplers: list[Callable[[], Sequence[float]]],
+) -> list[Callable[[], Sequence[float]]]:
     """Fuse runs of adjacent mergeable samplers.
 
     Channel slots of adjacent clocks are contiguous in the flat layout, so a
@@ -784,9 +846,9 @@ def _merge_samplers(
     counter clocks share one read-lock acquisition; runs of single-value raw
     readers (the built-in time clocks) share one closure call and one tuple.
     """
-    merged: List[Callable[[], Sequence[float]]] = []
-    counter_run: List[str] = []
-    scalar_run: List[Callable[[], float]] = []
+    merged: list[Callable[[], Sequence[float]]] = []
+    counter_run: list[str] = []
+    scalar_run: list[Callable[[], float]] = []
 
     def flush() -> None:
         if counter_run:
@@ -815,12 +877,12 @@ def _merge_samplers(
 
 
 def _build_layout(
-    version: int, factories: List[Tuple[str, Callable[[], Clock]]]
+    version: int, factories: list[tuple[str, Callable[[], Clock]]]
 ) -> ChannelLayout:
-    prototypes: List[Tuple[str, Clock]] = [(name, factory()) for name, factory in factories]
+    prototypes: list[tuple[str, Clock]] = [(name, factory()) for name, factory in factories]
 
     # collision detection across every clock's exported channels
-    seen: Dict[str, int] = {}
+    seen: dict[str, int] = {}
     for _, proto in prototypes:
         for ch in proto._channels():
             seen[ch] = seen.get(ch, 0) + 1
@@ -828,12 +890,12 @@ def _build_layout(
     def flat_name(clock_name: str, channel: str) -> str:
         return f"{clock_name}.{channel}" if seen.get(channel, 0) > 1 else channel
 
-    samplers: List[Callable[[], Sequence[float]]] = []
-    fused_keys: List[Tuple[str, str]] = []
-    fused_flat: List[str] = []
-    clock_meta: List[Tuple[str, slice, Tuple[str, ...], Dict[str, str]]] = []
-    nonfused_names: List[str] = []
-    nonfused_flat: Dict[str, Dict[str, str]] = {}
+    samplers: list[Callable[[], Sequence[float]]] = []
+    fused_keys: list[tuple[str, str]] = []
+    fused_flat: list[str] = []
+    clock_meta: list[tuple[str, slice, tuple[str, ...], dict[str, str]]] = []
+    nonfused_names: list[str] = []
+    nonfused_flat: dict[str, dict[str, str]] = {}
 
     for name, proto in prototypes:
         channels = tuple(proto._channels())

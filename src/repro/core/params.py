@@ -12,8 +12,10 @@ changes with steering events.
 from __future__ import annotations
 
 import threading
+from collections.abc import Callable
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any
+
 
 __all__ = ["Param", "ParamRegistry", "param_registry", "reset_param_registry"]
 
@@ -28,14 +30,14 @@ class Param:
     value: Any
     steerable: bool = False
     doc: str = ""
-    validator: Optional[Callable[[Any], bool]] = None
-    history: List[Tuple[int, Any]] = field(default_factory=list)
+    validator: Callable[[Any], bool] | None = None
+    history: list[tuple[int, Any]] = field(default_factory=list)
 
 
 class ParamRegistry:
     def __init__(self) -> None:
         self._lock = threading.RLock()
-        self._params: Dict[str, Param] = {}
+        self._params: dict[str, Param] = {}
         self._frozen = False
 
     def declare(
@@ -45,7 +47,7 @@ class ParamRegistry:
         *,
         steerable: bool = False,
         doc: str = "",
-        validator: Optional[Callable[[Any], bool]] = None,
+        validator: Callable[[Any], bool] | None = None,
     ) -> Param:
         with self._lock:
             if name in self._params:
@@ -79,15 +81,15 @@ class ParamRegistry:
             param.history.append((iteration, param.value))
             param.value = value
 
-    def names(self) -> List[str]:
+    def names(self) -> list[str]:
         with self._lock:
             return sorted(self._params)
 
-    def snapshot(self) -> Dict[str, Any]:
+    def snapshot(self) -> dict[str, Any]:
         with self._lock:
             return {name: p.value for name, p in self._params.items()}
 
-    def describe(self) -> List[dict]:
+    def describe(self) -> list[dict]:
         with self._lock:
             return [
                 {

@@ -2,7 +2,9 @@
 
 ``format_report`` renders the Fig.-2-style table: one row per timer, one column
 per clock channel, grouped by schedule bin, with a "Total time for simulation"
-footer.  ``TimerLogger`` appends JSON snapshots to a log file ("logged
+footer — and, when handed a control loop, an ``ADAPT/`` section recording
+every runtime-adaptation decision (when, trigger channel, action taken).
+``TimerLogger`` appends JSON snapshots to a log file ("logged
 semi-automatically for post-mortem review").
 """
 
@@ -11,7 +13,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Mapping, Optional, Sequence
+from collections.abc import Mapping, Sequence
 
 from .timers import TimerDB, timer_db
 
@@ -19,12 +21,14 @@ __all__ = [
     "format_report",
     "report_rows",
     "straggler_rows",
+    "adapt_rows",
+    "format_adapt_report",
     "TimerLogger",
     "bin_distribution",
 ]
 
 
-def _channel_value(flat: Dict[str, float], channel: str) -> float:
+def _channel_value(flat: dict[str, float], channel: str) -> float:
     """Look up a flat channel, tolerating collision-namespaced layouts.
 
     When two clocks export the same channel name the snapshot renames every
@@ -45,17 +49,17 @@ def _channel_value(flat: Dict[str, float], channel: str) -> float:
 
 
 def report_rows(
-    db: Optional[TimerDB] = None,
+    db: TimerDB | None = None,
     channels: Sequence[str] = ("walltime", "cputime"),
     prefix: str = "",
-) -> List[Dict[str, object]]:
+) -> list[dict[str, object]]:
     db = db if db is not None else timer_db()
-    rows: List[Dict[str, object]] = []
+    rows: list[dict[str, object]] = []
     for timer in db.timers():
         if prefix and not timer.name.startswith(prefix):
             continue
         flat = timer.read_flat()
-        row: Dict[str, object] = {"timer": timer.name, "count": timer.count}
+        row: dict[str, object] = {"timer": timer.name, "count": timer.count}
         for ch in channels:
             row[ch] = _channel_value(flat, ch)
         rows.append(row)
@@ -66,38 +70,105 @@ def straggler_rows(
     detector,
     channels: Sequence[str] = ("walltime", "cputime"),
     prefix: str = "DIST",
-) -> List[Dict[str, object]]:
+) -> list[dict[str, object]]:
     """Fleet-health rows from a ``repro.dist.stragglers.StragglerDetector``.
 
     Shaped exactly like :func:`report_rows` entries (one row per reporting
     host, walltime = that host's total step seconds) for JSON summaries and
     monitor endpoints; hosts flagged by the detector's most recent check are
-    tagged ``[STRAGGLER]``.  The Fig.-2 table itself needs no merging — the
-    detector's ``check()`` publishes ``DIST/host{h}::step`` timers straight
-    into the timer DB, which :func:`format_report` renders like any other
-    timer.  Duck-typed (needs ``host_stats()``/``reports``) to keep ``core``
-    free of a ``dist`` import.
+    tagged ``[STRAGGLER]`` and hosts removed from the fleet ``[EVICTED]``.
+    The Fig.-2 table itself needs no merging — the detector's ``check()``
+    publishes ``DIST/host{h}::step`` timers straight into the timer DB, which
+    :func:`format_report` renders like any other timer.  Duck-typed (needs
+    ``host_stats()``/``reports``) to keep ``core`` free of a ``dist`` import.
     """
     latest = detector.reports[-1] if getattr(detector, "reports", None) else None
-    rows: List[Dict[str, object]] = []
+    evicted = getattr(detector, "evicted", ()) or ()
+    rows: list[dict[str, object]] = []
     for host, (count, total) in sorted(detector.host_stats().items()):
         name = f"{prefix}/host{host}::step"
-        if latest is not None and host in latest.stragglers:
+        if host in evicted:
+            name += " [EVICTED]"
+        elif latest is not None and host in latest.stragglers:
             name += " [STRAGGLER]"
-        row: Dict[str, object] = {"timer": name, "count": count}
+        row: dict[str, object] = {"timer": name, "count": count}
         for ch in channels:
             row[ch] = total if ch == "walltime" else 0.0
         rows.append(row)
     return rows
 
 
+def adapt_rows(loop) -> list[dict[str, object]]:
+    """Decision-log rows from a ``repro.adapt.ControlLoop``.
+
+    One row per recorded :class:`~repro.adapt.controller.ControlAction` —
+    when (step), who (controller), what (action), why (trigger channel), and
+    the action's parameters — for JSON summaries and monitor endpoints.
+    Duck-typed (needs ``.actions``) to keep ``core`` free of an ``adapt``
+    import; the aggregate ``ADAPT/<controller>::<action>`` count rows are
+    published into the timer DB by the loop itself.
+    """
+    return [
+        {
+            "step": a.step,
+            "controller": a.controller,
+            "action": a.action,
+            "trigger": a.trigger,
+            "detail": dict(a.detail),
+        }
+        for a in getattr(loop, "actions", ())
+    ]
+
+
+def format_adapt_report(loop, title: str = "ADAPT decisions") -> str:
+    """Render the control loop's decision log as a table (the ``ADAPT/``
+    section of the Fig.-2 report): one line per decision with the step it
+    fired on, the controller, the action taken, and the trigger channel."""
+    rows = adapt_rows(loop)
+    header = f"{title} ({len(rows)})"
+    if not rows:
+        return f"{header}\n{'=' * len(header)}\n(no adaptation decisions recorded)"
+    step_w = max(len("step"), *(len(str(r["step"])) for r in rows))
+    ctrl_w = max(len("controller"), *(len(str(r["controller"])) for r in rows)) + 2
+    act_w = max(len("action"), *(len(str(r["action"])) for r in rows)) + 2
+    trig_w = max(len("trigger"), *(len(str(r["trigger"])) for r in rows)) + 2
+    lines = [header, "=" * len(header)]
+    lines.append(
+        "step".rjust(step_w)
+        + "  " + "controller".ljust(ctrl_w)
+        + "action".ljust(act_w)
+        + "trigger".ljust(trig_w)
+        + "detail"
+    )
+    lines.append("-" * len(lines[-1]))
+    for r in rows:
+        detail = " ".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in r["detail"].items()
+        )
+        lines.append(
+            str(r["step"]).rjust(step_w)
+            + "  " + str(r["controller"]).ljust(ctrl_w)
+            + str(r["action"]).ljust(act_w)
+            + str(r["trigger"]).ljust(trig_w)
+            + detail
+        )
+    return "\n".join(lines)
+
+
 def format_report(
-    db: Optional[TimerDB] = None,
+    db: TimerDB | None = None,
     channels: Sequence[str] = ("walltime", "cputime"),
     prefix: str = "",
     title: str = "Timer report",
+    adapt=None,
 ) -> str:
-    """Render the standard timer report (cf. paper Fig. 2)."""
+    """Render the standard timer report (cf. paper Fig. 2).
+
+    Pass a ``repro.adapt.ControlLoop`` as ``adapt`` to append the ``ADAPT/``
+    decision-log section (every runtime adaptation: when, trigger channel,
+    action taken) under the timer table.
+    """
     db = db if db is not None else timer_db()
     rows = report_rows(db, channels, prefix)
     name_w = max([len(r["timer"]) for r in rows] + [len("Timer")]) + 2
@@ -120,13 +191,16 @@ def format_report(
         for ch in channels:
             line += " " + f"{_channel_value(total, ch):.8f}"[:col_w].rjust(col_w)
         lines.append(line)
+    if adapt is not None:
+        lines.append("")
+        lines.append(format_adapt_report(adapt))
     return "\n".join(lines)
 
 
-def bin_distribution(db: Optional[TimerDB] = None) -> Dict[str, float]:
+def bin_distribution(db: TimerDB | None = None) -> dict[str, float]:
     """Wall-time distribution over schedule bins (paper Fig. 1 right)."""
     db = db if db is not None else timer_db()
-    out: Dict[str, float] = {}
+    out: dict[str, float] = {}
     for timer in db.timers():
         if timer.name.startswith("bin/"):
             out[timer.name[len("bin/"):]] = timer.seconds()
@@ -136,13 +210,13 @@ def bin_distribution(db: Optional[TimerDB] = None) -> Dict[str, float]:
 class TimerLogger:
     """Appends timer-DB snapshots as JSON lines for post-mortem review."""
 
-    def __init__(self, path: str, db: Optional[TimerDB] = None) -> None:
+    def __init__(self, path: str, db: TimerDB | None = None) -> None:
         self.path = path
         self._db = db if db is not None else timer_db()
         directory = os.path.dirname(os.path.abspath(path))
         os.makedirs(directory, exist_ok=True)
 
-    def log(self, iteration: int, extra: Optional[Mapping[str, object]] = None) -> None:
+    def log(self, iteration: int, extra: Mapping[str, object] | None = None) -> None:
         record = {
             "t": time.time(),
             "iteration": iteration,
@@ -153,7 +227,7 @@ class TimerLogger:
         with open(self.path, "a") as f:
             f.write(json.dumps(record) + "\n")
 
-    def read_all(self) -> List[dict]:
+    def read_all(self) -> list[dict]:
         if not os.path.exists(self.path):
             return []
         with open(self.path) as f:

@@ -25,10 +25,12 @@ Cactus schedule.ccl.
 
 from __future__ import annotations
 
+from collections.abc import Callable, Sequence
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any
 
 from .timers import TimerDB, timer_db
+
 
 __all__ = ["BINS", "RunState", "ScheduledRoutine", "Scheduler", "schedule_bin_timer_name"]
 
@@ -54,7 +56,7 @@ class RunState:
     max_iterations: int = 0
     should_terminate: bool = False
     # free-form slots for thorns (params, opt state, data iterator, ...)
-    slots: Dict[str, Any] = field(default_factory=dict)
+    slots: dict[str, Any] = field(default_factory=dict)
 
     def __getitem__(self, key: str) -> Any:
         return self.slots[key]
@@ -73,7 +75,7 @@ class ScheduledRoutine:
     fn: Callable[[RunState], None]
     bin: str
     every: int = 1  # run when iteration % every == 0
-    when: Optional[Callable[[RunState], bool]] = None
+    when: Callable[[RunState], bool] | None = None
     before: Sequence[str] = ()
     after: Sequence[str] = ()
 
@@ -93,15 +95,15 @@ class ScheduleError(RuntimeError):
 class Scheduler:
     """Executes scheduled routines bin by bin, wrapping everything in timers."""
 
-    def __init__(self, db: Optional[TimerDB] = None) -> None:
+    def __init__(self, db: TimerDB | None = None) -> None:
         self._db = db if db is not None else timer_db()
-        self._routines: Dict[str, List[ScheduledRoutine]] = {b: [] for b in BINS}
-        self._sorted: Dict[str, Optional[List[ScheduledRoutine]]] = {b: None for b in BINS}
+        self._routines: dict[str, list[ScheduledRoutine]] = {b: [] for b in BINS}
+        self._sorted: dict[str, list[ScheduledRoutine] | None] = {b: None for b in BINS}
         self._total_handle = self._db.create("simulation/total")
         # resolved-once timer handles: bin dispatch stays on the handle-indexed
         # TimerDB fast path instead of re-resolving names every invocation
-        self._routine_handles: Dict[str, int] = {}
-        self._bin_handles: Dict[str, int] = {}
+        self._routine_handles: dict[str, int] = {}
+        self._bin_handles: dict[str, int] = {}
 
     @property
     def db(self) -> TimerDB:
@@ -114,9 +116,9 @@ class Scheduler:
         *,
         bin: str,
         thorn: str,
-        name: Optional[str] = None,
+        name: str | None = None,
         every: int = 1,
-        when: Optional[Callable[[RunState], bool]] = None,
+        when: Callable[[RunState], bool] | None = None,
         before: Sequence[str] = (),
         after: Sequence[str] = (),
     ) -> ScheduledRoutine:
@@ -138,22 +140,22 @@ class Scheduler:
         self._sorted[bin] = None
         return routine
 
-    def routines(self, bin: str) -> List[ScheduledRoutine]:
+    def routines(self, bin: str) -> list[ScheduledRoutine]:
         return list(self._routines[bin])
 
     # -- ordering ---------------------------------------------------------------
-    def _order(self, bin: str) -> List[ScheduledRoutine]:
+    def _order(self, bin: str) -> list[ScheduledRoutine]:
         cached = self._sorted[bin]
         if cached is not None:
             return cached
         routines = self._routines[bin]
-        by_name: Dict[str, ScheduledRoutine] = {}
+        by_name: dict[str, ScheduledRoutine] = {}
         for r in routines:
             by_name[r.name] = r
             by_name[r.qualified] = r
         # Build edges: a -> b means a must run before b.
-        edges: Dict[str, set] = {r.qualified: set() for r in routines}
-        indeg: Dict[str, int] = {r.qualified: 0 for r in routines}
+        edges: dict[str, set] = {r.qualified: set() for r in routines}
+        indeg: dict[str, int] = {r.qualified: 0 for r in routines}
         def add_edge(a: ScheduledRoutine, b: ScheduledRoutine) -> None:
             if b.qualified not in edges[a.qualified]:
                 edges[a.qualified].add(b.qualified)
@@ -166,7 +168,7 @@ class Scheduler:
                 if other in by_name:
                     add_edge(by_name[other], r)
         # Kahn, stable by registration order.
-        order: List[ScheduledRoutine] = []
+        order: list[ScheduledRoutine] = []
         ready = [r for r in routines if indeg[r.qualified] == 0]
         qual_to_routine = {r.qualified: r for r in routines}
         while ready:
@@ -193,6 +195,32 @@ class Scheduler:
             routine.fn(state)
         finally:
             self._db.stop(handle)
+
+    def attach_control_loop(
+        self,
+        loop,
+        *,
+        bin: str = "ANALYSIS",
+        every: int = 1,
+        thorn: str = "adapt",
+        name: str = "control_loop",
+    ) -> ScheduledRoutine:
+        """Drive a :class:`repro.adapt.ControlLoop` from the schedule.
+
+        The loop is polled as an ordinary scheduled routine (duck-typed: any
+        object with ``poll(step)``), so control decisions are caliper-timed
+        like every other routine — the cost of adapting shows up in the same
+        report as the cost of computing.  Default placement is the ANALYSIS
+        bin: measurements from this iteration's EVOL are in the database, and
+        decisions are ready before CHECKPOINT/OUTPUT consume them.
+        """
+        return self.schedule(
+            lambda state: loop.poll(state.iteration),
+            bin=bin,
+            thorn=thorn,
+            name=name,
+            every=every,
+        )
 
     def run_bin(self, bin: str, state: RunState) -> None:
         bin_handle = self._bin_handles.get(bin)

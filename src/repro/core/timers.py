@@ -38,8 +38,8 @@ from __future__ import annotations
 
 import functools
 import threading
+from collections.abc import Callable, Iterator, Mapping
 from contextlib import contextmanager
-from typing import Callable, Dict, Iterator, List, Mapping, Optional
 
 from . import clocks as _clocks
 from .clocks import _REGISTRY_VERSION as _VERSION  # atomic int read; hot path
@@ -67,13 +67,13 @@ class _FusedClockView:
     __slots__ = ("name", "units", "_timer", "_channels", "_vmarks",
                  "_cached_layout", "_cached_indices")
 
-    def __init__(self, timer: "Timer", name: str, channels, units) -> None:
+    def __init__(self, timer: Timer, name: str, channels, units) -> None:
         self.name = name
         self.units = dict(units)
         self._timer = timer
         self._channels = tuple(channels)
-        self._vmarks: Optional[Dict[str, float]] = None
-        self._cached_layout: Optional[_clocks.ChannelLayout] = None
+        self._vmarks: dict[str, float] | None = None
+        self._cached_layout: _clocks.ChannelLayout | None = None
         self._cached_indices: tuple = ()
 
     # -- helpers (timer lock held) --------------------------------------------
@@ -85,7 +85,7 @@ class _FusedClockView:
             self._cached_layout = layout
         return self._cached_indices
 
-    def _current_locked(self) -> List[float]:
+    def _current_locked(self) -> list[float]:
         """Channel values incl. live timer window; timer lock held."""
         timer = self._timer
         accum = timer._accum
@@ -116,7 +116,7 @@ class _FusedClockView:
             values=dict(zip(self._channels, vals)), units=dict(self.units)
         )
 
-    def get(self) -> Dict[str, float]:
+    def get(self) -> dict[str, float]:
         return self.read().values
 
     def set(self, values: Mapping[str, float]) -> None:
@@ -204,14 +204,14 @@ class Timer:
         self.handle = handle
         self.count = 0  # number of completed start/stop windows
         self.running = False
-        self.parent_name: Optional[str] = None
+        self.parent_name: str | None = None
         self._lock = threading.Lock()
         # lazy: resolved on first start/read, re-resolved on registry bumps
-        self._layout: Optional[_clocks.ChannelLayout] = None
-        self._accum: List[float] = []
-        self._marks: List[float] = []
-        self._nonfused: Dict[str, _clocks.Clock] = {}
-        self._views: Optional[Dict[str, object]] = None
+        self._layout: _clocks.ChannelLayout | None = None
+        self._accum: list[float] = []
+        self._marks: list[float] = []
+        self._nonfused: dict[str, _clocks.Clock] = {}
+        self._views: dict[str, object] | None = None
 
     # -- layout management (lock held) ----------------------------------------
     def _sync_layout_locked(self) -> None:
@@ -231,7 +231,7 @@ class Timer:
                 j = get(key)
                 if j is not None:
                     accum[j] = old_accum[i]
-        nonfused: Dict[str, _clocks.Clock] = {}
+        nonfused: dict[str, _clocks.Clock] = {}
         for name in new.nonfused_names:
             clock = self._nonfused.get(name)
             nonfused[name] = clock if clock is not None else _clocks.make_clock(name)
@@ -296,7 +296,7 @@ class Timer:
             self.count = 0
 
     # -- queries ---------------------------------------------------------------
-    def _values_locked(self) -> List[float]:
+    def _values_locked(self) -> list[float]:
         vals = list(self._accum)
         if self.running:
             now = self._layout.sample()
@@ -304,14 +304,14 @@ class Timer:
             vals = [a + n - m for a, n, m in zip(vals, now, marks)]
         return vals
 
-    def read(self) -> Dict[str, _clocks.ClockValues]:
+    def read(self) -> dict[str, _clocks.ClockValues]:
         """Readings for all clocks (running timers report up-to-now values)."""
         with self._lock:
             if not self.running:
                 self._sync_layout_locked()
             layout = self._layout
             vals = self._values_locked()
-            out: Dict[str, _clocks.ClockValues] = {}
+            out: dict[str, _clocks.ClockValues] = {}
             for name, sl, channels, units in layout.clock_meta:
                 out[name] = _clocks.ClockValues(
                     values=dict(zip(channels, vals[sl])), units=dict(units)
@@ -320,7 +320,7 @@ class Timer:
                 out[name] = clock.read()
         return out
 
-    def read_flat(self) -> Dict[str, float]:
+    def read_flat(self) -> dict[str, float]:
         """Flattened {channel: value} view across all clocks.
 
         Channel names colliding across clocks come back namespaced as
@@ -398,7 +398,7 @@ class Timer:
                 self._marks[idx] = now[idx]
 
     @property
-    def clocks(self) -> Dict[str, object]:
+    def clocks(self) -> dict[str, object]:
         """Compatibility view: {clock name: clock object}.  Fused clocks are
         array-backed proxies over this timer's flat storage; slow-path clocks
         are the real per-timer ``Clock`` instances."""
@@ -407,7 +407,7 @@ class Timer:
                 self._sync_layout_locked()
             if self._views is None:
                 layout = self._layout
-                views: Dict[str, object] = {}
+                views: dict[str, object] = {}
                 for name, _sl, channels, units in layout.clock_meta:
                     views[name] = _FusedClockView(self, name, channels, units)
                 views.update(self._nonfused)
@@ -425,8 +425,8 @@ class TimerDB:
 
     def __init__(self) -> None:
         self._lock = threading.RLock()
-        self._timers: List[Timer] = []
-        self._by_name: Dict[str, int] = {}
+        self._timers: list[Timer] = []
+        self._by_name: dict[str, int] = {}
         self._tls = threading.local()
 
     # -- creation / lookup -----------------------------------------------------
@@ -443,7 +443,7 @@ class TimerDB:
             self._by_name[name] = handle
             return handle
 
-    def get(self, ref: "int | str") -> Timer:
+    def get(self, ref: int | str) -> Timer:
         with self._lock:
             if isinstance(ref, str):
                 if ref not in self._by_name:
@@ -457,24 +457,24 @@ class TimerDB:
         with self._lock:
             return name in self._by_name
 
-    def names(self) -> List[str]:
+    def names(self) -> list[str]:
         with self._lock:
             return [t.name for t in self._timers]
 
-    def timers(self) -> List[Timer]:
+    def timers(self) -> list[Timer]:
         with self._lock:
             return list(self._timers)
 
     # -- running stack (hierarchy) ----------------------------------------------
-    def _stack(self) -> List[str]:
+    def _stack(self) -> list[str]:
         try:
             return self._tls.stack
         except AttributeError:
-            stack: List[str] = []
+            stack: list[str] = []
             self._tls.stack = stack
             return stack
 
-    def start(self, ref: "int | str") -> None:
+    def start(self, ref: int | str) -> None:
         timers = self._timers
         if type(ref) is int and 0 <= ref < len(timers):
             timer = timers[ref]  # fast path: append-only list, no lock
@@ -488,7 +488,7 @@ class TimerDB:
         timer.start()
         stack.append(timer.name)
 
-    def stop(self, ref: "int | str") -> None:
+    def stop(self, ref: int | str) -> None:
         timers = self._timers
         if type(ref) is int and 0 <= ref < len(timers):
             timer = timers[ref]
@@ -510,20 +510,20 @@ class TimerDB:
                     del stack[i]
                     break
 
-    def reset(self, ref: "int | str") -> None:
+    def reset(self, ref: int | str) -> None:
         self.get(ref).reset()
 
     def reset_all(self) -> None:
         for timer in self.timers():
             timer.reset()
 
-    def read(self, ref: "int | str") -> Dict[str, _clocks.ClockValues]:
+    def read(self, ref: int | str) -> dict[str, _clocks.ClockValues]:
         return self.get(ref).read()
 
     # -- queries -------------------------------------------------------------
-    def snapshot(self) -> Dict[str, Dict[str, float]]:
+    def snapshot(self) -> dict[str, dict[str, float]]:
         """{timer name: flattened channel readings + count} for all timers."""
-        out: Dict[str, Dict[str, float]] = {}
+        out: dict[str, dict[str, float]] = {}
         for timer in self.timers():
             flat = timer.read_flat()
             flat["count"] = float(timer.count)
@@ -565,7 +565,7 @@ def reset_timer_db() -> TimerDB:
     return _DB
 
 
-def timed(name: Optional[str] = None) -> Callable:
+def timed(name: str | None = None) -> Callable:
     """Decorator placing caliper points around a function."""
 
     def deco(fn: Callable) -> Callable:

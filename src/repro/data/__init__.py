@@ -1,4 +1,6 @@
-from .synthetic import SyntheticConfig, SyntheticLM
+
 from .loader import DataLoader
+from .synthetic import SyntheticConfig, SyntheticLM
+
 
 __all__ = ["SyntheticConfig", "SyntheticLM", "DataLoader"]

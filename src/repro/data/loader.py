@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, Optional
 
 import numpy as np
 
@@ -24,9 +23,9 @@ class DataLoader:
         self.source = source
         self._step = int(start_step)
         self._prefetch = int(prefetch)
-        self._q: "queue.Queue" = queue.Queue(maxsize=max(prefetch, 1))
+        self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
         self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
         if prefetch > 0:
             self._thread = threading.Thread(target=self._worker, daemon=True)
             self._thread.start()
@@ -43,7 +42,7 @@ class DataLoader:
                     continue
             step += 1
 
-    def next(self) -> Dict[str, np.ndarray]:
+    def next(self) -> dict[str, np.ndarray]:
         if self._thread is None:
             batch = self.source.batch_at(self._step)
             self._step += 1
@@ -53,7 +52,7 @@ class DataLoader:
         return batch
 
     # -- checkpointable state ------------------------------------------------
-    def state(self) -> Dict[str, int]:
+    def state(self) -> dict[str, int]:
         return {"step": self._step}
 
     def close(self) -> None:
@@ -68,5 +67,5 @@ class DataLoader:
             self._thread.join(timeout=2.0)
 
     @classmethod
-    def restore(cls, source: SyntheticLM, state: Dict[str, int], prefetch: int = 2):
+    def restore(cls, source: SyntheticLM, state: dict[str, int], prefetch: int = 2):
         return cls(source, start_step=int(state["step"]), prefetch=prefetch)

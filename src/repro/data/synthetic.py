@@ -16,7 +16,6 @@ the same counter-based PRNG.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
 
 import numpy as np
 
@@ -35,14 +34,14 @@ class SyntheticConfig:
 
 
 class SyntheticLM:
-    def __init__(self, cfg: SyntheticConfig, arch: Optional[ArchConfig] = None) -> None:
+    def __init__(self, cfg: SyntheticConfig, arch: ArchConfig | None = None) -> None:
         self.cfg = cfg
         self.arch = arch
 
     def _rng(self, step: int) -> np.random.Generator:
         return np.random.default_rng(np.random.SeedSequence([self.cfg.seed, step]))
 
-    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
         c = self.cfg
         rng = self._rng(step)
         b, s, v = c.global_batch, c.seq_len, c.vocab_size

@@ -12,23 +12,21 @@ Modules
 -------
 ``sharding``   logical-axis rules -> ``PartitionSpec``/``NamedSharding``
 ``context``    ambient (mesh, rules) context + ``constrain`` annotations
-``meshutil``   local/CI-friendly device-mesh construction
+``meshutil``   local/CI-friendly device-mesh construction + eviction rebuild
 ``stragglers`` cross-host step-time reduction + slow-host detection
-``pipeline``   GPipe-style microbatched pipeline parallelism
+``pipeline``   GPipe-style microbatched pipeline parallelism + microbatch plans
 ``compat``     shims over jax API drift (``shard_map``, ``make_mesh``)
+
+Acting on what the reduction finds — rebalancing microbatch plans, evicting
+hosts, rebuilding meshes — is orchestrated by :mod:`repro.adapt`.
 """
 
 from .context import constrain, current_sharding, use_sharding
-from .meshutil import local_mesh
-from .sharding import (
-    DEFAULT_RULES,
-    FSDP_RULES,
-    Axes,
-    ShardingRules,
-    spec_for,
-    tree_shardings,
-)
-from .stragglers import StragglerDetector, StragglerReport
+from .meshutil import local_mesh, remove_host
+from .pipeline import MicrobatchPlan
+from .sharding import DEFAULT_RULES, FSDP_RULES, Axes, ShardingRules, spec_for, tree_shardings
+from .stragglers import LocalTransport, StragglerDetector, StragglerReport
+
 
 __all__ = [
     "Axes",
@@ -41,6 +39,9 @@ __all__ = [
     "current_sharding",
     "constrain",
     "local_mesh",
+    "remove_host",
+    "MicrobatchPlan",
+    "LocalTransport",
     "StragglerDetector",
     "StragglerReport",
 ]

@@ -12,7 +12,8 @@ Callers use :func:`shard_map` / :func:`make_mesh` from here and stay agnostic.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Sequence
+from collections.abc import Callable, Sequence
+from typing import Any
 
 import jax
 
@@ -64,7 +65,7 @@ def make_mesh(
     axis_shapes: Sequence[int],
     axis_names: Sequence[str],
     *,
-    devices: Optional[Sequence[Any]] = None,
+    devices: Sequence[Any] | None = None,
     auto_axis_types: bool = False,
 ) -> jax.sharding.Mesh:
     """``jax.make_mesh`` that tolerates jax versions without ``axis_types``."""

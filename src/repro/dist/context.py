@@ -11,13 +11,14 @@ its sharding annotations unconditionally and stays runnable everywhere.
 from __future__ import annotations
 
 import threading
+from collections.abc import Iterator
 from contextlib import contextmanager
-from typing import Iterator, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding
 
 from .sharding import ShardingRules, spec_for
+
 
 __all__ = ["use_sharding", "current_sharding", "constrain"]
 
@@ -35,12 +36,12 @@ def use_sharding(mesh: Mesh, rules: ShardingRules) -> Iterator[None]:
         _STATE.context = previous
 
 
-def current_sharding() -> Optional[Tuple[Mesh, ShardingRules]]:
+def current_sharding() -> tuple[Mesh, ShardingRules] | None:
     """The active (mesh, rules) pair, or ``None`` outside ``use_sharding``."""
     return getattr(_STATE, "context", None)
 
 
-def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
     """Constrain ``x`` to the sharding its logical axes resolve to.
 
     One ``logical_axes`` entry per dimension of ``x`` (``None`` = replicated

@@ -3,21 +3,25 @@
 ``local_mesh`` builds a device mesh from a settings-style ``mesh_shape`` over
 whatever devices this process has — one CPU in unit tests, eight forced host
 devices in the mini dry-run, real accelerators in production — with clear
-errors when the requested shape cannot be satisfied.  Production pod topologies
-live in :mod:`repro.launch.mesh`; this module is the everything-else path.
+errors when the requested shape cannot be satisfied.  ``remove_host`` is the
+eviction rebuild: the same mesh minus one slice along an axis, used by the
+straggler-response controller when a host is pulled from the fleet.
+Production pod topologies live in :mod:`repro.launch.mesh`; this module is the
+everything-else path.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 from .compat import make_mesh
 
-__all__ = ["local_mesh", "default_axis_names"]
+__all__ = ["local_mesh", "default_axis_names", "remove_host"]
 
 _AXIS_NAMES_BY_RANK = {
     1: ("data",),
@@ -26,7 +30,7 @@ _AXIS_NAMES_BY_RANK = {
 }
 
 
-def default_axis_names(rank: int) -> Tuple[str, ...]:
+def default_axis_names(rank: int) -> tuple[str, ...]:
     """Conventional axis names for a mesh of the given rank."""
     if rank not in _AXIS_NAMES_BY_RANK:
         raise ValueError(
@@ -38,7 +42,7 @@ def default_axis_names(rank: int) -> Tuple[str, ...]:
 
 def local_mesh(
     mesh_shape: Sequence[int] = (1, 1),
-    axis_names: Optional[Sequence[str]] = None,
+    axis_names: Sequence[str] | None = None,
 ) -> Mesh:
     """Build a mesh of ``mesh_shape`` from this process's devices.
 
@@ -62,3 +66,29 @@ def local_mesh(
             f"--xla_force_host_platform_device_count={n_needed} for CPU dry-runs"
         )
     return make_mesh(shape, names, devices=devices[:n_needed])
+
+
+def remove_host(mesh: Mesh, index: int, axis: str | None = None) -> Mesh:
+    """Rebuild ``mesh`` without slice ``index`` along ``axis`` — the straggler
+    eviction path.
+
+    Surviving devices keep their relative order, so existing logical-axis
+    sharding rules keep applying to the shrunk mesh; only the named axis loses
+    one slice.  ``axis`` defaults to the mesh's first (host/data) axis.  A
+    size-1 axis refuses the removal: a fleet cannot evict its last slice.
+    """
+    names = tuple(mesh.axis_names)
+    axis = axis if axis is not None else names[0]
+    if axis not in names:
+        raise ValueError(f"mesh has no axis {axis!r}; axes are {names}")
+    pos = names.index(axis)
+    size = int(mesh.shape[axis])
+    if size < 2:
+        raise ValueError(
+            f"cannot remove slice {index} from axis {axis!r} of size {size}: "
+            f"a mesh cannot lose its last slice"
+        )
+    if not 0 <= index < size:
+        raise ValueError(f"slice {index} out of range [0, {size}) on axis {axis!r}")
+    devices = np.delete(np.asarray(mesh.devices), index, axis=pos)
+    return Mesh(devices, names)

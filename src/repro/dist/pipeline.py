@@ -9,11 +9,19 @@ predecessor shipped via ``ppermute`` at tick ``t-1``.  After
 This is the forward-only schedule (serving / dry-run measurement path); the
 bubble fraction is ``(n_stages - 1) / (n_micro + n_stages - 1)``, so more
 microbatches amortize the fill/drain cost exactly as in the GPipe paper.
+
+:class:`MicrobatchPlan` is the fleet-level assignment above ``gpipe_forward``:
+a weighted split of the global microbatch count across data-parallel hosts.
+Each host feeds its share through its own pipeline; the straggler-response
+controller (:mod:`repro.adapt.stragglers`) shrinks a slow host's weight so its
+share — and therefore its per-step walltime — drops, and removes the host
+entirely on eviction.
 """
 
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable, Iterable
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +29,74 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .compat import shard_map
 
-__all__ = ["gpipe_forward"]
+__all__ = ["MicrobatchPlan", "gpipe_forward"]
+
+
+@dataclass
+class MicrobatchPlan:
+    """Weighted assignment of ``n_micro`` microbatches to data-parallel hosts.
+
+    ``weights`` maps each active host to a positive weight; :meth:`shares`
+    apportions the global microbatch count proportionally (largest-remainder
+    rounding) with every active host guaranteed at least one microbatch, so a
+    rebalanced host still participates until it is explicitly evicted.
+    """
+
+    n_micro: int
+    weights: dict[int, float] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.n_micro < max(len(self.weights), 1):
+            raise ValueError(
+                f"n_micro={self.n_micro} cannot cover {len(self.weights)} hosts "
+                f"with at least one microbatch each"
+            )
+        for host, w in self.weights.items():
+            if w <= 0.0:
+                raise ValueError(f"host {host} weight must be positive, got {w}")
+
+    @classmethod
+    def equal(cls, hosts: Iterable[int], n_micro: int) -> MicrobatchPlan:
+        """Uniform plan over ``hosts`` (the pre-adaptation default)."""
+        return cls(n_micro=n_micro, weights={int(h): 1.0 for h in hosts})
+
+    @property
+    def hosts(self) -> list[int]:
+        return sorted(self.weights)
+
+    def set_weight(self, host: int, weight: float) -> None:
+        if host not in self.weights:
+            raise ValueError(f"host {host} is not in the plan {self.hosts}")
+        if weight <= 0.0:
+            raise ValueError(f"weight must be positive, got {weight}")
+        self.weights[host] = float(weight)
+
+    def evict(self, host: int) -> None:
+        """Remove ``host``; its share is re-apportioned among survivors."""
+        if host not in self.weights:
+            raise ValueError(f"host {host} is not in the plan {self.hosts}")
+        if len(self.weights) <= 1:
+            raise ValueError("cannot evict the last host in the plan")
+        del self.weights[host]
+
+    def shares(self) -> dict[int, int]:
+        """{host: microbatch count}; counts sum to ``n_micro``, each >= 1."""
+        hosts = self.hosts
+        if not hosts:
+            raise ValueError("plan has no hosts")
+        total_w = sum(self.weights.values())
+        extra = self.n_micro - len(hosts)  # one reserved per host
+        quotas = {h: extra * self.weights[h] / total_w for h in hosts}
+        counts = {h: int(quotas[h]) for h in hosts}
+        leftover = extra - sum(counts.values())
+        # largest remainder, host id as the deterministic tie-break
+        by_remainder = sorted(hosts, key=lambda h: (counts[h] - quotas[h], h))
+        for h in by_remainder[:leftover]:
+            counts[h] += 1
+        return {h: counts[h] + 1 for h in hosts}
+
+    def share(self, host: int) -> int:
+        return self.shares()[host]
 
 
 def gpipe_forward(

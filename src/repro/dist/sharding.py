@@ -21,7 +21,7 @@ Trailing ``None`` entries are trimmed so specs compare cleanly
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
+from collections.abc import Iterable, Mapping, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
@@ -35,7 +35,7 @@ __all__ = [
     "tree_shardings",
 ]
 
-AxisAssignment = Union[None, str, Sequence[str]]
+AxisAssignment = str | Sequence[str] | None
 
 
 class Axes(tuple):
@@ -49,14 +49,14 @@ class Axes(tuple):
 
     __slots__ = ()
 
-    def __new__(cls, axes: Iterable[Optional[str]] = ()) -> "Axes":
+    def __new__(cls, axes: Iterable[str | None] = ()) -> Axes:
         return tuple.__new__(cls, tuple(axes))
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"Axes{tuple.__repr__(self)}"
 
 
-def _normalize(assignment: AxisAssignment) -> Tuple[str, ...]:
+def _normalize(assignment: AxisAssignment) -> tuple[str, ...]:
     if assignment is None:
         return ()
     if isinstance(assignment, str):
@@ -79,16 +79,16 @@ class ShardingRules:
             self, "_table", {k: _normalize(v) for k, v in table.items()}
         )
 
-    def get(self, logical: str) -> Tuple[str, ...]:
+    def get(self, logical: str) -> tuple[str, ...]:
         """Mesh axes assigned to ``logical`` (``()`` if unmapped)."""
         return self._table.get(logical, ())
 
     def items(self):
         return self._table.items()
 
-    def with_overrides(self, **overrides: AxisAssignment) -> "ShardingRules":
+    def with_overrides(self, **overrides: AxisAssignment) -> ShardingRules:
         """A new table with some assignments replaced; ``self`` is untouched."""
-        table: Dict[str, AxisAssignment] = dict(self._table)
+        table: dict[str, AxisAssignment] = dict(self._table)
         table.update(overrides)
         return ShardingRules(table)
 
@@ -126,12 +126,12 @@ DEFAULT_RULES = ShardingRules(
 FSDP_RULES = DEFAULT_RULES.with_overrides(embed=("data",))
 
 
-def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+def _mesh_sizes(mesh: Mesh) -> dict[str, int]:
     return dict(mesh.shape)
 
 
 def spec_for(
-    axes: Sequence[Optional[str]],
+    axes: Sequence[str | None],
     shape: Sequence[int],
     mesh: Mesh,
     rules: ShardingRules,

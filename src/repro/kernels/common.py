@@ -2,14 +2,14 @@
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 
 __all__ = ["default_interpret", "tpu_compiler_params"]
 
 
-def default_interpret(interpret: Optional[bool]) -> bool:
+def default_interpret(interpret: bool | None) -> bool:
     """Pallas TPU kernels run in interpret mode on non-TPU backends.
 
     This container is CPU-only: interpret=True executes the kernel body with

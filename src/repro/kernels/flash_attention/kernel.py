@@ -16,7 +16,6 @@ are supported; fully-masked K blocks are skipped with ``pl.when``.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,7 @@ __all__ = ["flash_fwd", "flash_bwd_dq", "flash_bwd_dkv"]
 _NEG_INF = -2.0e38
 
 
-def _mask(bias_shape, q_start, k_start, causal: bool, window: Optional[int]):
+def _mask(bias_shape, q_start, k_start, causal: bool, window: int | None):
     """Additive mask for a (block_q, block_k) tile, from absolute offsets."""
     bq, bk = bias_shape
     q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
@@ -97,7 +96,7 @@ def flash_fwd(
     v: jax.Array,
     *,
     causal: bool,
-    window: Optional[int],
+    window: int | None,
     block_q: int,
     block_k: int,
     interpret: bool,

@@ -9,14 +9,14 @@ Falls back to the chunked pure-JAX implementation when shapes do not tile.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from . import kernel as K
 from ...models.attention import chunked_attention
 from ..common import default_interpret
-from . import kernel as K
+
 
 __all__ = ["flash_attention"]
 
@@ -73,10 +73,10 @@ def flash_attention(
     v: jax.Array,
     *,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: Optional[bool] = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Model layout in/out: q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd)."""
     b, s, h, hd = q.shape

@@ -10,7 +10,6 @@ streams a/b tiles from HBM exactly once.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +53,11 @@ def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hout_ref, state_scr, *, chunk, n_
 def rglru_pallas(
     a: jax.Array,
     b: jax.Array,
-    h0: Optional[jax.Array] = None,
+    h0: jax.Array | None = None,
     chunk: int = 128,
     d_block: int = 512,
-    interpret: Optional[bool] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
     """a, b: (B, S, D); h0: (B, D). Returns (h (B,S,D), final (B,D))."""
     bsz, s, d = a.shape
     interpret = default_interpret(interpret)

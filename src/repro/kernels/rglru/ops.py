@@ -10,19 +10,18 @@ kernel.  The initial state is folded into the first element.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 
 from .ref import linear_recurrence_ref
 
+
 __all__ = ["linear_recurrence"]
 
 
 def linear_recurrence_assoc(
-    a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None
-) -> Tuple[jax.Array, jax.Array]:
+    a: jax.Array, b: jax.Array, h0: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
     af = a.astype(jnp.float32)
     bf = b.astype(jnp.float32)
     if h0 is not None:
@@ -40,9 +39,9 @@ def linear_recurrence_assoc(
 def linear_recurrence(
     a: jax.Array,
     b: jax.Array,
-    h0: Optional[jax.Array] = None,
+    h0: jax.Array | None = None,
     impl: str = "assoc",
-) -> Tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array]:
     if impl == "ref":
         return linear_recurrence_ref(a, b, h0)
     if impl == "assoc":

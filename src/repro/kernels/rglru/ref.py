@@ -9,17 +9,16 @@ already scaled by sqrt(1−a²)).  Sequential scan over time; f32 state.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
+
 
 __all__ = ["linear_recurrence_ref"]
 
 
 def linear_recurrence_ref(
-    a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None
-) -> Tuple[jax.Array, jax.Array]:
+    a: jax.Array, b: jax.Array, h0: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
     """a, b: (B, S, D); h0: (B, D). Returns (h (B,S,D), final (B,D))."""
     bsz, _, d = a.shape
     af = a.astype(jnp.float32)

@@ -9,7 +9,6 @@ scratch over the sequential grid dimension.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +73,7 @@ def _bwd_kernel(x_ref, w_ref, dy_ref, dx_ref, dw_ref, dw_scr, *, eps, n_blocks):
 
 
 def rmsnorm_bwd(x: jax.Array, w: jax.Array, dy: jax.Array, eps: float = 1e-5,
-                rows_block: int = 128, interpret=None) -> Tuple[jax.Array, jax.Array]:
+                rows_block: int = 128, interpret=None) -> tuple[jax.Array, jax.Array]:
     n, d = x.shape
     interpret = default_interpret(interpret)
     if n % rows_block != 0:

@@ -3,12 +3,12 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 
-from ..common import default_interpret
 from . import kernel as K
+from ..common import default_interpret
+
 
 __all__ = ["rms_norm_fused"]
 
@@ -32,7 +32,7 @@ _rmsnorm.defvjp(_fwd, _bwd)
 
 
 def rms_norm_fused(
-    x: jax.Array, w: jax.Array, eps: float = 1e-5, interpret: Optional[bool] = None
+    x: jax.Array, w: jax.Array, eps: float = 1e-5, interpret: bool | None = None
 ) -> jax.Array:
     """Fused RMSNorm over the last axis; any leading shape."""
     interpret = default_interpret(interpret)

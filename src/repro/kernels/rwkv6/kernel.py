@@ -14,7 +14,6 @@ chunks with a resident state is the right TPU shape.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,10 +68,10 @@ def wkv6_pallas(
     v: jax.Array,
     w: jax.Array,
     u: jax.Array,
-    state: Optional[jax.Array] = None,
+    state: jax.Array | None = None,
     chunk: int = 64,
-    interpret: Optional[bool] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
     """Shapes as ops.wkv6: r/k/w (B,S,H,K); v (B,S,H,V); u (H,K); state (B,H,K,V)."""
     b, s, h, dk = r.shape
     dv = v.shape[-1]

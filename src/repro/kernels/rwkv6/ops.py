@@ -16,7 +16,6 @@ no overflow; underflow saturates to 0 which is exact in the limit.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,9 +56,9 @@ def wkv6_chunked(
     v: jax.Array,
     w: jax.Array,
     u: jax.Array,
-    state: Optional[jax.Array] = None,
+    state: jax.Array | None = None,
     chunk: int = 32,
-) -> Tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array]:
     b, s, h, dk = r.shape
     dv = v.shape[-1]
     if s % chunk != 0 or s <= chunk:
@@ -89,10 +88,10 @@ def wkv6(
     v: jax.Array,
     w: jax.Array,
     u: jax.Array,
-    state: Optional[jax.Array] = None,
+    state: jax.Array | None = None,
     impl: str = "chunked",
     chunk: int = 32,
-) -> Tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array]:
     """WKV-6 with implementation dispatch ("ref" | "chunked" | "pallas")."""
     if impl == "ref":
         return wkv6_ref(r, k, v, w, u, state)

@@ -11,10 +11,9 @@ Shapes: r/k/w (B,S,H,K); v (B,S,H,V); u (H,K); state (B,H,K,V).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
+
 
 __all__ = ["wkv6_ref"]
 
@@ -25,8 +24,8 @@ def wkv6_ref(
     v: jax.Array,
     w: jax.Array,
     u: jax.Array,
-    state: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
     b, s, h, dk = r.shape
     dv = v.shape[-1]
     rf = r.astype(jnp.float32)

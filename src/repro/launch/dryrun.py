@@ -25,7 +25,7 @@ import json
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 
@@ -39,8 +39,8 @@ from .steps import build_step, rules_for
 ARTIFACT_DIR = os.path.join("artifacts", "dryrun")
 
 
-def _mem_analysis(compiled) -> Dict[str, Any]:
-    out: Dict[str, Any] = {}
+def _mem_analysis(compiled) -> dict[str, Any]:
+    out: dict[str, Any] = {}
     try:
         mem = compiled.memory_analysis()
         for attr in (
@@ -57,7 +57,7 @@ def _mem_analysis(compiled) -> Dict[str, Any]:
     return out
 
 
-def _cost_analysis(compiled) -> Dict[str, float]:
+def _cost_analysis(compiled) -> dict[str, float]:
     try:
         from ..dist.compat import cost_analysis
 
@@ -145,11 +145,11 @@ def _scan_corrected(cfg, shape, multi_pod, rules_overrides, raw_cost, raw_coll, 
     return corrected_cost, corrected_coll, bodies
 
 
-def _diff(a: Dict[str, float], b: Dict[str, float]) -> Dict[str, float]:
+def _diff(a: dict[str, float], b: dict[str, float]) -> dict[str, float]:
     return {k: a.get(k, 0.0) - b.get(k, 0.0) for k in set(a) | set(b) if not k.startswith("_")}
 
 
-def _diff_coll(a: Dict[str, int], b: Dict[str, int]) -> Dict[str, int]:
+def _diff_coll(a: dict[str, int], b: dict[str, int]) -> dict[str, int]:
     return {k: a.get(k, 0) - b.get(k, 0) for k in set(a) | set(b)}
 
 
@@ -159,13 +159,13 @@ def run_cell(
     multi_pod: bool,
     *,
     out_dir: str = ARTIFACT_DIR,
-    rules_overrides: Optional[Dict[str, Any]] = None,
+    rules_overrides: dict[str, Any] | None = None,
     variant: str = "baseline",
-    arch_overrides: Optional[Dict[str, Any]] = None,
+    arch_overrides: dict[str, Any] | None = None,
     verbose: bool = True,
     scan_correction: bool = True,
-    step_kwargs: Optional[Dict[str, Any]] = None,
-) -> Dict[str, Any]:
+    step_kwargs: dict[str, Any] | None = None,
+) -> dict[str, Any]:
     """Lower+compile one cell; write and return the artifact record."""
     cfg = get_config(arch)
     if arch_overrides:
@@ -173,7 +173,7 @@ def run_cell(
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
     mesh_name = "multi" if multi_pod else "single"
-    record: Dict[str, Any] = {
+    record: dict[str, Any] = {
         "arch": arch,
         "shape": shape_name,
         "mesh": mesh_name,
@@ -255,7 +255,7 @@ def run_cell(
     return record
 
 
-def _write(record: Dict[str, Any], out_dir: str) -> None:
+def _write(record: dict[str, Any], out_dir: str) -> None:
     os.makedirs(out_dir, exist_ok=True)
     suffix = "" if record.get("variant", "baseline") == "baseline" else f"__{record['variant']}"
     name = f"{record['arch']}__{record['shape']}__{record['mesh']}{suffix}.json"
@@ -270,9 +270,9 @@ def optimized_settings(arch: str, shape_name: str):
     """
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    arch_over: Dict[str, Any] = {"embed_gather_constraint": True}
-    rules_over: Optional[Dict[str, Any]] = None
-    step_kwargs: Optional[Dict[str, Any]] = None
+    arch_over: dict[str, Any] = {"embed_gather_constraint": True}
+    rules_over: dict[str, Any] | None = None
+    step_kwargs: dict[str, Any] | None = None
     if cfg.moe is not None:
         arch_over["moe_dispatch_mode"] = "tokens"
     if shape.kind == "train":
@@ -314,7 +314,7 @@ def main(argv=None) -> int:
                 if args.skip_existing and os.path.exists(os.path.join(args.out, suffix)):
                     print(f"[dryrun] {suffix}: exists, skipping")
                     continue
-                kwargs: Dict[str, Any] = {}
+                kwargs: dict[str, Any] = {}
                 if args.preset == "optimized":
                     ao, ro, sk = optimized_settings(arch, shape)
                     kwargs = dict(arch_overrides=ao, rules_overrides=ro,

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict
 
 __all__ = ["collective_bytes", "op_census", "parse_sizes"]
 
@@ -49,9 +48,9 @@ def _type_bytes(type_str: str) -> int:
     return total
 
 
-def parse_sizes(hlo_text: str) -> Dict[str, int]:
+def parse_sizes(hlo_text: str) -> dict[str, int]:
     """Instruction name -> output byte size (tuples summed)."""
-    sizes: Dict[str, int] = {}
+    sizes: dict[str, int] = {}
     for line in hlo_text.splitlines():
         m = _DEF_RE.match(line)
         if m:
@@ -64,10 +63,10 @@ _OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
 _NAME_TOKEN = re.compile(r"%?([\w.\-]+)")
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
+def collective_bytes(hlo_text: str) -> dict[str, int]:
     """Per-opcode summed operand bytes for collectives (per-device program)."""
     sizes = parse_sizes(hlo_text)
-    out: Dict[str, int] = defaultdict(int)
+    out: dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
         m = _DEF_RE.match(line)
         if not m:
@@ -104,8 +103,8 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return dict(out)
 
 
-def op_census(hlo_text: str, opcodes=("fusion", "dot", "convolution", "custom-call")) -> Dict[str, int]:
-    counts: Dict[str, int] = defaultdict(int)
+def op_census(hlo_text: str, opcodes=("fusion", "dot", "convolution", "custom-call")) -> dict[str, int]:
+    counts: dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
         m = _DEF_RE.match(line)
         if m:

@@ -11,7 +11,7 @@ lowers ``train_step``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,7 @@ __all__ = [
 ]
 
 
-def rules_for(cfg: ArchConfig, overrides: Optional[Dict[str, Any]] = None) -> ShardingRules:
+def rules_for(cfg: ArchConfig, overrides: dict[str, Any] | None = None) -> ShardingRules:
     rules = FSDP_RULES if cfg.sharding == "tp+fsdp" else DEFAULT_RULES
     if overrides:
         rules = rules.with_overrides(**overrides)
@@ -50,9 +50,9 @@ def _bf16():
 # Input specs per shape cell
 # ---------------------------------------------------------------------------
 
-def batch_axes(cfg: ArchConfig, kind: str) -> Dict[str, Tuple]:
+def batch_axes(cfg: ArchConfig, kind: str) -> dict[str, tuple]:
     """Logical axes of each batch input."""
-    axes: Dict[str, Tuple] = {}
+    axes: dict[str, tuple] = {}
     if kind in ("train",):
         axes["tokens"] = ("batch", "seq")
         axes["targets"] = ("batch", "seq")
@@ -65,13 +65,13 @@ def batch_axes(cfg: ArchConfig, kind: str) -> Dict[str, Tuple]:
     return axes
 
 
-def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
     """ShapeDtypeStruct stand-ins for the step inputs of this cell."""
     b, s = shape.global_batch, shape.seq_len
     i32 = jnp.int32
     if shape.kind == "train":
         text = s - cfg.n_vision_patches if cfg.family == "vlm" else s
-        out: Dict[str, Any] = {
+        out: dict[str, Any] = {
             "tokens": jax.ShapeDtypeStruct((b, text), i32),
             "targets": jax.ShapeDtypeStruct((b, text), i32),
         }
@@ -134,10 +134,10 @@ def _batch_shardings(cfg, shape, mesh, rules):
 @dataclass
 class BuiltStep:
     fn: Any                    # jitted function
-    abstract_inputs: Tuple     # positional abstract args (excluding params/opt)
-    in_shardings: Tuple
+    abstract_inputs: tuple     # positional abstract args (excluding params/opt)
+    in_shardings: tuple
     out_shardings: Any
-    abstract_state: Dict[str, Any]  # {"params": ..., "opt_state": ...} abstract
+    abstract_state: dict[str, Any]  # {"params": ..., "opt_state": ...} abstract
     #: tokens consumed per invocation — launchers feed this into the "tokens"
     #: counter channel (one counter_cell bump per executed step)
     tokens_per_call: int = 0
@@ -149,7 +149,7 @@ def make_train_step(
     mesh: Mesh,
     rules: ShardingRules,
     shape: ShapeConfig,
-    opt_cfg: AdamWConfig = AdamWConfig(),
+    opt_cfg: AdamWConfig | None = None,
     peak_lr: float = 3e-4,
     warmup_steps: int = 100,
     total_steps: int = 10000,
@@ -162,6 +162,7 @@ def make_train_step(
     (§Perf H3)."""
     p_axes = M.param_axes(cfg)
     p_abs = M.abstract_params(cfg)
+    opt_cfg = opt_cfg if opt_cfg is not None else AdamWConfig()
     o_axes = opt_state_axes(opt_cfg, p_axes)
     o_abs = jax.eval_shape(lambda p: init_opt_state(opt_cfg, p), p_abs)
 

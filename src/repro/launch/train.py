@@ -1,10 +1,16 @@
 """Training launcher: the scheduler-driven loop with the full timing
-infrastructure, AdaptCheck-controlled checkpointing, restart, and monitoring.
+infrastructure, a unified runtime-adaptation control plane, restart, and
+monitoring.
 
 This is the production driver (examples/train_llm.py calls ``run_training``):
 every lifecycle phase is a scheduled routine in a Cactus-style bin, so the
-timer database holds a complete profile with zero manual instrumentation, and
-the AdaptCheck routine reads that profile to steer checkpointing (paper §3.2).
+timer database holds a complete profile with zero manual instrumentation.  All
+runtime adaptation goes through ONE :class:`repro.adapt.ControlLoop` polled
+from the ANALYSIS bin: AdaptCheck checkpoint admission (paper §3.2, via
+:class:`repro.adapt.CheckpointControl`) and straggler response
+(:class:`repro.adapt.StragglerResponse` over the cross-host step-time
+reduction).  Every decision lands in the ``ADAPT/`` section of the timer
+report.
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
         --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
@@ -16,12 +22,13 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..adapt import CheckpointControl, ControlLoop, StragglerResponse
 from ..checkpoint import CheckpointManager
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..core import (
@@ -30,6 +37,7 @@ from ..core import (
     RunState,
     Scheduler,
     TimerLogger,
+    adapt_rows,
     bin_distribution,
     format_report,
     param_registry,
@@ -39,6 +47,7 @@ from ..core import (
 from ..core.clocks import CounterClock, counter_cell, register_clock
 from ..data import DataLoader, SyntheticConfig, SyntheticLM
 from ..dist.meshutil import local_mesh
+from ..dist.pipeline import MicrobatchPlan
 from ..dist.stragglers import StragglerDetector
 from ..models import model as M
 from ..models.config import ArchConfig, ShapeConfig
@@ -58,25 +67,25 @@ class TrainSettings:
     seq_len: int = 128
     mesh_shape: tuple = (1, 1)
     peak_lr: float = 1e-3
-    ckpt_dir: Optional[str] = None
+    ckpt_dir: str | None = None
     ckpt_mode: str = "adaptive"          # "adaptive" | "fixed" | "off"
     ckpt_every: int = 512                # fixed mode
     ckpt_max_fraction: float = 0.05      # adaptive mode
     ckpt_max_interval_s: float = 60.0
     ckpt_synchronous: bool = False
     ckpt_delay_s: float = 0.0            # injected write latency (experiments)
-    queue_seconds: Optional[float] = None
+    queue_seconds: float | None = None
     eval_every: int = 0
     report_every: int = 25
-    log_path: Optional[str] = None
-    status_path: Optional[str] = None
-    monitor_port: Optional[int] = None
+    log_path: str | None = None
+    status_path: str | None = None
+    monitor_port: int | None = None
     restore: bool = True
     seed: int = 0
     data_mode: str = "copy"
     #: LR-schedule horizon; decoupled from `steps` so an interrupted run and
     #: its resumption share the same schedule (restart determinism)
-    lr_total_steps: Optional[int] = None
+    lr_total_steps: int | None = None
 
 
 def _flops_per_step(cfg: ArchConfig, tokens: int) -> float:
@@ -84,8 +93,17 @@ def _flops_per_step(cfg: ArchConfig, tokens: int) -> float:
     return 6.0 * active * tokens
 
 
-def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> Dict[str, Any]:
-    """Run the scheduled training loop; returns a summary dict."""
+def run_training(
+    settings: TrainSettings,
+    cfg: ArchConfig | None = None,
+    control_loop: ControlLoop | None = None,
+) -> dict[str, Any]:
+    """Run the scheduled training loop; returns a summary dict.
+
+    ``control_loop`` lets a caller supply the :class:`repro.adapt.ControlLoop`
+    (e.g. with extra custom controllers pre-registered, or to inspect the
+    decision log afterwards); by default the launcher builds its own.
+    """
     db = timer_db()
     registry = param_registry()
     sch = Scheduler(db)
@@ -104,12 +122,41 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
 
     # --- thorn state shared across routines -------------------------------------
     manager = None
-    controller = None
     logger = TimerLogger(settings.log_path) if settings.log_path else None
     status = StatusWriter(settings.status_path) if settings.status_path else None
     monitor = None
-    detector = StragglerDetector(n_hosts=1)
     model_flops = _flops_per_step(cfg, settings.global_batch * settings.seq_len)
+
+    # --- the control plane: one loop, every adaptation registered on it ----------
+    ckpt_timer_name = "CHECKPOINT/adaptcheck::write"
+    loop = control_loop if control_loop is not None else ControlLoop(db)
+    policy = AdaptiveCheckpointPolicy(
+        mode="adaptive" if settings.ckpt_mode == "adaptive" else "fixed",
+        every_iterations=settings.ckpt_every,
+        max_fraction=registry.get("ckpt.max_fraction"),
+        max_interval_seconds=registry.get("ckpt.max_interval_s"),
+        queue_seconds=settings.queue_seconds,
+    )
+    controller = AdaptiveCheckpointController(policy)
+    ckpt_control = CheckpointControl(
+        controller, ckpt_timer=ckpt_timer_name, registry=registry
+    )
+    ckpt_active = bool(settings.ckpt_dir) and settings.ckpt_mode != "off"
+    if ckpt_active:
+        loop.register(ckpt_control)
+    # single-process topology: this host feeds its own EVOL step timer into the
+    # reduction; multi-host launchers hand the detector a transport instead and
+    # every host publishes through it
+    detector = StragglerDetector(n_hosts=1, db=db)
+    loop.register(
+        StragglerResponse(
+            detector,
+            MicrobatchPlan.equal([0], n_micro=1),
+            check_every=8,
+            local_feed=(0, "EVOL/trainer::train_step"),
+        )
+    )
+    sch.attach_control_loop(loop, bin="ANALYSIS")
     # training-event clock registered mid-run (the paper's extensibility path:
     # every timer picks it up from its next window) + lock-free channel cells
     # resolved once for the hot loop
@@ -123,7 +170,7 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
 
     # --- STARTUP ----------------------------------------------------------------
     def startup(s: RunState) -> None:
-        nonlocal manager, controller, monitor
+        nonlocal manager, monitor
         opt_cfg = AdamWConfig()
         horizon = settings.lr_total_steps or settings.steps
         built = make_train_step(
@@ -169,15 +216,7 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
         s["opt_state"] = jax.device_put(s["opt_state"], built.in_shardings[1])
         s["loader"] = DataLoader(source, start_step=start_step)
 
-        policy = AdaptiveCheckpointPolicy(
-            mode="adaptive" if settings.ckpt_mode == "adaptive" else "fixed",
-            every_iterations=settings.ckpt_every,
-            max_fraction=registry.get("ckpt.max_fraction"),
-            max_interval_seconds=registry.get("ckpt.max_interval_s"),
-            queue_seconds=settings.queue_seconds,
-        )
-        controller = AdaptiveCheckpointController(policy)
-        controller.start_run(time.monotonic())
+        ckpt_control.start_run(time.monotonic())
         if settings.monitor_port is not None:
             monitor = MonitorServer(settings.monitor_port, db, registry,
                                     status_fn=lambda: {"iteration": st.iteration})
@@ -213,49 +252,20 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
 
     sch.schedule(train_step, bin="EVOL", thorn="trainer")
 
-    # --- ANALYSIS -------------------------------------------------------------------
-    def analysis(s: RunState) -> None:
-        # cross-process timer reduction: sample this host's step time straight
-        # out of the timer database (multi-host launchers feed one host index
-        # per process) and periodically reduce into a fleet-health report
-        detector.observe_timer(0, "EVOL/trainer::train_step", db=db)
-        if s.iteration % 8 == 7:
-            detector.check(s.iteration)
+    # --- ANALYSIS: the control plane ---------------------------------------------
+    # (attached above: the ControlLoop polls every registered controller from
+    # the ANALYSIS bin — AdaptCheck steering + decision, straggler reduction +
+    # response — and records each decision as an ADAPT/ row)
 
-    sch.schedule(analysis, bin="ANALYSIS", thorn="stragglers")
-
-    # --- CHECKPOINT: AdaptCheck ------------------------------------------------------
-    ckpt_timer_name = "CHECKPOINT/adaptcheck::write"
-
+    # --- CHECKPOINT: consume the AdaptCheck admission ------------------------------
     def adaptive_checkpoint(s: RunState) -> None:
-        if manager is None or settings.ckpt_mode == "off":
+        if manager is None or not ckpt_active:
             return
-        # live steering (paper §5): pick up runtime changes to the steerable
-        # AdaptCheck parameters (e.g. POSTed through the HTTP monitor)
-        frac = registry.get("ckpt.max_fraction")
-        interval = registry.get("ckpt.max_interval_s")
-        if (frac, interval) != (
-            controller.policy.max_fraction, controller.policy.max_interval_seconds
-        ):
-            controller.policy = dataclasses.replace(
-                controller.policy, max_fraction=frac, max_interval_seconds=interval
-            )
-            controller.policy.validate()
-        now = time.monotonic()
-        # fraction is measured against *loop* wall time (from start_run), not
-        # the STARTUP compile — matches the paper's "time spent on the problem"
-        total = now - controller.started_at
-        ckpt_time = (
-            db.get(ckpt_timer_name).seconds() if db.exists(ckpt_timer_name) else 0.0
-        )
-        decision = controller.decide(
-            iteration=s.iteration,
-            now=now,
-            total_seconds=total,
-            checkpoint_seconds=ckpt_time,
-        )
+        # decision was made (with live-steered policy) at this iteration's
+        # ANALYSIS poll; this routine only performs the admitted write
+        decision = ckpt_control.take_decision()
         s["last_ckpt_decision"] = decision
-        if not decision.checkpoint:
+        if decision is None or not decision.checkpoint:
             return
         handle = db.create(ckpt_timer_name)
         db.start(handle)
@@ -268,9 +278,7 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
             )
         finally:
             db.stop(handle)
-        controller.observe_checkpoint(
-            time.monotonic(), stats["blocking_seconds"], stats["nbytes"]
-        )
+        ckpt_control.observe_checkpoint(stats["blocking_seconds"], stats["nbytes"])
 
     sch.schedule(adaptive_checkpoint, bin="CHECKPOINT", thorn="adaptcheck")
 
@@ -323,6 +331,8 @@ def run_training(settings: TrainSettings, cfg: Optional[ArchConfig] = None) -> D
         ),
         "straggler_reports": len(detector.reports),
         "straggler_rows": straggler_rows(detector),
+        "adapt": loop.summary(),
+        "adapt_rows": adapt_rows(loop),
     }
     return summary
 
@@ -353,12 +363,15 @@ def main(argv=None) -> int:
         ckpt_synchronous=args.ckpt_sync, peak_lr=args.lr,
         monitor_port=args.monitor_port,
     )
-    summary = run_training(settings)
+    loop = ControlLoop(timer_db())
+    summary = run_training(settings, control_loop=loop)
     print(json.dumps(summary, indent=1, default=str))
     if args.report:
-        # fleet-health DIST/host rows are already in the DB (StragglerDetector
-        # publishes them on every check)
-        print(format_report(timer_db(), channels=("walltime", "cputime", "xla_flops")))
+        # fleet-health DIST/host rows and aggregate ADAPT/ counts are already
+        # in the DB; the control loop supplies the full decision-log section
+        print(format_report(
+            timer_db(), channels=("walltime", "cputime", "xla_flops"), adapt=loop
+        ))
     return 0
 
 

@@ -1,4 +1,6 @@
-from .config import ArchConfig, MoESettings, ShapeConfig, SHAPES
+
 from . import model
+from .config import SHAPES, ArchConfig, MoESettings, ShapeConfig
+
 
 __all__ = ["ArchConfig", "MoESettings", "ShapeConfig", "SHAPES", "model"]

@@ -15,10 +15,9 @@ Shapes: q (B, S, H, hd); k/v (B, T, KV, hd); GQA group = H // KV.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
+
 
 __all__ = ["attention", "decode_attention"]
 
@@ -36,7 +35,7 @@ def _merge_heads(x: jax.Array) -> jax.Array:
     return x.reshape(b, s, kv * g, hd)
 
 
-def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: Optional[int]) -> jax.Array:
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int | None) -> jax.Array:
     """(Sq, Tk) additive bias from position arrays."""
     ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
     if causal:
@@ -52,7 +51,7 @@ def naive_attention(
     v: jax.Array,
     *,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
     q_offset: int = 0,
 ) -> jax.Array:
     """Full-matrix reference attention."""
@@ -75,7 +74,7 @@ def chunked_attention(
     v: jax.Array,
     *,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
     chunk: int = 512,
     q_offset: int = 0,
 ) -> jax.Array:
@@ -128,7 +127,7 @@ def attention(
     *,
     impl: str = "chunked",
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
     chunk: int = 512,
     q_offset: int = 0,
 ) -> jax.Array:

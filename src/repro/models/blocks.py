@@ -18,7 +18,7 @@ f32 WKV state and the two token-shift vectors.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -44,11 +44,11 @@ def _dtype(cfg: ArchConfig):
 # Specs
 # ---------------------------------------------------------------------------
 
-def _attn_specs(cfg: ArchConfig, stack: Tuple[int, ...], prefix_cross: bool = False) -> Dict[str, Any]:
+def _attn_specs(cfg: ArchConfig, stack: tuple[int, ...], prefix_cross: bool = False) -> dict[str, Any]:
     d, hd = cfg.d_model, cfg.resolved_head_dim
     dt = _dtype(cfg)
     lead, lax_ = tuple(stack), ("layers",) * len(stack)
-    specs: Dict[str, Any] = {
+    specs: dict[str, Any] = {
         "ln": PSpec(lead + (d,), lax_ + (None,), init="ones", dtype=dt),
         "wq": PSpec(lead + (d, cfg.q_dim), lax_ + ("embed", "heads"), dtype=dt),
         "wk": PSpec(lead + (d, cfg.kv_dim), lax_ + ("embed", "kv_heads"), dtype=dt),
@@ -61,10 +61,10 @@ def _attn_specs(cfg: ArchConfig, stack: Tuple[int, ...], prefix_cross: bool = Fa
     return specs
 
 
-def _ffn_specs(cfg: ArchConfig, stack: Tuple[int, ...]) -> Dict[str, Any]:
+def _ffn_specs(cfg: ArchConfig, stack: tuple[int, ...]) -> dict[str, Any]:
     lead, lax_ = tuple(stack), ("layers",) * len(stack)
     dt = _dtype(cfg)
-    out: Dict[str, Any] = {
+    out: dict[str, Any] = {
         "ln2": PSpec(lead + (cfg.d_model,), lax_ + (None,), init="ones", dtype=dt)
     }
     if cfg.moe is not None:
@@ -74,7 +74,7 @@ def _ffn_specs(cfg: ArchConfig, stack: Tuple[int, ...]) -> Dict[str, Any]:
     return out
 
 
-def _rglru_specs(cfg: ArchConfig, stack: Tuple[int, ...]) -> Dict[str, Any]:
+def _rglru_specs(cfg: ArchConfig, stack: tuple[int, ...]) -> dict[str, Any]:
     d = cfg.d_model
     dt = _dtype(cfg)
     lead, lax_ = tuple(stack), ("layers",) * len(stack)
@@ -92,7 +92,7 @@ def _rglru_specs(cfg: ArchConfig, stack: Tuple[int, ...]) -> Dict[str, Any]:
     }
 
 
-def _rwkv_specs(cfg: ArchConfig, stack: Tuple[int, ...]) -> Dict[str, Any]:
+def _rwkv_specs(cfg: ArchConfig, stack: tuple[int, ...]) -> dict[str, Any]:
     d, h, k = cfg.d_model, cfg.rwkv_n_heads, cfg.rwkv_head_dim
     dt = _dtype(cfg)
     lead, lax_ = tuple(stack), ("layers",) * len(stack)
@@ -125,7 +125,7 @@ def _rwkv_specs(cfg: ArchConfig, stack: Tuple[int, ...]) -> Dict[str, Any]:
     }
 
 
-def block_specs(cfg: ArchConfig, kind: str, stack: Tuple[int, ...] = ()) -> Dict[str, Any]:
+def block_specs(cfg: ArchConfig, kind: str, stack: tuple[int, ...] = ()) -> dict[str, Any]:
     if kind in ("attn", "attn_local"):
         specs = _attn_specs(cfg, stack)
         specs.update(_ffn_specs(cfg, stack))
@@ -149,8 +149,8 @@ def block_specs(cfg: ArchConfig, kind: str, stack: Tuple[int, ...] = ()) -> Dict
 # ---------------------------------------------------------------------------
 
 def block_cache_specs(
-    cfg: ArchConfig, kind: str, batch: int, max_seq: int, stack: Tuple[int, ...] = ()
-) -> Dict[str, Any]:
+    cfg: ArchConfig, kind: str, batch: int, max_seq: int, stack: tuple[int, ...] = ()
+) -> dict[str, Any]:
     d, hd, kv = cfg.d_model, cfg.resolved_head_dim, cfg.n_kv_heads
     dt = _dtype(cfg)
     lead, lax_ = tuple(stack), ("layers",) * len(stack)
@@ -441,16 +441,16 @@ def _cross_attn(cfg, p, h, enc_out=None, cache=None, pos=None, mode="train"):
 def block_apply(
     cfg: ArchConfig,
     kind: str,
-    p: Dict[str, Any],
+    p: dict[str, Any],
     h: jax.Array,
     *,
     rope=None,
     mode: str = "train",
-    cache: Optional[Dict[str, Any]] = None,
-    pos: Optional[jax.Array] = None,
-    enc_out: Optional[jax.Array] = None,
+    cache: dict[str, Any] | None = None,
+    pos: jax.Array | None = None,
+    enc_out: jax.Array | None = None,
     causal: bool = True,
-) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+) -> tuple[jax.Array, dict[str, Any] | None, jax.Array]:
     """Apply one block. Returns (h, new_cache, aux_loss)."""
     zero = jnp.zeros((), jnp.float32)
     if kind in ("attn", "attn_local"):

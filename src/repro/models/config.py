@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
 
 __all__ = ["MoESettings", "ArchConfig", "ShapeConfig", "SHAPES"]
 
@@ -38,16 +37,16 @@ class ArchConfig:
     n_kv_heads: int
     d_ff: int
     vocab_size: int
-    head_dim: Optional[int] = None
+    head_dim: int | None = None
     rope_theta: float = 500000.0
     use_qk_norm: bool = False
     tied_embeddings: bool = False
     norm_eps: float = 1e-5
-    moe: Optional[MoESettings] = None
+    moe: MoESettings | None = None
     #: layer-type cycle; dense = ("attn",), hybrid e.g. ("rglru","attn_local","attn_local")
-    block_pattern: Tuple[str, ...] = ("attn",)
+    block_pattern: tuple[str, ...] = ("attn",)
     #: sliding window for attn_local blocks
-    window: Optional[int] = None
+    window: int | None = None
     #: encoder layers (enc-dec archs; n_layers is then the decoder depth)
     n_enc_layers: int = 0
     #: [vlm]: number of stub patch embeddings prepended to the text sequence
@@ -102,7 +101,7 @@ class ArchConfig:
     def rwkv_n_heads(self) -> int:
         return self.d_model // self.rwkv_head_dim
 
-    def layer_kinds(self) -> Tuple[str, ...]:
+    def layer_kinds(self) -> tuple[str, ...]:
         """Expanded per-layer block kinds of length n_layers."""
         pat = self.block_pattern
         return tuple(pat[i % len(pat)] for i in range(self.n_layers))
@@ -135,7 +134,7 @@ class ArchConfig:
         total += self.padded_vocab * d * (1 if self.tied_embeddings else 2)
         return total
 
-    def replace(self, **kwargs) -> "ArchConfig":
+    def replace(self, **kwargs) -> ArchConfig:
         return dataclasses.replace(self, **kwargs)
 
 
@@ -153,7 +152,7 @@ class ShapeConfig:
         return self.global_batch * self.seq_len
 
 
-SHAPES: Dict[str, ShapeConfig] = {
+SHAPES: dict[str, ShapeConfig] = {
     "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
     "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
     "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
@@ -161,7 +160,7 @@ SHAPES: Dict[str, ShapeConfig] = {
 }
 
 
-def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """Whether a shape cell runs for an arch (DESIGN.md §4 records the skips)."""
     if shape.name == "long_500k":
         kinds = set(cfg.layer_kinds())

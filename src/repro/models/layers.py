@@ -11,14 +11,16 @@ axes used by ``dist.sharding`` to build NamedShardings.
 
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..dist.sharding import Axes
+
 
 __all__ = [
     "PSpec",
@@ -39,10 +41,10 @@ __all__ = [
 class PSpec:
     """Declarative parameter spec: shape, logical axes, init, dtype."""
 
-    shape: Tuple[int, ...]
-    axes: Tuple[Optional[str], ...]
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
     init: str = "normal"  # normal | zeros | ones | const
-    scale: Optional[float] = None  # stddev for normal; default fan-in
+    scale: float | None = None  # stddev for normal; default fan-in
     dtype: Any = jnp.bfloat16
     const: float = 0.0  # fill value for init == "const"
 
@@ -118,7 +120,7 @@ def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
 # Rotary position embeddings
 # ---------------------------------------------------------------------------
 
-def rotary_embedding(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+def rotary_embedding(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
     """cos/sin tables for ``positions`` (any shape) -> (*pos.shape, head_dim//2)."""
     half = head_dim // 2
     freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
@@ -148,7 +150,7 @@ def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 # Gated MLP (SwiGLU)
 # ---------------------------------------------------------------------------
 
-def gated_mlp_specs(d_model: int, d_ff: int, dtype, stack: Tuple[int, ...] = ()) -> Dict[str, PSpec]:
+def gated_mlp_specs(d_model: int, d_ff: int, dtype, stack: tuple[int, ...] = ()) -> dict[str, PSpec]:
     lead = tuple(stack)
     lax = ("layers",) * len(stack)
     return {
@@ -158,7 +160,7 @@ def gated_mlp_specs(d_model: int, d_ff: int, dtype, stack: Tuple[int, ...] = ())
     }
 
 
-def gated_mlp(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+def gated_mlp(p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
     up = jnp.einsum("bsd,df->bsf", x, p["wi"])
     gate = jnp.einsum("bsd,df->bsf", x, p["wg"])
     hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up

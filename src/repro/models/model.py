@@ -20,7 +20,7 @@ Public surface:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -51,12 +51,12 @@ def _dtype(cfg: ArchConfig):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
 
-def decoder_pattern(cfg: ArchConfig) -> Tuple[str, ...]:
+def decoder_pattern(cfg: ArchConfig) -> tuple[str, ...]:
     """Block pattern of the decoder stack (enc-dec decoders use xattn blocks)."""
     return ("xattn",) if cfg.family == "encdec" else cfg.block_pattern
 
 
-def _split_stack(cfg: ArchConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+def _split_stack(cfg: ArchConfig) -> tuple[int, tuple[str, ...], tuple[str, ...]]:
     """(n_scan_units, pattern, tail_kinds) for the decoder stack."""
     pattern = decoder_pattern(cfg)
     p = len(pattern)
@@ -69,11 +69,11 @@ def _split_stack(cfg: ArchConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]
 # Parameter specs
 # ---------------------------------------------------------------------------
 
-def model_specs(cfg: ArchConfig) -> Dict[str, Any]:
+def model_specs(cfg: ArchConfig) -> dict[str, Any]:
     dt = _dtype(cfg)
     d, vp = cfg.d_model, cfg.padded_vocab
     n_scan, pattern, tail = _split_stack(cfg)
-    specs: Dict[str, Any] = {
+    specs: dict[str, Any] = {
         "embed": {"tokens": PSpec((vp, d), ("vocab", "embed"), scale=0.02, dtype=dt)},
         "final_norm": PSpec((d,), (None,), init="ones", dtype=dt),
         "scan": tuple(block_specs(cfg, k, (n_scan,)) for k in pattern) if n_scan else None,
@@ -100,7 +100,7 @@ def param_axes(cfg: ArchConfig):
     return axes_tree(model_specs(cfg))
 
 
-def param_counts(cfg: ArchConfig) -> Tuple[int, int]:
+def param_counts(cfg: ArchConfig) -> tuple[int, int]:
     """(total, active) — active scales expert weights by top_k / n_experts and
     excludes embedding/lm_head (6·N·D convention counts matmul params)."""
     import numpy as np
@@ -126,7 +126,7 @@ def param_counts(cfg: ArchConfig) -> Tuple[int, int]:
 # Cache specs
 # ---------------------------------------------------------------------------
 
-def cache_specs(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int) -> dict[str, Any]:
     n_scan, pattern, tail = _split_stack(cfg)
     return {
         "pos": PSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
@@ -276,7 +276,7 @@ def _encode(cfg, params, batch, mode="train"):
 # Train / prefill / decode entry points
 # ---------------------------------------------------------------------------
 
-def forward(cfg: ArchConfig, params, batch) -> Tuple[jax.Array, jax.Array]:
+def forward(cfg: ArchConfig, params, batch) -> tuple[jax.Array, jax.Array]:
     """Full-sequence forward. Returns (logits, aux_loss)."""
     pattern = decoder_pattern(cfg)
     enc_out = None

@@ -14,7 +14,6 @@ Router math in f32; Switch-style load-balancing aux loss.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,7 @@ from .layers import PSpec
 __all__ = ["moe_specs", "moe_apply"]
 
 
-def moe_specs(cfg: ArchConfig, stack: Tuple[int, ...] = ()) -> Dict[str, PSpec]:
+def moe_specs(cfg: ArchConfig, stack: tuple[int, ...] = ()) -> dict[str, PSpec]:
     assert cfg.moe is not None
     d, e, de = cfg.d_model, cfg.moe.n_experts, cfg.moe.d_expert
     lead = tuple(stack)
@@ -41,8 +40,8 @@ def moe_specs(cfg: ArchConfig, stack: Tuple[int, ...] = ()) -> Dict[str, PSpec]:
 
 
 def moe_apply(
-    cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array
-) -> Tuple[jax.Array, jax.Array]:
+    cfg: ArchConfig, p: dict[str, jax.Array], x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (y, aux_loss).
 
     Routing groups: for S > 1 each batch row is its own routing group (keeps
@@ -60,8 +59,8 @@ def moe_apply(
 
 
 def _moe_grouped(
-    cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array
-) -> Tuple[jax.Array, jax.Array]:
+    cfg: ArchConfig, p: dict[str, jax.Array], x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
     """Dispatch/combine are written per-row and ``vmap``ed over the batch, so
     every scatter/gather carries the batch as an *operand batch dimension* —
     SPMD partitions those along the (sharded) batch axis instead of replicating

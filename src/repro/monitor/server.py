@@ -18,12 +18,14 @@ from __future__ import annotations
 import json
 import os
 import threading
+from collections.abc import Callable
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Callable, Dict, Optional
+from typing import Any
 
 from ..core.params import ParamRegistry, param_registry
 from ..core.report import format_report
 from ..core.timers import TimerDB, timer_db
+
 
 __all__ = ["MonitorServer", "StatusWriter"]
 
@@ -31,12 +33,12 @@ __all__ = ["MonitorServer", "StatusWriter"]
 class StatusWriter:
     """Atomically writes run status + timer snapshot to a JSON file."""
 
-    def __init__(self, path: str, db: Optional[TimerDB] = None) -> None:
+    def __init__(self, path: str, db: TimerDB | None = None) -> None:
         self.path = path
         self._db = db if db is not None else timer_db()
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
 
-    def write(self, status: Dict[str, Any]) -> None:
+    def write(self, status: dict[str, Any]) -> None:
         payload = {"status": status, "timers": self._db.snapshot()}
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
@@ -50,15 +52,15 @@ class MonitorServer:
     def __init__(
         self,
         port: int = 0,
-        db: Optional[TimerDB] = None,
-        params: Optional[ParamRegistry] = None,
-        status_fn: Optional[Callable[[], Dict[str, Any]]] = None,
+        db: TimerDB | None = None,
+        params: ParamRegistry | None = None,
+        status_fn: Callable[[], dict[str, Any]] | None = None,
     ) -> None:
         self._db = db if db is not None else timer_db()
         self._params = params if params is not None else param_registry()
         self._status_fn = status_fn or (lambda: {})
-        self._httpd: Optional[ThreadingHTTPServer] = None
-        self._thread: Optional[threading.Thread] = None
+        self._httpd: ThreadingHTTPServer | None = None
+        self._thread: threading.Thread | None = None
         self._port = port
 
     @property

@@ -8,7 +8,7 @@ state on the data axis.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ class AdamWConfig:
     master_weights: bool = True
 
 
-def init_opt_state(cfg: AdamWConfig, params) -> Dict[str, Any]:
+def init_opt_state(cfg: AdamWConfig, params) -> dict[str, Any]:
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
     state = {
         "step": jnp.zeros((), jnp.int32),
@@ -60,7 +60,7 @@ def global_norm(tree) -> jax.Array:
 
 def adamw_update(
     cfg: AdamWConfig, params, grads, opt_state, lr: jax.Array
-) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+) -> tuple[Any, dict[str, Any], dict[str, jax.Array]]:
     """One AdamW step. Returns (params, opt_state, stats)."""
     step = opt_state["step"] + 1
     gnorm = global_norm(grads)

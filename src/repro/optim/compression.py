@@ -18,15 +18,14 @@ Two pieces:
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
+
 
 __all__ = ["ef_quantize", "dequantize", "ef_init", "cross_pod_mean_compressed"]
 
 
-def _q_leaf(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _q_leaf(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     xf = x.astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)

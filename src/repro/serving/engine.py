@@ -17,7 +17,6 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +33,11 @@ __all__ = ["Request", "ServingEngine"]
 @dataclass
 class Request:
     rid: int
-    prompt: List[int]
+    prompt: list[int]
     max_new_tokens: int = 16
-    eos_token: Optional[int] = None
+    eos_token: int | None = None
     # filled by the engine
-    output: List[int] = field(default_factory=list)
+    output: list[int] = field(default_factory=list)
     admitted_at: float = 0.0
     finished_at: float = 0.0
 
@@ -51,9 +50,9 @@ class ServingEngine:
         *,
         max_batch: int = 8,
         max_seq: int = 256,
-        target_decode_ms: Optional[float] = None,
-        db: Optional[TimerDB] = None,
-        registry: Optional[ParamRegistry] = None,
+        target_decode_ms: float | None = None,
+        db: TimerDB | None = None,
+        registry: ParamRegistry | None = None,
     ) -> None:
         self.cfg = cfg
         self.params = params
@@ -67,9 +66,9 @@ class ServingEngine:
             validator=lambda v: isinstance(v, int) and v >= 1,
         )
         self._hard_max = max_batch
-        self.queue: Deque[Request] = deque()
-        self.completed: List[Request] = []
-        self._decode_ms_history: List[float] = []
+        self.queue: deque[Request] = deque()
+        self.completed: list[Request] = []
+        self._decode_ms_history: list[float] = []
 
         self._prefill = jax.jit(lambda p, b, c: M.prefill(cfg, p, b, c))
         self._decode = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
@@ -84,12 +83,12 @@ class ServingEngine:
         return int(self._registry.get("serving.max_batch"))
 
     # -- one engine iteration ------------------------------------------------
-    def step_batch(self) -> List[Request]:
+    def step_batch(self) -> list[Request]:
         """Admit → prefill → decode-to-completion for one batch."""
         if not self.queue:
             return []
         with self._db.timing("serve/admit"):
-            batch_reqs: List[Request] = []
+            batch_reqs: list[Request] = []
             while self.queue and len(batch_reqs) < self.max_batch:
                 batch_reqs.append(self.queue.popleft())
             b = len(batch_reqs)
@@ -143,7 +142,7 @@ class ServingEngine:
             self.completed.append(r)
         return batch_reqs
 
-    def run(self) -> List[Request]:
+    def run(self) -> list[Request]:
         while self.queue:
             self.step_batch()
         return self.completed
@@ -158,7 +157,7 @@ class ServingEngine:
         elif per_token_ms < 0.5 * self.target_decode_ms and current < self._hard_max:
             self._registry.set("serving.max_batch", min(current * 2, self._hard_max))
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> dict[str, float]:
         lat = [r.finished_at - r.admitted_at for r in self.completed]
         return {
             "completed": float(len(self.completed)),

@@ -1,0 +1,567 @@
+"""The repro.adapt control plane: ControlLoop dispatch + ADAPT/ recording,
+AdaptCheck as a controller, straggler response (rebalance -> evict -> mesh
+rebuild) over a simulated CPU fleet, and the supporting dist primitives
+(LocalTransport, MicrobatchPlan, detector eviction, remove_host validation)."""
+
+import pytest
+
+from repro.adapt import (
+    CheckpointControl,
+    ControlAction,
+    ControlLoop,
+    Measurement,
+    SimulatedFleet,
+    StragglerResponse,
+)
+from repro.core import adapt_rows, format_adapt_report, format_report
+from repro.core.adaptive import AdaptiveCheckpointPolicy
+from repro.core.schedule import RunState, Scheduler
+from repro.core.timers import TimerDB
+from repro.dist.meshutil import local_mesh, remove_host
+from repro.dist.pipeline import MicrobatchPlan
+from repro.dist.stragglers import LocalTransport, StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# ControlLoop core
+# ---------------------------------------------------------------------------
+
+
+class _Bumper:
+    """Minimal controller: acts whenever its polled channel has windows."""
+
+    def __init__(self, channel="EVOL/step"):
+        self.name = "bumper"
+        self.channels = (channel,)
+        self.seen = []
+
+    def control(self, step, measurements):
+        m = measurements[self.channels[0]]
+        self.seen.append((step, m))
+        if m.count == 0:
+            return []
+        return [
+            ControlAction(
+                step=step, controller=self.name, trigger=self.channels[0],
+                action="bump", detail={"count": m.count},
+            )
+        ]
+
+
+def test_control_loop_polls_channels_and_records_actions():
+    db = TimerDB()
+    loop = ControlLoop(db)
+    ctrl = loop.register(_Bumper())
+
+    # channel missing: measured as zero, no action
+    assert loop.poll(0) == []
+    assert ctrl.seen[0] == (0, Measurement(0.0, 0))
+
+    h = db.create("EVOL/step")
+    db.start(h)
+    db.stop(h)
+    actions = loop.poll(1)
+    assert len(actions) == 1 and actions[0].action == "bump"
+    assert ctrl.seen[1][1].count == 1
+    # decision log + published aggregate row
+    assert loop.actions == actions
+    assert db.exists("ADAPT/bumper::bump")
+    assert db.get("ADAPT/bumper::bump").count == 1
+    assert loop.summary()["action_counts"] == {"bumper::bump": 1}
+
+
+def test_control_loop_registry_rules():
+    loop = ControlLoop(TimerDB())
+    loop.register(_Bumper())
+    with pytest.raises(ValueError):
+        loop.register(_Bumper())  # duplicate name
+    assert loop.controllers() == ["bumper"]
+    loop.unregister("bumper")
+    with pytest.raises(ValueError):
+        loop.unregister("bumper")
+
+
+def test_scheduler_attaches_control_loop_with_auto_timer():
+    db = TimerDB()
+    sch = Scheduler(db)
+    loop = ControlLoop(db)
+    polled = []
+    loop.register(
+        type(
+            "Recorder",
+            (),
+            {
+                "name": "rec",
+                "channels": (),
+                "control": lambda self, step, m: polled.append(step) or [],
+            },
+        )()
+    )
+    sch.attach_control_loop(loop)
+    sch.run(RunState(max_iterations=3))
+    assert polled == [0, 1, 2]
+    # the loop poll is caliper-timed like any other routine
+    assert db.exists("ANALYSIS/adapt::control_loop")
+    assert db.get("ANALYSIS/adapt::control_loop").count == 3
+
+
+def test_adapt_report_sections():
+    db = TimerDB()
+    loop = ControlLoop(db)
+    loop.register(_Bumper())
+    h = db.create("EVOL/step")
+    db.start(h)
+    db.stop(h)
+    loop.poll(4)
+    rows = adapt_rows(loop)
+    assert rows == [
+        {"step": 4, "controller": "bumper", "action": "bump",
+         "trigger": "EVOL/step", "detail": {"count": 1}}
+    ]
+    text = format_report(db, adapt=loop)
+    assert "ADAPT/bumper::bump" in text          # aggregate count row
+    assert "ADAPT decisions (1)" in text         # decision-log section
+    assert "bump" in format_adapt_report(loop)
+    empty = format_adapt_report(ControlLoop(TimerDB()))
+    assert "no adaptation decisions" in empty
+
+
+# ---------------------------------------------------------------------------
+# CheckpointControl (AdaptCheck on the registry)
+# ---------------------------------------------------------------------------
+
+
+def _fake_clock():
+    state = {"t": 0.0}
+
+    def clock():
+        return state["t"]
+
+    clock.state = state
+    return clock
+
+
+def test_checkpoint_control_admits_and_records():
+    db = TimerDB()
+    clock = _fake_clock()
+    ctrl = CheckpointControl(
+        AdaptiveCheckpointPolicy(mode="adaptive", max_fraction=0.5),
+        ckpt_timer="CHECKPOINT/write",
+        clock=clock,
+    )
+    ctrl.start_run(0.0)
+    loop = ControlLoop(db)
+    loop.register(ctrl)
+
+    clock.state["t"] = 10.0
+    actions = loop.poll(1)
+    # no history, fraction 0 -> weak bound admits
+    assert [a.action for a in actions] == ["checkpoint"]
+    assert actions[0].detail["reason"] == "under-bound"
+    decision = ctrl.take_decision()
+    assert decision is not None and decision.checkpoint
+    assert ctrl.take_decision() is None  # consumed
+
+    ctrl.observe_checkpoint(seconds=9.0, nbytes=100.0)
+    # now 9s of 10.1s total is checkpointing: way over the 0.5 bound
+    clock.state["t"] = 10.1
+    db.get(db.create("CHECKPOINT/write")).set_channel("walltime", 9.0)
+    assert loop.poll(2) == []
+    suppressed = ctrl.take_decision()
+    assert suppressed is not None and not suppressed.checkpoint
+    assert ctrl.summary()["n_suppressed"] == 1
+
+
+def test_checkpoint_control_live_steering_via_registry():
+    from repro.core.params import ParamRegistry
+
+    reg = ParamRegistry()
+    reg.declare("ckpt.max_fraction", 0.05, steerable=True)
+    reg.declare("ckpt.max_interval_s", 1e9, steerable=True)
+    clock = _fake_clock()
+    ctrl = CheckpointControl(
+        AdaptiveCheckpointPolicy(mode="adaptive", max_fraction=0.05,
+                                 max_interval_seconds=1e9),
+        clock=clock,
+        registry=reg,
+    )
+    ctrl.start_run(0.0)
+    reg.set("ckpt.max_fraction", 0.75)
+    clock.state["t"] = 1.0
+    ctrl.control(1, {ctrl.ckpt_timer: Measurement(0.0, 0)})
+    assert ctrl.inner.policy.max_fraction == 0.75  # steered value took effect
+
+
+# ---------------------------------------------------------------------------
+# The acceptance scenario: simulated fleet, straggler on host k
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_rebalance_reduces_spread_then_eviction_recovers():
+    """Straggler injected on host 2: the control loop first shifts microbatches
+    away from it (spread drops measurably), the host degrades further, and the
+    loop evicts it and rebuilds the mesh (spread recovers to ~zero)."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        4, 16, db=db, window=2, threshold=1.3, check_every=1,
+        confirm_after=1, evict_after=6, min_weight=0.2,
+    )
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+
+    baseline_share = fleet.plan.shares()[2]
+    assert baseline_share == 4
+
+    # phase 1: mild (2x) slowdown -> rebalance suffices
+    fleet.slow_host(2, 2.0)
+    fleet.run_step(0)
+    spread_before = fleet.spread()
+    for step in range(6):
+        if step:
+            fleet.run_step(step)
+        loop.poll(step)
+    fleet.run_step(6)
+    spread_after_rebalance = fleet.spread()
+
+    rebalances = [a for a in loop.actions if a.action == "rebalance"]
+    assert rebalances and rebalances[0].detail["host"] == 2
+    assert fleet.plan.shares()[2] < baseline_share      # share shrank
+    assert 2 in fleet.active_hosts()                    # still in the fleet
+    assert spread_after_rebalance <= 0.5 * spread_before  # measurably better
+
+    # phase 2: the host degrades badly -> weight floor -> eviction
+    fleet.slow_host(2, 8.0)
+    step = 7
+    degraded_spread = 0.0
+    while 2 in fleet.active_hosts() and step < 20:
+        fleet.run_step(step)
+        degraded_spread = max(degraded_spread, fleet.spread())
+        loop.poll(step)
+        step += 1
+
+    evictions = [a for a in loop.actions if a.action == "evict"]
+    assert len(evictions) == 1 and evictions[0].detail["host"] == 2
+    assert fleet.active_hosts() == [0, 1, 3]
+    assert fleet.mesh_generation == 1                   # mesh was rebuilt
+    assert set(fleet.meshes) == {0, 1, 3}
+    assert sum(fleet.plan.shares().values()) == 16      # work fully re-apportioned
+
+    # recovery: homogeneous survivors -> spread collapses to the one-microbatch
+    # apportionment granularity (16 over 3 hosts cannot split exactly evenly)
+    fleet.run_step(step)
+    granularity = max(fleet.costs.values())
+    assert fleet.spread() <= granularity + 1e-9
+    assert fleet.spread() < 0.1 * degraded_spread
+
+    # every decision visible as ADAPT/ rows: weight changes, then the evict
+    rows = adapt_rows(loop)
+    assert rows and rows[-1]["action"] == "evict"
+    assert all(r["action"] in ("rebalance", "restore") for r in rows[:-1])
+    assert any(r["action"] == "rebalance" for r in rows)
+    assert all(r["trigger"] == "DIST/host2::step" for r in rows)
+    text = format_report(db, adapt=loop)
+    assert "ADAPT/stragglers::rebalance" in text
+    assert "ADAPT/stragglers::evict" in text
+    # fleet-health rows tag the evicted host
+    from repro.core import straggler_rows
+
+    tagged = [r["timer"] for r in straggler_rows(fleet.detector)]
+    assert any("host2::step [EVICTED]" in t for t in tagged)
+
+
+def test_fleet_runs_real_pipeline_with_rebalanced_shares():
+    """run_pipeline=True actually pushes each host's share through
+    gpipe_forward on its local mesh, before and after a rebalance."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        3, 9, db=db, window=2, threshold=1.3, check_every=1,
+        min_weight=0.2, run_pipeline=True,
+    )
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+    fleet.slow_host(1, 2.0)
+    for step in range(3):
+        fleet.run_step(step)   # raises inside if any pipeline call breaks
+        loop.poll(step)
+    assert fleet.plan.shares()[1] < 3
+
+
+def test_rebalanced_host_judged_on_fresh_samples_not_evicted():
+    """Regression: a correctly rebalanced host must not be re-derated and
+    evicted off window samples measured under its *old* (larger) share."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        4, 16, db=db, window=4, threshold=1.2, check_every=1,
+        confirm_after=1, evict_after=4, min_weight=0.4,
+    )
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+    fleet.slow_host(2, 2.0)  # ideal weight 0.5, comfortably above the floor
+    for step in range(16):
+        fleet.run_step(step)
+        loop.poll(step)
+    assert 2 in fleet.active_hosts()            # never evicted
+    assert not [a for a in loop.actions if a.action == "evict"]
+    assert abs(fleet.plan.weights[2] - 0.5) < 0.15  # settled near the ideal
+    # and the fleet is balanced: host 2's step time sits at the median
+    seconds = fleet.run_step(16)
+    median = sorted(seconds.values())[len(seconds) // 2]
+    assert seconds[2] <= 1.2 * median
+
+
+def test_transient_slowdown_recovers_full_weight():
+    """A derated host whose slowdown clears earns its share back (restore
+    actions), so one hiccup never permanently costs fleet capacity."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        4, 16, db=db, window=2, threshold=1.3, check_every=1,
+        confirm_after=1, evict_after=8, min_weight=0.25,
+    )
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+    fleet.slow_host(1, 3.0)
+    for step in range(5):
+        fleet.run_step(step)
+        loop.poll(step)
+    derated = fleet.plan.weights[1]
+    assert derated < 0.5 and fleet.plan.shares()[1] < 4
+    fleet.slow_host(1, 1 / 3.0)  # the slowdown clears
+    for step in range(5, 20):
+        fleet.run_step(step)
+        loop.poll(step)
+    assert [a for a in loop.actions if a.action == "restore"]
+    # weight climbs back until the share is restored (hysteresis stops the
+    # last few percent once the host already holds its full share)
+    assert fleet.plan.weights[1] > 0.8
+    assert fleet.plan.shares()[1] == 4          # share back to the equal split
+    assert 1 in fleet.active_hosts()
+
+
+def test_granularity_blocked_straggler_hits_evict_backstop():
+    """When share granularity cannot absorb a slow host (it is down to the
+    1-microbatch minimum and still far off the fleet), the evict_after streak
+    backstop must still fire — the fleet must not run degraded forever."""
+    transport = LocalTransport()
+    det = StragglerDetector(2, window=2, threshold=1.3, transport=transport,
+                            publish=False)
+    plan = MicrobatchPlan.equal(range(2), 4)  # tiny fleet: shares {2, 2}
+    resp = StragglerResponse(det, plan, confirm_after=1, evict_after=4,
+                             min_weight=0.25)
+    evicted = None
+    for step in range(14):
+        shares = plan.shares()
+        for h in plan.hosts:
+            transport.publish(h, (6.0 if h == 0 else 1.0) * shares[h])
+        for a in resp.control(step, {}):
+            if a.action == "evict":
+                evicted = a
+    assert evicted is not None and evicted.detail["host"] == 0
+    assert plan.hosts == [1]
+
+
+def test_two_simultaneous_stragglers_both_rebalanced_same_check():
+    """Acting on the first straggler shifts live shares; the second must
+    still be judged against the shares its samples were measured under."""
+    transport = LocalTransport()
+    det = StragglerDetector(6, window=2, threshold=1.3, transport=transport,
+                            publish=False)
+    plan = MicrobatchPlan.equal(range(6), 24)
+    resp = StragglerResponse(det, plan, confirm_after=1, evict_after=8,
+                             min_weight=0.25)
+    costs = {h: (3.0 if h in (1, 4) else 1.0) for h in range(6)}
+    for h in plan.hosts:
+        transport.publish(h, costs[h] * plan.shares()[h])
+    actions = resp.control(0, {})
+    assert sorted(a.detail["host"] for a in actions) == [1, 4]
+    assert all(a.action == "rebalance" for a in actions)
+    shares = plan.shares()
+    assert shares[1] < 4 and shares[4] < 4  # both derated in one check
+
+
+def test_rounding_extra_microbatch_shed_instead_of_eviction():
+    """A derated host whose only residual imbalance is one rounding-parked
+    microbatch sheds it (rebalance) rather than being escalated to eviction."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        4, 16, db=db, window=4, threshold=1.2, check_every=1,
+        confirm_after=1, evict_after=4, min_weight=0.4,
+    )
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+    fleet.slow_host(2, 2.0)
+    for step in range(16):
+        fleet.run_step(step)
+        loop.poll(step)
+    assert 2 in fleet.active_hosts()
+    assert not [a for a in loop.actions if a.action == "evict"]
+    # and the policy settles instead of ping-ponging shed <-> restore
+    assert not [a for a in loop.actions if a.step >= 10]
+
+
+def test_restore_returns_to_original_above_one_weight():
+    """A host provisioned with weight > 1.0 (bigger machine) recovers to its
+    ORIGINAL weight after a transient slowdown, not to the 1.0 default."""
+    transport = LocalTransport()
+    det = StragglerDetector(3, window=2, threshold=1.3, transport=transport,
+                            publish=False)
+    plan = MicrobatchPlan(n_micro=16, weights={0: 2.0, 1: 1.0, 2: 1.0})
+    resp = StragglerResponse(det, plan, confirm_after=1, evict_after=8,
+                             min_weight=0.25)
+
+    def run_checks(costs, start, n):
+        for step in range(start, start + n):
+            shares = plan.shares()
+            for h in plan.hosts:
+                transport.publish(h, costs[h] * shares[h])
+            resp.control(step, {})
+
+    run_checks({0: 2.0, 1: 1.0, 2: 1.0}, 0, 2)       # host 0 transiently 2x slow
+    assert plan.weights[0] < 2.0                      # derated
+    assert 0 in plan.weights                          # but not evicted
+    run_checks({0: 1.0, 1: 1.0, 2: 1.0}, 2, 20)      # slowdown clears
+    assert plan.weights[0] > 1.5                      # climbed past the 1.0 cap
+    assert plan.shares()[0] == 8                      # original double share back
+
+
+def test_straggler_response_confirmation_and_hysteresis():
+    """One flagged window is not acted on before confirm_after; sub-tolerance
+    weight changes are suppressed."""
+    transport = LocalTransport()
+    det = StragglerDetector(3, window=4, threshold=1.5, transport=transport,
+                            publish=False)
+    plan = MicrobatchPlan.equal(range(3), 9)
+    resp = StragglerResponse(det, plan, confirm_after=2, evict_after=4,
+                             min_weight=0.1)
+    for h in range(3):
+        transport.publish(h, 4.0 if h == 1 else 1.0)
+    assert resp.control(0, {}) == []          # flagged once: unconfirmed
+    assert plan.shares()[1] == 3
+    for h in range(3):
+        transport.publish(h, 4.0 if h == 1 else 1.0)
+    actions = resp.control(1, {})             # flagged twice: act
+    assert [a.action for a in actions] == ["rebalance"]
+    assert plan.shares()[1] < 3
+
+
+# ---------------------------------------------------------------------------
+# dist primitives backing the controller
+# ---------------------------------------------------------------------------
+
+
+def test_local_transport_gather_drains_and_drops():
+    t = LocalTransport()
+    t.publish(0, 1.0)
+    t.publish(1, 2.0)
+    t.publish(1, 3.0)
+    assert t.gather() == {0: [1.0], 1: [2.0, 3.0]}
+    assert t.gather() == {}
+    t.drop_host(1)
+    t.publish(1, 4.0)
+    assert t.gather() == {}
+    assert t.dropped == frozenset({1})
+
+
+def test_detector_eviction_semantics():
+    det = StragglerDetector(3, window=4, threshold=1.5, publish=False)
+    for _ in range(4):
+        for h in range(3):
+            det.observe(h, 3.0 if h == 0 else 1.0)
+    assert det.check(0).stragglers == [0]
+    det.evict(0)
+    det.observe(0, 9.0)  # late sample from the evicted host: dropped
+    report = det.check(1)
+    assert report.stragglers == [] and 0 not in report.host_means
+    assert det.active_hosts() == [1, 2]
+    assert 0 in det.host_stats()  # history survives for the report
+    with pytest.raises(ValueError):
+        det.evict(7)
+    det.evict(1)
+    with pytest.raises(ValueError):
+        det.evict(2)  # cannot evict the last active host
+
+
+def test_microbatch_plan_validation_and_shares():
+    plan = MicrobatchPlan.equal(range(4), 16)
+    assert plan.shares() == {0: 4, 1: 4, 2: 4, 3: 4}
+    plan.set_weight(2, 0.5)
+    shares = plan.shares()
+    assert sum(shares.values()) == 16 and shares[2] < 4
+    assert min(shares.values()) >= 1
+    plan.evict(2)
+    assert sum(plan.shares().values()) == 16
+    with pytest.raises(ValueError):
+        plan.set_weight(9, 1.0)
+    with pytest.raises(ValueError):
+        plan.set_weight(0, 0.0)
+    with pytest.raises(ValueError):
+        MicrobatchPlan.equal(range(5), 4)  # fewer microbatches than hosts
+    solo = MicrobatchPlan.equal([0], 4)
+    with pytest.raises(ValueError):
+        solo.evict(0)  # cannot evict the last host
+
+
+def test_remove_host_validation_on_local_mesh():
+    mesh = local_mesh((1, 1))
+    with pytest.raises(ValueError):
+        remove_host(mesh, 0)            # size-1 axis cannot lose its slice
+    with pytest.raises(ValueError):
+        remove_host(mesh, 0, axis="nope")
+
+
+# ---------------------------------------------------------------------------
+# Real-device mesh rebuild (forced multi-device subprocess, nightly tier)
+# ---------------------------------------------------------------------------
+
+REMOVE_HOST_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
+from repro.dist.meshutil import local_mesh, remove_host
+
+mesh = local_mesh((8,), ("data",))
+assert mesh.shape["data"] == 8
+
+# evict host 3: axis shrinks, survivors keep their order
+small = remove_host(mesh, 3, axis="data")
+assert small.shape["data"] == 7
+kept = [d.id for d in small.devices.flat]
+assert kept == [0, 1, 2, 4, 5, 6, 7], kept
+
+# the rebuilt mesh computes: a psum over the surviving axis
+f = shard_map(
+    lambda x: jax.lax.psum(x, "data"),
+    mesh=small, in_specs=P("data"), out_specs=P(),
+)
+out = f(jnp.ones((7, 2)))
+assert out.shape == (1, 2) and float(out[0, 0]) == 7.0, (out.shape, out)
+
+# a multi-axis mesh shrinks along the named axis only
+grid = local_mesh((4, 2), ("data", "model"))
+shrunk = remove_host(grid, 1, axis="data")
+assert dict(shrunk.shape) == {"data": 3, "model": 2}
+print("REMOVE_HOST_OK")
+"""
+
+
+@pytest.mark.multihost
+@pytest.mark.slow
+def test_remove_host_on_real_devices_subprocess():
+    """Eviction rebuild on a real (forced) 8-device topology: slice removed,
+    device order preserved, collectives run on the shrunk mesh."""
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", REMOVE_HOST_SCRIPT],
+        capture_output=True, text=True, timeout=600, env=env, cwd=repo,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "REMOVE_HOST_OK" in proc.stdout

@@ -12,13 +12,13 @@ Key invariants (paper Sec. 3.2):
 import math
 
 import pytest
-from repro.testing import given, settings, strategies as st
 
 from repro.core.adaptive import (
     AdaptiveCheckpointController,
     AdaptiveCheckpointPolicy,
     CheckpointDurationPredictor,
 )
+from repro.testing import given, settings, strategies as st
 
 
 def make_controller(**kw):

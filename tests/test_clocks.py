@@ -138,3 +138,45 @@ def test_increment_counter_rejects_non_numeric_without_poisoning():
     cell("junk")  # raw cells skip validation; fold drops non-numerics
     cell(2.0)
     assert C.counter_channel("poison_test") == 5.0
+
+
+def test_write_only_counter_pending_stays_bounded(monkeypatch):
+    """Regression (ROADMAP PR 2 follow-up): a channel that is written but
+    never read must not grow its pending list without bound."""
+    monkeypatch.setattr(C, "_PENDING_FOLD_CAP", 32)
+    for _ in range(10 * 32):
+        C.increment_counter("never_read", 1.0)
+    cell = C._CELLS["never_read"]
+    assert len(cell.pending) < 32  # folded at the cap, repeatedly
+    assert C.counter_channel("never_read") == 320.0  # nothing lost
+
+
+def test_raw_cell_overflow_swept_by_timer_windows(monkeypatch):
+    """Raw counter_cell handles bypass the per-append cap; the fused counter
+    samplers sweep overflowing cells every _PENDING_SWEEP_EVERY passes."""
+    from repro.core.timers import TimerDB
+
+    monkeypatch.setattr(C, "_PENDING_FOLD_CAP", 16)
+    monkeypatch.setattr(C, "_PENDING_SWEEP_EVERY", 2)
+    bump = C.counter_cell("raw_never_read")
+    for _ in range(100):
+        bump(1.0)
+    cell = C._CELLS["raw_never_read"]
+    assert len(cell.pending) == 100  # raw appends: nothing folded yet
+    db = TimerDB()
+    handle = db.create("sweeper")
+    for _ in range(4):  # each window samples counters twice (start + stop)
+        db.start(handle)
+        db.stop(handle)
+    assert len(cell.pending) == 0
+    assert C.counter_channel("raw_never_read") == 100.0
+
+
+def test_fold_pending_counters_explicit_maintenance():
+    bump = C.counter_cell("maintained")
+    for _ in range(50):
+        bump(2.0)
+    assert len(C._CELLS["maintained"].pending) == 50
+    C.fold_pending_counters()
+    assert len(C._CELLS["maintained"].pending) == 0
+    assert C.counter_channel("maintained") == 100.0

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from repro.testing import given, settings, strategies as st
 
 from repro.kernels.rglru.kernel import rglru_pallas
 from repro.kernels.rglru.ops import linear_recurrence, linear_recurrence_assoc
@@ -14,6 +13,7 @@ from repro.kernels.rmsnorm.ref import rms_norm_ref
 from repro.kernels.rwkv6.kernel import wkv6_pallas
 from repro.kernels.rwkv6.ops import wkv6, wkv6_chunked
 from repro.kernels.rwkv6.ref import wkv6_ref
+from repro.testing import given, settings, strategies as st
 
 
 def _wkv_inputs(key, b, s, h, dk, dv, dtype=jnp.float32, with_state=True):

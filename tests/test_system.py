@@ -118,7 +118,7 @@ def test_straggler_detection():
     hits = []
     det = StragglerDetector(n_hosts=4, window=8, threshold=1.5,
                             on_straggler=lambda r: hits.append(r))
-    for step in range(8):
+    for _ in range(8):
         for host in range(4):
             det.observe(host, 1.0 if host != 2 else 3.0)
     report = det.check(step=8)
