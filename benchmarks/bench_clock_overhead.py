@@ -89,6 +89,25 @@ def run(scale: float = 1.0) -> list[tuple[str, float, str]]:
     timer = db.get(handle)
     rows.append(("timer_read_flat", _time_op(timer.read_flat, 5000, scale), "us_per_read"))
 
+    # -- hierarchical scopes (the repro.timing facade) --------------------------
+    # pre-resolved handle: the facade hot path — must cost no more than the raw
+    # handle start/stop above (gated in CI via compare.py --require-le)
+    db = reset_timer_db()
+    hot = db.scope_handle("bench/handle")
+
+    def handle_cycle():
+        with hot:
+            pass
+
+    rows.append(("scope_handle_enter_exit", _time_op(handle_cycle, 5000, scale), "us_per_window"))
+
+    # dynamic scope: path joined under the enclosing scope per entry
+    def scope_cycle():
+        with db.scope("dyn"):
+            pass
+
+    rows.append(("scope_enter_exit", _time_op(scope_cycle, 5000, scale), "us_per_window"))
+
     # -- timer creation (fresh DB: row must not leak into other sections) ------
     db = reset_timer_db()
     i = [0]

@@ -11,6 +11,12 @@ signal.  Rows present in only one file are reported but do not fail the gate
 (benches gain and rename rows across PRs); the gate's teeth are on the rows
 both sides know about.
 
+Relational gates: ``--require-le ROW REF RATIO`` (repeatable) additionally
+fails when the fresh measurement of ``ROW`` exceeds ``RATIO`` x the fresh
+measurement of ``REF`` — used to pin an API's hot path to the primitive it
+wraps (e.g. ``scope_handle_enter_exit`` vs ``timer_start_stop_all_clocks``)
+independent of container drift, since both sides come from the same run.
+
 Several fresh JSONs may be passed; each row gates on its *minimum* across
 them.  A real regression slows every run, while scheduler noise on a shared
 runner inflates individual runs at random — min-of-N is the standard
@@ -81,6 +87,27 @@ def compare(
     return failures
 
 
+def check_relations(
+    fresh: dict[str, float], relations: list[tuple[str, str, float]]
+) -> int:
+    """Gate fresh rows against each other; returns the number of failures."""
+    failures = 0
+    for row, ref, ratio in relations:
+        a, b = fresh.get(row), fresh.get(ref)
+        if a is None or b is None:
+            missing = row if a is None else ref
+            print(f"relation {row} <= {ratio:g}*{ref}: SKIP ({missing} not measured)")
+            continue
+        ok = a <= ratio * b
+        print(
+            f"relation {row} ({a:.3f}us) <= {ratio:g} * {ref} ({b:.3f}us)"
+            f"  {'ok' if ok else 'FAIL'}"
+        )
+        if not ok:
+            failures += 1
+    return failures
+
+
 def _min_rows(paths) -> dict[str, float]:
     """Per-row minimum across several fresh runs (noise filter)."""
     merged: dict[str, float] = {}
@@ -139,11 +166,25 @@ def main(argv=None) -> int:
     ap.add_argument("--emit-baseline", metavar="OUT", default=None,
                     help="also write the fresh runs' per-row minimum as a "
                          "baseline-shaped JSON (the CI re-baseline artifact)")
+    ap.add_argument("--require-le", nargs=3, action="append", default=[],
+                    metavar=("ROW", "REF", "RATIO"),
+                    help="fail when fresh ROW > RATIO * fresh REF (repeatable; "
+                         "relational gate within the same run, immune to "
+                         "container drift)")
     args = ap.parse_args(argv)
 
     merged = _min_rows(args.fresh)
     if args.emit_baseline:
         _emit_baseline(args.emit_baseline, args.fresh, merged)
+
+    relation_failures = check_relations(
+        merged, [(row, ref, float(ratio)) for row, ref, ratio in args.require_le]
+    )
+    if relation_failures:
+        print(
+            f"\n{relation_failures} relational gate(s) failed", file=sys.stderr
+        )
+        return 1
 
     if args.baseline_from_artifact is not None:
         if args.baseline != "-":

@@ -40,9 +40,8 @@ from repro.core import (  # noqa: E402
     AdaptiveCheckpointController,
     AdaptiveCheckpointPolicy,
     RunState,
-    Scheduler,
-    reset_timer_db,
 )
+from repro.timing import TimingSession  # noqa: E402
 
 
 @dataclass
@@ -83,8 +82,10 @@ def _wave_step(level: dict[str, jax.Array]) -> dict[str, jax.Array]:
 
 
 def run_experiment(settings: AMRSettings) -> dict[str, object]:
-    db = reset_timer_db()
-    sch = Scheduler(db)
+    # a fresh session per experiment run: no global-DB juggling, and the two
+    # modes of the paper's A/B never share timers
+    sess = TimingSession()
+    sch = sess.scheduler
     st = RunState(max_iterations=settings.iterations)
 
     manager = CheckpointManager(
@@ -141,11 +142,12 @@ def run_experiment(settings: AMRSettings) -> dict[str, object]:
     sch.schedule(evolve, bin="EVOL", thorn="ccatie")
 
     ckpt_timer = "CHECKPOINT/adaptcheck::write"
+    ckpt_scope = sess.scope_handle(ckpt_timer)
 
     def checkpoint(s: RunState) -> None:
         now = time.monotonic()
         total = now - controller.started_at
-        spent = db.get(ckpt_timer).seconds() if db.exists(ckpt_timer) else 0.0
+        spent = ckpt_scope.seconds()
         nbytes_next = sum(
             int(np.prod(x.shape)) * 4 for lv in s["levels"] for x in jax.tree.leaves(lv)
         )
@@ -159,12 +161,8 @@ def run_experiment(settings: AMRSettings) -> dict[str, object]:
         )
         if not decision.checkpoint:
             return
-        h = db.create(ckpt_timer)
-        db.start(h)
-        try:
+        with ckpt_scope:
             stats = manager.save(s.iteration, {"levels": s["levels"]})
-        finally:
-            db.stop(h)
         controller.observe_checkpoint(time.monotonic(), stats["blocking_seconds"],
                                       stats["nbytes"])
 
@@ -175,11 +173,12 @@ def run_experiment(settings: AMRSettings) -> dict[str, object]:
 
     sch.schedule(shutdown, bin="SHUTDOWN", thorn="amr")
 
-    sch.run(st)
+    with sess:
+        sch.run(st)
 
     # loop wall time (excludes STARTUP, matching the controller's accounting)
     total = time.monotonic() - controller.started_at
-    ckpt = db.get(ckpt_timer).seconds() if db.exists(ckpt_timer) else 0.0
+    ckpt = ckpt_scope.seconds()
     return {
         "mode": settings.mode,
         "iterations": st.iteration,

@@ -1,8 +1,10 @@
 """Quickstart: the timing infrastructure in 60 lines.
 
-Creates timers/clocks (paper Table 3 usage pattern), registers a custom clock
-(the extension mechanism), runs a tiny scheduled loop, and prints the Fig-2
-style report.
+Shows the ``repro.timing`` facade end to end: a session bundling the timing
+stack, hierarchical scopes (dynamic and pre-resolved handles), scope-local
+counters, a custom clock (the paper's extension mechanism), a scheduled loop
+that gets caliper points for free, and both reports — the flat Fig.-2 table
+and the scope tree with inclusive/exclusive seconds.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,54 +17,50 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    CallbackClock,
-    RunState,
-    Scheduler,
-    format_report,
-    register_clock,
-    timer_db,
-)
-from repro.core.clocks import counter_cell
+from repro import timing
+from repro.core import CallbackClock, RunState, register_clock
 
-# --- 1. manual caliper points (paper Table 3) --------------------------------
-db = timer_db()
-handle = db.create("Poisson: Evaluate residual")   # CCTK_TimerCreate
-db.start(handle)                                   # CCTK_TimerStartI
-x = jnp.ones((512, 512))
-jax.block_until_ready(x @ x)
-db.stop(handle)                                    # CCTK_TimerStopI
-print("manual timer:", db.get(handle).read_flat()["walltime"], "s\n")
+# --- 1. a session: DB + scheduler + control loop, installed as the default ----
+with timing.session() as ts:
+    # --- 2. hierarchical scopes (paper Table 3, path-addressed) ---------------
+    with timing.scope("poisson"):
+        with timing.scope("residual"):              # timer "poisson/residual"
+            x = jnp.ones((512, 512))
+            jax.block_until_ready(x @ x)
+    print("manual scope:", ts.timer("poisson/residual").seconds(), "s\n")
 
-# --- 2. extensibility: register a custom event clock --------------------------
-register_clock(
-    "steps",
-    lambda: CallbackClock("steps", lambda: {"steps_done": _steps[0]}, {"steps_done": "count"}),
-)
-_steps = [0.0]
+    # hot-loop form: resolve the path once, enter with zero dict lookups
+    hot = timing.scope_handle("poisson/hot_loop")
 
-# --- 3. scheduled loop: every routine gets timers automatically ----------------
-sch = Scheduler(db)
+    # --- 3. extensibility: register a custom event clock ----------------------
+    _steps = [0.0]
+    register_clock(
+        "steps",
+        lambda: CallbackClock(
+            "steps", lambda: {"steps_done": _steps[0]}, {"steps_done": "count"}
+        ),
+    )
 
+    # counter: resolved once; bumps the process-global xla_flops channel
+    bump_flops = timing.counter("xla_flops", absolute=True)
 
-# hot-loop counter: resolve the channel once, bump with one C-level call
-bump_flops = counter_cell("xla_flops")
+    # --- 4. scheduled loop: every routine gets scoped timers automatically ----
+    def evolve(state: RunState) -> None:
+        with hot:                                   # nests under EVOL/demo::evolve
+            y = jnp.sin(jnp.arange(4096.0))
+            jax.block_until_ready(y)
+        _steps[0] += 1
+        bump_flops(4096.0)
 
+    def analysis(state: RunState) -> None:
+        time.sleep(0.001)
 
-def evolve(state: RunState) -> None:
-    y = jnp.sin(jnp.arange(4096.0))
-    jax.block_until_ready(y)
-    _steps[0] += 1
-    bump_flops(4096.0)
+    ts.scheduler.schedule(evolve, bin="EVOL", thorn="demo")
+    ts.scheduler.schedule(analysis, bin="ANALYSIS", thorn="demo", every=2)
+    ts.scheduler.run(RunState(max_iterations=6))
 
-
-def analysis(state: RunState) -> None:
-    time.sleep(0.001)
-
-
-sch.schedule(evolve, bin="EVOL", thorn="demo")
-sch.schedule(analysis, bin="ANALYSIS", thorn="demo", every=2)
-sch.run(RunState(max_iterations=6))
-
-# --- 4. the standard report (paper Fig. 2) -------------------------------------
-print(format_report(db, channels=("walltime", "cputime", "xla_flops", "steps_done")))
+    # --- 5. the reports: flat Fig.-2 table + the scope tree --------------------
+    print(ts.report(channels=("walltime", "cputime", "xla_flops", "steps_done")))
+    print()
+    print(ts.tree_report())
+    print("\nEVOL rollup (segment-matched):", timing.total_seconds("bin/EVOL"), "s")

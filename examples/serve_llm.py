@@ -15,8 +15,8 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import timing  # noqa: E402
 from repro.configs import get_smoke_config  # noqa: E402
-from repro.core import format_report, timer_db  # noqa: E402
 from repro.models import model as M  # noqa: E402
 from repro.serving import Request, ServingEngine  # noqa: E402
 
@@ -34,10 +34,12 @@ def main(argv=None) -> int:
 
     cfg = get_smoke_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sess = timing.session()
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch,
         max_seq=args.prompt_len + args.max_new + 8,
         target_decode_ms=args.target_ms,
+        session=sess,
     )
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
@@ -47,7 +49,9 @@ def main(argv=None) -> int:
         ))
     engine.run()
     print(json.dumps(engine.stats(), indent=1))
-    print(format_report(timer_db()))
+    print(sess.report())
+    print()
+    print(sess.tree_report())
     return 0
 
 

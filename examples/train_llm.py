@@ -19,7 +19,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import format_report, timer_db  # noqa: E402
+from repro import timing  # noqa: E402
 from repro.launch.train import TrainSettings, run_training  # noqa: E402
 from repro.models.config import ArchConfig  # noqa: E402
 
@@ -60,10 +60,14 @@ def main(argv=None) -> int:
         report_every=20, data_mode="copy", monitor_port=args.monitor_port,
         log_path=args.ckpt_dir + "/timers.jsonl",
     )
-    summary = run_training(settings, cfg=cfg)
-    print(json.dumps({k: v for k, v in summary.items() if k != "bin_seconds"},
+    sess = timing.TimingSession(timing.timer_db())
+    summary = run_training(settings, cfg=cfg, session=sess)
+    print(json.dumps({k: v for k, v in summary.items()
+                      if k not in ("bin_seconds", "timer_tree")},
                      indent=1, default=str))
-    print(format_report(timer_db(), channels=("walltime", "cputime", "xla_flops")))
+    print(sess.report(channels=("walltime", "cputime", "xla_flops")))
+    print()
+    print(sess.tree_report())
     return 0
 
 

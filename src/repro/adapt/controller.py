@@ -211,9 +211,12 @@ class ControlLoop:
     def _record(self, action: ControlAction) -> None:
         self.actions.append(action)
         if self.publish:
-            db = self._db
-            timer = db.get(db.create(f"{self.prefix}/{action.controller}::{action.action}"))
-            timer.count += 1
+            # cached path→timer resolution (repro.timing scope handles): the
+            # locked create/lookup happens once per distinct action row
+            scope = self._db.scope_handle(
+                f"{self.prefix}/{action.controller}::{action.action}"
+            )
+            scope.timer.count += 1
         if self.on_action is not None:
             self.on_action(action)
 

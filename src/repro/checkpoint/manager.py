@@ -22,13 +22,14 @@ from typing import Any
 
 import jax
 
-from ..core.clocks import counter_cell
+from ..timing import counter
 from .io import CheckpointCorrupt, checkpoint_nbytes, load_checkpoint, save_checkpoint
 
 
-# channel cells resolved once (lock-free C-level increment on the write path)
-_BUMP_IO_BYTES = counter_cell("io_bytes")
-_BUMP_IO_OPS = counter_cell("io_ops")
+# channel cells resolved once through the timing facade (lock-free C-level
+# increment on the write path); absolute: the `io` CounterClock exports them
+_BUMP_IO_BYTES = counter("io_bytes", absolute=True)
+_BUMP_IO_OPS = counter("io_ops", absolute=True)
 
 __all__ = ["CheckpointManager"]
 

@@ -15,11 +15,13 @@ import os
 import time
 from collections.abc import Mapping, Sequence
 
-from .timers import TimerDB, timer_db
+from .timers import TimerDB, TimerNode, path_matches, timer_db
 
 __all__ = [
     "format_report",
+    "format_tree_report",
     "report_rows",
+    "tree_rows",
     "straggler_rows",
     "adapt_rows",
     "format_adapt_report",
@@ -56,7 +58,7 @@ def report_rows(
     db = db if db is not None else timer_db()
     rows: list[dict[str, object]] = []
     for timer in db.timers():
-        if prefix and not timer.name.startswith(prefix):
+        if prefix and not path_matches(timer.name, prefix):
             continue
         flat = timer.read_flat()
         row: dict[str, object] = {"timer": timer.name, "count": timer.count}
@@ -194,6 +196,84 @@ def format_report(
     if adapt is not None:
         lines.append("")
         lines.append(format_adapt_report(adapt))
+    return "\n".join(lines)
+
+
+def _tree_select(roots: list[TimerNode], prefix: str) -> list[TimerNode]:
+    """Subtrees rooted at the outermost nodes matching ``prefix`` (whole
+    path segments, like ``TimerDB.total_seconds``) — a nested scope such as
+    ``bin/EVOL`` is found wherever it sits in the forest, not only at root."""
+    if not prefix:
+        return roots
+    selected: list[TimerNode] = []
+
+    def visit(node: TimerNode) -> None:
+        if path_matches(node.name, prefix):
+            selected.append(node)
+            return  # keep the whole subtree; don't re-match descendants
+        for child in node.children:
+            visit(child)
+
+    for root in roots:
+        visit(root)
+    return selected
+
+
+def tree_rows(db: TimerDB | None = None, prefix: str = "") -> list[dict[str, object]]:
+    """The timer forest as nested JSON-ready dicts.
+
+    One dict per :class:`~repro.core.timers.TimerNode` — ``timer``, ``count``,
+    ``inclusive_s``, ``exclusive_s``, ``children`` (recursively) — the payload
+    the monitor serves at ``/tree``.  ``prefix`` selects the subtrees rooted
+    at the outermost matching nodes, wherever they sit in the forest.
+    """
+    db = db if db is not None else timer_db()
+
+    def convert(node: TimerNode) -> dict[str, object]:
+        return {
+            "timer": node.name,
+            "count": node.count,
+            "inclusive_s": node.inclusive,
+            "exclusive_s": node.exclusive,
+            "children": [convert(c) for c in node.children],
+        }
+
+    return [convert(root) for root in _tree_select(db.tree(), prefix)]
+
+
+def format_tree_report(
+    db: TimerDB | None = None,
+    title: str = "Timer tree",
+    prefix: str = "",
+) -> str:
+    """Render the hierarchical Fig.-2 report: one row per timer, indented by
+    scope depth, with inclusive (subtree) and exclusive (self minus children)
+    wall seconds — the stack-derived tree view of the flat table.  ``prefix``
+    selects the subtrees rooted at the outermost matching nodes, wherever
+    they sit in the forest."""
+    db = db if db is not None else timer_db()
+    roots = _tree_select(db.tree(), prefix)
+    flat: list[tuple[int, TimerNode]] = []
+    for root in roots:
+        flat.extend(root.walk())
+    name_w = max([2 * lvl + len(n.name) for lvl, n in flat] + [len("Timer")]) + 2
+    col_w = 16
+    header = (
+        "Timer".ljust(name_w)
+        + "count".rjust(8)
+        + "inclusive_s".rjust(col_w)
+        + "exclusive_s".rjust(col_w)
+    )
+    lines = [title, "=" * len(header), header, "-" * len(header)]
+    for lvl, node in flat:
+        lines.append(
+            ("  " * lvl + node.name).ljust(name_w)
+            + str(node.count).rjust(8)
+            + f"{node.inclusive:.8f}"[:col_w].rjust(col_w)
+            + f"{node.exclusive:.8f}"[:col_w].rjust(col_w)
+        )
+    if not flat:
+        lines.append("(no timers)")
     return "\n".join(lines)
 
 

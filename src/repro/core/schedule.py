@@ -99,11 +99,11 @@ class Scheduler:
         self._db = db if db is not None else timer_db()
         self._routines: dict[str, list[ScheduledRoutine]] = {b: [] for b in BINS}
         self._sorted: dict[str, list[ScheduledRoutine] | None] = {b: None for b in BINS}
-        self._total_handle = self._db.create("simulation/total")
-        # resolved-once timer handles: bin dispatch stays on the handle-indexed
-        # TimerDB fast path instead of re-resolving names every invocation
-        self._routine_handles: dict[str, int] = {}
-        self._bin_handles: dict[str, int] = {}
+        # pre-resolved scope handle (repro.timing hot path): bin and routine
+        # timers are real parent/child scopes — simulation/total encloses each
+        # bin, each bin encloses its routines.  Dispatch resolves handles via
+        # db.scope_handle, whose already-cached fast path is one dict read.
+        self._total_scope = self._db.scope_handle("simulation/total")
 
     @property
     def db(self) -> TimerDB:
@@ -185,16 +185,8 @@ class Scheduler:
 
     # -- execution ---------------------------------------------------------------
     def _run_routine(self, routine: ScheduledRoutine, state: RunState) -> None:
-        timer_name = f"{routine.bin}/{routine.qualified}"
-        handle = self._routine_handles.get(timer_name)
-        if handle is None:
-            handle = self._db.create(timer_name)
-            self._routine_handles[timer_name] = handle
-        self._db.start(handle)
-        try:
+        with self._db.scope_handle(f"{routine.bin}/{routine.qualified}"):
             routine.fn(state)
-        finally:
-            self._db.stop(handle)
 
     def attach_control_loop(
         self,
@@ -223,12 +215,7 @@ class Scheduler:
         )
 
     def run_bin(self, bin: str, state: RunState) -> None:
-        bin_handle = self._bin_handles.get(bin)
-        if bin_handle is None:
-            bin_handle = self._db.create(schedule_bin_timer_name(bin))
-            self._bin_handles[bin] = bin_handle
-        self._db.start(bin_handle)
-        try:
+        with self._db.scope_handle(schedule_bin_timer_name(bin)):
             for routine in self._order(bin):
                 if bin in _LOOP_BINS:
                     if routine.every > 1 and state.iteration % routine.every != 0:
@@ -236,13 +223,10 @@ class Scheduler:
                 if routine.when is not None and not routine.when(state):
                     continue
                 self._run_routine(routine, state)
-        finally:
-            self._db.stop(bin_handle)
 
     def run(self, state: RunState) -> RunState:
         """Full lifecycle: STARTUP, INITIAL, loop(PRESTEP..OUTPUT), SHUTDOWN."""
-        self._db.start(self._total_handle)
-        try:
+        with self._total_scope:
             self.run_bin("STARTUP", state)
             self.run_bin("INITIAL", state)
             while not state.should_terminate and state.iteration < state.max_iterations:
@@ -252,8 +236,6 @@ class Scheduler:
                         break
                 state.iteration += 1
             self.run_bin("SHUTDOWN", state)
-        finally:
-            self._db.stop(self._total_handle)
         return state
 
     def total_seconds(self) -> float:

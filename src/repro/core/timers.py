@@ -32,19 +32,52 @@ Hot-path architecture (paper: "a high performance interface"):
 Flattened views namespace colliding channel names as ``<clock>.<channel>``
 (two clocks exporting the same channel no longer silently overwrite each
 other).
+
+The supported call-path-facing surface lives one layer up in
+:mod:`repro.timing`: hierarchical scopes (:meth:`TimerDB.scope` /
+:meth:`TimerDB.scope_handle`) derive path-addressed timers from the running
+stack, :meth:`TimerDB.tree` aggregates the recorded per-parent attribution
+into an inclusive/exclusive forest, and the old flat sugar
+(:meth:`TimerDB.timing`, :func:`timed`) is deprecated.
 """
 
 from __future__ import annotations
 
 import functools
 import threading
+import warnings
 from collections.abc import Callable, Iterator, Mapping
 from contextlib import contextmanager
+from dataclasses import dataclass, field
 
 from . import clocks as _clocks
 from .clocks import _REGISTRY_VERSION as _VERSION  # atomic int read; hot path
 
-__all__ = ["Timer", "TimerDB", "timer_db", "timed", "reset_timer_db"]
+__all__ = [
+    "ScopeHandle",
+    "Timer",
+    "TimerDB",
+    "TimerNode",
+    "path_matches",
+    "reset_timer_db",
+    "timed",
+    "timer_db",
+]
+
+
+def path_matches(name: str, prefix: str) -> bool:
+    """Whole-path-segment prefix match over ``/``-separated timer paths.
+
+    ``"serve"`` matches ``"serve"`` and ``"serve/admit"`` but *not*
+    ``"server_x"`` (the classic ``startswith`` false positive).  A trailing
+    ``/`` on the prefix restricts the match to strict descendants.
+    """
+    if not prefix:
+        return True
+    if name == prefix:
+        return True
+    sep = prefix if prefix.endswith("/") else prefix + "/"
+    return name.startswith(sep)
 
 
 class TimerError(RuntimeError):
@@ -197,6 +230,8 @@ class Timer:
         "_marks",
         "_nonfused",
         "_views",
+        "_parent_path",
+        "_parent_stats",
     )
 
     def __init__(self, name: str, handle: int) -> None:
@@ -212,6 +247,12 @@ class Timer:
         self._marks: list[float] = []
         self._nonfused: dict[str, _clocks.Clock] = {}
         self._views: dict[str, object] | None = None
+        # per-call-path window attribution: {ancestor path tuple: [wall_s,
+        # count]} — a timer entered under several enclosing scopes (a shared
+        # library routine, the final checkpoint in SHUTDOWN) splits exactly
+        # in tree(), including its own sub-scopes
+        self._parent_path: tuple[str, ...] = ()
+        self._parent_stats: dict[tuple[str, ...], list] = {}
 
     # -- layout management (lock held) ----------------------------------------
     def _sync_layout_locked(self) -> None:
@@ -284,6 +325,19 @@ class Timer:
             ]
             self.running = False
             self.count += 1
+            # per-call-path attribution (one dict update per window): the
+            # wall seconds of this window land in the bucket of the full
+            # enclosing-scope chain recorded at start
+            wi = self._layout.walltime_index
+            entry = self._parent_stats.get(self._parent_path)
+            if entry is None:
+                self._parent_stats[self._parent_path] = [
+                    now[wi] - marks[wi] if wi is not None else 0.0, 1
+                ]
+            else:
+                if wi is not None:
+                    entry[0] += now[wi] - marks[wi]
+                entry[1] += 1
 
     def reset(self) -> None:
         with self._lock:
@@ -294,6 +348,7 @@ class Timer:
             for clock in self._nonfused.values():
                 clock.reset()
             self.count = 0
+            self._parent_stats = {}
 
     # -- queries ---------------------------------------------------------------
     def _values_locked(self) -> list[float]:
@@ -397,6 +452,24 @@ class Timer:
                 now = self._layout.sample()
                 self._marks[idx] = now[idx]
 
+    def parent_stats(self, live: bool = False) -> dict[tuple[str, ...], tuple[float, int]]:
+        """Window attribution per enclosing call path:
+        ``{ancestor scope chain (() for top level): (wall seconds, windows)}``.
+
+        ``live=True`` folds a currently open window's elapsed wall seconds
+        into its chain's bucket (window count unchanged) — what tree views on
+        a live monitor need so a still-running ancestor keeps its subtree.
+        """
+        with self._lock:
+            out = {p: (s, c) for p, (s, c) in self._parent_stats.items()}
+            if live and self.running:
+                wi = self._layout.walltime_index
+                if wi is not None:
+                    delta = self._layout.sample()[wi] - self._marks[wi]
+                    s, c = out.get(self._parent_path, (0.0, 0))
+                    out[self._parent_path] = (s + delta, c)
+        return out
+
     @property
     def clocks(self) -> dict[str, object]:
         """Compatibility view: {clock name: clock object}.  Fused clocks are
@@ -415,6 +488,97 @@ class Timer:
             return self._views
 
 
+class ScopeHandle:
+    """A pre-resolved hierarchical scope — the hot-path form of the scope API.
+
+    Holds the :class:`Timer` for one absolute path, resolved **once** at
+    construction (``timing.scope_handle("train/step")``); entering/exiting the
+    handle is the PR-2 fused start/stop window plus the thread-local stack
+    push/pop — no dict lookups, no name resolution, no database lock.  Parent
+    attribution is still dynamic: every enter re-derives ``parent_name`` from
+    the current thread's running stack, so a handle entered under different
+    enclosing scopes reports under whichever parent was active.
+
+    Handles are cached per database by :meth:`TimerDB.scope_handle`.  Like
+    the underlying timer, a handle admits one open window at a time: a second
+    enter — same thread or another — raises ``TimerError`` without touching
+    the running window's attribution.  Threads timing the same region
+    concurrently should use per-thread paths (cf. the concurrency tests).
+    """
+
+    __slots__ = ("path", "timer", "_tls")
+
+    def __init__(self, db: TimerDB, path: str) -> None:
+        self.path = path
+        self.timer = db.get(db.create(path))
+        self._tls = db._tls
+
+    def __enter__(self) -> Timer:
+        timer = self.timer
+        tls = self._tls
+        try:
+            stack = tls.stack
+        except AttributeError:
+            stack = tls.stack = []
+        # start first: a failed start (double enter) must not corrupt the
+        # open window's recorded attribution
+        timer.start()
+        timer.parent_name = stack[-1] if stack else None
+        timer._parent_path = tuple(stack)
+        stack.append(timer.name)
+        return timer
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.timer.stop()
+        stack = self._tls.stack
+        if stack:
+            name = self.timer.name
+            if stack[-1] == name:  # common LIFO case
+                stack.pop()
+            else:  # overlapping windows: drop the most recent occurrence
+                for i in range(len(stack) - 1, -1, -1):
+                    if stack[i] == name:
+                        del stack[i]
+                        break
+
+    def seconds(self) -> float:
+        return self.timer.seconds()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging sugar
+        return f"ScopeHandle({self.path!r})"
+
+
+@dataclass
+class TimerNode:
+    """One node of the parent/child timer forest built by :meth:`TimerDB.tree`.
+
+    ``inclusive`` is the timer's accumulated wall seconds; ``exclusive`` is
+    self time — inclusive minus the sum of the children's inclusive seconds
+    (unclamped, so the arithmetic identity is exact; real nestings keep it
+    non-negative because child windows sit inside parent windows on one
+    monotonic clock).
+    """
+
+    name: str
+    count: int
+    inclusive: float
+    exclusive: float
+    children: list[TimerNode] = field(default_factory=list)
+
+    @property
+    def depth(self) -> int:
+        """Height of this subtree (a leaf has depth 1)."""
+        return 1 + max((c.depth for c in self.children), default=0)
+
+    def walk(self) -> Iterator[tuple[int, TimerNode]]:
+        """Depth-first ``(level, node)`` traversal of this subtree."""
+        todo: list[tuple[int, TimerNode]] = [(0, self)]
+        while todo:
+            level, node = todo.pop()
+            yield level, node
+            todo.extend((level + 1, c) for c in reversed(node.children))
+
+
 class TimerDB:
     """The queryable timer database.  Any routine can obtain timing statistics
     for any other routine by querying this database (paper Sec. 2).
@@ -428,6 +592,7 @@ class TimerDB:
         self._timers: list[Timer] = []
         self._by_name: dict[str, int] = {}
         self._tls = threading.local()
+        self._scope_handles: dict[str, ScopeHandle] = {}
 
     # -- creation / lookup -----------------------------------------------------
     def create(self, name: str, exist_ok: bool = True) -> int:
@@ -484,8 +649,9 @@ class TimerDB:
             stack = self._tls.stack
         except AttributeError:
             stack = self._tls.stack = []
+        timer.start()  # before attribution: a double start must not corrupt it
         timer.parent_name = stack[-1] if stack else None
-        timer.start()
+        timer._parent_path = tuple(stack)
         stack.append(timer.name)
 
     def stop(self, ref: int | str) -> None:
@@ -531,13 +697,155 @@ class TimerDB:
         return out
 
     def total_seconds(self, prefix: str = "") -> float:
+        """Summed wall seconds over timers whose path equals ``prefix`` or
+        lives under it (whole-segment match: ``"serve"`` does not pick up a
+        ``server_x`` timer).  Note that summing a parent scope together with
+        its children counts nested time more than once — for self-vs-children
+        breakdowns use :meth:`tree`."""
         return sum(
-            t.seconds() for t in self.timers() if t.name.startswith(prefix)
+            t.seconds() for t in self.timers() if path_matches(t.name, prefix)
         )
 
-    # -- sugar -----------------------------------------------------------------
+    # -- hierarchy --------------------------------------------------------------
+    def scope_handle(self, path: str) -> ScopeHandle:
+        """The cached :class:`ScopeHandle` for an absolute timer path.
+
+        Resolution (name → timer object) happens here, once; the returned
+        handle's enter/exit is the lock-free fused fast path.  This is the
+        primary API for hot loops::
+
+            h = db.scope_handle("train/step")
+            ...
+            with h:          # zero dict lookups
+                step()
+        """
+        handle = self._scope_handles.get(path)
+        if handle is None:
+            with self._lock:
+                handle = self._scope_handles.get(path)
+                if handle is None:
+                    handle = ScopeHandle(self, path)
+                    self._scope_handles[path] = handle
+        return handle
+
+    @contextmanager
+    def scope(self, name: str) -> Iterator[Timer]:
+        """Open a hierarchical scope: the timer's path is ``name`` nested
+        under the enclosing scope on this thread's running stack, so
+
+            with db.scope("step"):
+                with db.scope("forward"): ...
+
+        records timers ``step`` and ``step/forward`` with parent/child
+        attribution derived from runtime nesting (no annotations).  ``name``
+        may itself contain ``/`` segments.  Pre-resolve hot paths with
+        :meth:`scope_handle` instead (absolute path, no per-entry joining).
+        """
+        try:
+            stack = self._tls.stack
+        except AttributeError:
+            stack = self._tls.stack = []
+        path = f"{stack[-1]}/{name}" if stack else name
+        handle = self._by_name.get(path)
+        if handle is None:
+            handle = self.create(path)
+        timer = self._timers[handle]
+        timer.start()  # before attribution: a double start must not corrupt it
+        timer.parent_name = stack[-1] if stack else None
+        timer._parent_path = tuple(stack)
+        stack.append(path)
+        try:
+            yield timer
+        finally:
+            timer.stop()
+            if stack:
+                if stack[-1] == path:
+                    stack.pop()
+                else:
+                    for i in range(len(stack) - 1, -1, -1):
+                        if stack[i] == path:
+                            del stack[i]
+                            break
+
+    def current_scope(self) -> str:
+        """This thread's innermost running scope path (``""`` outside any)."""
+        try:
+            stack = self._tls.stack
+        except AttributeError:
+            return ""
+        return stack[-1] if stack else ""
+
+    def tree(self) -> list[TimerNode]:
+        """The parent/child forest over all timers, from recorded call-path
+        attribution (SPACE-Timers-style tree view).
+
+        Every completed (or live) window was recorded under the full chain of
+        enclosing scopes active at its start, so the forest is an exact call
+        tree: a timer entered under *several* enclosing chains (a shared
+        helper, the final checkpoint write in SHUTDOWN) splits into one node
+        per chain, each carrying exactly the wall seconds and window count
+        accrued there — including its own sub-scopes, which land under the
+        matching split.  For properly nested windows this guarantees
+        ``sum(child.inclusive) <= parent.inclusive`` on every node
+        (overlapping/out-of-order windows, which the paper permits, are
+        attributed best-effort by the stack state at start).  A node whose
+        recorded chain has no corresponding parent node (root-level timers,
+        hand-set attribution, never-started rows) roots its own tree.
+        ``exclusive`` is inclusive minus the direct children's inclusive.
+        """
+        timers = self.timers()
+        nodes: dict[tuple[str, ...], TimerNode] = {}  # full chain -> node
+        singles: list[tuple[Timer, tuple[str, ...] | None]] = []
+        for t in timers:
+            buckets = t.parent_stats(live=True)
+            if len(buckets) <= 1:
+                # single- or never-windowed timer (incl. set_channel-published
+                # rows): one node whose inclusive is the live seconds()
+                # reading, so set()/reset() adjustments stay authoritative
+                singles.append((t, next(iter(buckets), None)))
+                continue
+            for chain, (seconds, count) in buckets.items():
+                nodes[chain + (t.name,)] = TimerNode(
+                    name=t.name, count=count, inclusive=seconds, exclusive=0.0
+                )
+        for t, chain in singles:
+            if chain is None:
+                chain = (t.parent_name,) if t.parent_name else ()
+            key = chain + (t.name,)
+            if key not in nodes:  # split timers keep their exact buckets
+                nodes[key] = TimerNode(
+                    name=t.name, count=t.count, inclusive=t.seconds(), exclusive=0.0
+                )
+        roots: list[TimerNode] = []
+        for key, node in nodes.items():
+            parent = nodes.get(key[:-1]) if len(key) > 1 else None
+            if parent is None or parent is node:
+                roots.append(node)
+            else:
+                parent.children.append(node)
+        for node in nodes.values():
+            node.exclusive = node.inclusive - sum(c.inclusive for c in node.children)
+        return roots
+
+    # -- sugar (deprecated: see repro.timing) -----------------------------------
     @contextmanager
     def timing(self, name: str) -> Iterator[Timer]:
+        """Deprecated flat-name timing context.
+
+        Use :func:`repro.timing.scope` (path nests under the enclosing scope)
+        or :meth:`scope_handle` (pre-resolved absolute path) instead.
+        """
+        warnings.warn(
+            "TimerDB.timing() is deprecated; use repro.timing.scope() / "
+            "TimerDB.scope_handle() (hierarchical scope API)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        with self._timing(name) as timer:
+            yield timer
+
+    @contextmanager
+    def _timing(self, name: str) -> Iterator[Timer]:
         # dict reads are atomic and names are never deleted, so the common
         # already-created case skips the database lock entirely
         handle = self._by_name.get(name)
@@ -554,26 +862,47 @@ _DB = TimerDB()
 
 
 def timer_db() -> TimerDB:
-    """The process-global timer database."""
+    """The process-global timer database (the active
+    :class:`repro.timing.TimingSession`'s database while one is entered)."""
     return _DB
 
 
 def reset_timer_db() -> TimerDB:
-    """Replace the global DB (tests)."""
+    """Replace the global DB (tests).  Prefer ``with repro.timing.session():``
+    for new code — it scopes the swap and restores the previous database."""
     global _DB
     _DB = TimerDB()
     return _DB
 
 
+def _install_db(db: TimerDB) -> TimerDB:
+    """Swap the process-global database, returning the previous one.
+
+    Internal wiring for :class:`repro.timing.TimingSession`; everything that
+    defaults to :func:`timer_db` (scopes, reports, detectors, monitors) picks
+    up the session database for the session's lifetime.
+    """
+    global _DB
+    prev, _DB = _DB, db
+    return prev
+
+
 def timed(name: str | None = None) -> Callable:
-    """Decorator placing caliper points around a function."""
+    """Deprecated flat-name decorator.  Use :func:`repro.timing.timed`, which
+    records under the caller's active scope (hierarchical path)."""
+    warnings.warn(
+        "repro.core.timers.timed is deprecated; use repro.timing.timed "
+        "(records under the caller's active scope)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
 
     def deco(fn: Callable) -> Callable:
         label = name or f"func/{fn.__qualname__}"
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
-            with _DB.timing(label):
+            with _DB._timing(label):
                 return fn(*args, **kwargs)
 
         return wrapper

@@ -286,12 +286,14 @@ class StragglerDetector:
 
         Uses the timer ``set_channel`` API (Cactus ``CCTK_TimerSet`` analogue),
         so the fleet-health rows render in ``core.report.format_report``
-        exactly like locally measured timers.
+        exactly like locally measured timers.  Rows are resolved through the
+        database's cached scope handles (the ``repro.timing`` path→timer
+        resolution), so repeated publishes skip the locked create/lookup.
         """
         from ..core.timers import TimerError
 
         for host, (count, total) in self.host_stats().items():
-            timer = db.get(db.create(f"{prefix}/host{host}::step"))
+            timer = db.scope_handle(f"{prefix}/host{host}::step").timer
             try:
                 timer.set_channel("walltime", total)
             except TimerError:  # no walltime clock registered: count-only row

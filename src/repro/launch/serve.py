@@ -13,9 +13,10 @@ import jax
 import numpy as np
 
 from ..configs import ARCH_IDS, get_smoke_config
-from ..core import format_report, timer_db
+from ..core import format_report, format_tree_report, timer_db
 from ..models import model as M
 from ..serving import Request, ServingEngine
+from ..timing import TimingSession
 
 __all__ = ["main", "run_serving"]
 
@@ -28,6 +29,7 @@ def run_serving(
     max_batch: int = 8,
     target_decode_ms: float | None = None,
     seed: int = 0,
+    session: TimingSession | None = None,
 ):
     cfg = get_smoke_config(arch)
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
@@ -36,6 +38,7 @@ def run_serving(
         cfg, params, max_batch=max_batch,
         max_seq=prompt_len + max_new + 8,
         target_decode_ms=target_decode_ms,
+        session=session,
     )
     for rid in range(n_requests):
         engine.submit(
@@ -56,13 +59,16 @@ def main(argv=None) -> int:
     ap.add_argument("--target-decode-ms", type=float, default=None)
     ap.add_argument("--report", action="store_true")
     args = ap.parse_args(argv)
+    sess = TimingSession(timer_db())
     engine = run_serving(
         args.arch, args.requests, args.prompt_len, args.max_new,
-        args.max_batch, args.target_decode_ms,
+        args.max_batch, args.target_decode_ms, session=sess,
     )
     print(json.dumps(engine.stats(), indent=1))
     if args.report:
-        print(format_report(timer_db()))
+        print(format_report(sess.db))
+        print()
+        print(format_tree_report(sess.db))
     return 0
 
 

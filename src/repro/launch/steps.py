@@ -17,12 +17,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
-from ..core.timers import timed
 from ..dist.context import use_sharding
 from ..dist.sharding import DEFAULT_RULES, FSDP_RULES, ShardingRules, spec_for, tree_shardings
 from ..models import model as M
 from ..models.config import ArchConfig, ShapeConfig
 from ..optim import AdamWConfig, adamw_update, init_opt_state, opt_state_axes, warmup_cosine
+from ..timing import timed
 
 __all__ = [
     "rules_for",
@@ -143,7 +143,9 @@ class BuiltStep:
     tokens_per_call: int = 0
 
 
-@timed("STARTUP/steps::make_train_step")
+# scope-aware decorator: nests under the caller's active scope (the
+# STARTUP driver routine in launchers; bare in dry-runs)
+@timed("steps::make_train_step")
 def make_train_step(
     cfg: ArchConfig,
     mesh: Mesh,
@@ -223,7 +225,7 @@ def make_train_step(
     )
 
 
-@timed("STARTUP/steps::make_prefill_step")
+@timed("steps::make_prefill_step")
 def make_prefill_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: ShapeConfig) -> BuiltStep:
     p_axes = M.param_axes(cfg)
     p_abs = M.abstract_params(cfg)
@@ -253,7 +255,7 @@ def make_prefill_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: 
     )
 
 
-@timed("STARTUP/steps::make_serve_step")
+@timed("steps::make_serve_step")
 def make_serve_step(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules, shape: ShapeConfig) -> BuiltStep:
     p_axes = M.param_axes(cfg)
     p_abs = M.abstract_params(cfg)

@@ -35,16 +35,17 @@ from ..core import (
     AdaptiveCheckpointController,
     AdaptiveCheckpointPolicy,
     RunState,
-    Scheduler,
     TimerLogger,
     adapt_rows,
     bin_distribution,
     format_report,
+    format_tree_report,
     param_registry,
     straggler_rows,
     timer_db,
+    tree_rows,
 )
-from ..core.clocks import CounterClock, counter_cell, register_clock
+from ..core.clocks import CounterClock, register_clock
 from ..data import DataLoader, SyntheticConfig, SyntheticLM
 from ..dist.meshutil import local_mesh
 from ..dist.pipeline import MicrobatchPlan
@@ -53,6 +54,7 @@ from ..models import model as M
 from ..models.config import ArchConfig, ShapeConfig
 from ..monitor import MonitorServer, StatusWriter
 from ..optim import AdamWConfig, init_opt_state
+from ..timing import TimingSession
 from .steps import make_train_step, rules_for
 
 __all__ = ["TrainSettings", "run_training", "main"]
@@ -97,16 +99,26 @@ def run_training(
     settings: TrainSettings,
     cfg: ArchConfig | None = None,
     control_loop: ControlLoop | None = None,
+    session: TimingSession | None = None,
 ) -> dict[str, Any]:
     """Run the scheduled training loop; returns a summary dict.
 
-    ``control_loop`` lets a caller supply the :class:`repro.adapt.ControlLoop`
-    (e.g. with extra custom controllers pre-registered, or to inspect the
-    decision log afterwards); by default the launcher builds its own.
+    ``session`` supplies the whole timing stack (database + scheduler +
+    control loop) as one :class:`repro.timing.TimingSession`; by default the
+    launcher bundles one over the process-global database, so a bare call
+    still profiles into ``timer_db()``.  ``control_loop`` remains the narrower
+    injection point (e.g. extra custom controllers pre-registered, or to
+    inspect the decision log afterwards) and is ignored when a session is
+    passed — register controllers on ``session.control_loop`` instead.
     """
-    db = timer_db()
+    sess = (
+        session
+        if session is not None
+        else TimingSession(timer_db(), control_loop=control_loop)
+    )
+    db = sess.db
     registry = param_registry()
-    sch = Scheduler(db)
+    sch = sess.scheduler
     st = RunState(max_iterations=settings.steps)
 
     if cfg is None:
@@ -129,7 +141,8 @@ def run_training(
 
     # --- the control plane: one loop, every adaptation registered on it ----------
     ckpt_timer_name = "CHECKPOINT/adaptcheck::write"
-    loop = control_loop if control_loop is not None else ControlLoop(db)
+    ckpt_write_scope = sess.scope_handle(ckpt_timer_name)
+    loop = sess.control_loop
     policy = AdaptiveCheckpointPolicy(
         mode="adaptive" if settings.ckpt_mode == "adaptive" else "fixed",
         every_iterations=settings.ckpt_every,
@@ -164,9 +177,9 @@ def run_training(
         "events",
         lambda: CounterClock("events", {"tokens": "count", "steps": "count"}),
     )
-    bump_flops = counter_cell("xla_flops")
-    bump_tokens = counter_cell("tokens")
-    bump_steps = counter_cell("steps")
+    bump_flops = sess.counter("xla_flops", absolute=True)
+    bump_tokens = sess.counter("tokens", absolute=True)
+    bump_steps = sess.counter("steps", absolute=True)
 
     # --- STARTUP ----------------------------------------------------------------
     def startup(s: RunState) -> None:
@@ -179,7 +192,9 @@ def run_training(
             warmup_steps=max(min(100, horizon // 10), 1),
         )
         s["built"] = built
-        with db.timing("STARTUP/compile"):
+        # absolute-path scope: keeps the historical name while nesting under
+        # the STARTUP driver routine in the tree report
+        with sess.scope_handle("STARTUP/compile"):
             s["exec"] = built.fn.lower(
                 built.abstract_state["params"],
                 built.abstract_state["opt_state"],
@@ -208,7 +223,7 @@ def run_training(
             s.iteration = start_step
             print(f"[train] restored checkpoint at step {start_step}")
         else:
-            with db.timing("STARTUP/init_params"):
+            with sess.scope_handle("STARTUP/init_params"):
                 s["params"] = M.init_params(cfg, jax.random.PRNGKey(settings.seed))
                 s["opt_state"] = init_opt_state(AdamWConfig(), s["params"])
         # commit state to the mesh with the step's exact shardings (AOT path)
@@ -267,17 +282,13 @@ def run_training(
         s["last_ckpt_decision"] = decision
         if decision is None or not decision.checkpoint:
             return
-        handle = db.create(ckpt_timer_name)
-        db.start(handle)
-        try:
+        with ckpt_write_scope:
             stats = manager.save(
                 s.iteration,
                 {"params": s["params"], "opt_state": s["opt_state"],
                  "data": s["loader"].state()},
                 metadata={"reason": decision.reason},
             )
-        finally:
-            db.stop(handle)
         ckpt_control.observe_checkpoint(stats["blocking_seconds"], stats["nbytes"])
 
     sch.schedule(adaptive_checkpoint, bin="CHECKPOINT", thorn="adaptcheck")
@@ -300,7 +311,7 @@ def run_training(
     # --- SHUTDOWN --------------------------------------------------------------------
     def shutdown(s: RunState) -> None:
         if manager is not None and settings.ckpt_mode != "off":
-            with db.timing(ckpt_timer_name):
+            with ckpt_write_scope:
                 stats = manager.save(
                     s.iteration,
                     {"params": s["params"], "opt_state": s["opt_state"],
@@ -316,7 +327,11 @@ def run_training(
     sch.schedule(shutdown, bin="SHUTDOWN", thorn="driver")
 
     # --- run -----------------------------------------------------------------------------
-    sch.run(st)
+    # the session is entered for the duration of the run so every API that
+    # defaults to timer_db() (scopes opened by thorns, reports, detectors)
+    # lands in the session's database
+    with sess:
+        sch.run(st)
 
     summary = {
         "iterations": st.iteration,
@@ -325,14 +340,15 @@ def run_training(
         "bin_seconds": bin_distribution(db),
         "checkpoint": controller.summary() if controller else {},
         "ckpt_fraction": (
-            db.get(ckpt_timer_name).seconds() / max(db.get("simulation/total").seconds(), 1e-9)
-            if db.exists(ckpt_timer_name)
-            else 0.0
+            ckpt_write_scope.seconds() / max(db.get("simulation/total").seconds(), 1e-9)
         ),
         "straggler_reports": len(detector.reports),
         "straggler_rows": straggler_rows(detector),
         "adapt": loop.summary(),
         "adapt_rows": adapt_rows(loop),
+        # the hierarchical profile: nested inclusive/exclusive rows derived
+        # from the scope stack (simulation/total → bins → routines → scopes)
+        "timer_tree": tree_rows(db),
     }
     return summary
 
@@ -363,15 +379,19 @@ def main(argv=None) -> int:
         ckpt_synchronous=args.ckpt_sync, peak_lr=args.lr,
         monitor_port=args.monitor_port,
     )
-    loop = ControlLoop(timer_db())
-    summary = run_training(settings, control_loop=loop)
+    sess = TimingSession(timer_db())
+    summary = run_training(settings, session=sess)
     print(json.dumps(summary, indent=1, default=str))
     if args.report:
         # fleet-health DIST/host rows and aggregate ADAPT/ counts are already
-        # in the DB; the control loop supplies the full decision-log section
+        # in the DB; the session's control loop supplies the decision log and
+        # the tree report adds the hierarchical self-vs-children view
         print(format_report(
-            timer_db(), channels=("walltime", "cputime", "xla_flops"), adapt=loop
+            sess.db, channels=("walltime", "cputime", "xla_flops"),
+            adapt=sess.control_loop,
         ))
+        print()
+        print(format_tree_report(sess.db))
     return 0
 
 

@@ -3,8 +3,10 @@ interface") — a stdlib HTTP server in a daemon thread serving the live timer
 database, steerable parameters, and run status.
 
 Endpoints:
-    /            HTML overview (Fig.-2-style timer table)
+    /            HTML overview (Fig.-2-style timer table + scope tree)
     /timers      JSON timer snapshot
+    /tree        nested JSON timer forest (inclusive/exclusive seconds per
+                 scope, children recursively — repro.timing tree view)
     /params      JSON steerable parameters; POST /params {"name":..,"value":..}
                  steers a parameter live (paper Sec. 5 steering)
     /status      JSON run status (iteration, loss, checkpoint stats)
@@ -23,7 +25,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any
 
 from ..core.params import ParamRegistry, param_registry
-from ..core.report import format_report
+from ..core.report import format_report, format_tree_report, tree_rows
 from ..core.timers import TimerDB, timer_db
 
 
@@ -86,12 +88,20 @@ class MonitorServer:
             def do_GET(self):
                 if self.path.startswith("/timers"):
                     self._send(200, json.dumps(monitor._db.snapshot()).encode())
+                elif self.path.startswith("/tree"):
+                    self._send(200, json.dumps(tree_rows(monitor._db)).encode())
                 elif self.path.startswith("/params"):
                     self._send(200, json.dumps(monitor._params.describe()).encode())
                 elif self.path.startswith("/status"):
                     self._send(200, json.dumps(monitor._status_fn()).encode())
                 elif self.path == "/" or self.path.startswith("/index"):
-                    body = "<html><body><pre>" + format_report(monitor._db) + "</pre></body></html>"
+                    body = (
+                        "<html><body><pre>"
+                        + format_report(monitor._db)
+                        + "\n\n"
+                        + format_tree_report(monitor._db)
+                        + "</pre></body></html>"
+                    )
                     self._send(200, body.encode(), "text/html")
                 else:
                     self._send(404, b'{"error": "not found"}')

@@ -2,9 +2,11 @@
 
 Static-batch scheduler: admit up to ``max_batch`` queued requests (padded to a
 common prompt length), one jitted prefill, then lock-step decode until every
-request finishes.  Every phase runs through the scheduler-integrated timers
-(``serve/admit``, ``serve/prefill``, ``serve/decode``), and — the paper's
-self-adaptation loop — the engine *steers its own batch size*: if the measured
+request finishes.  Every phase is a hierarchical ``repro.timing`` scope — a
+``serve`` parent enclosing ``serve/admit``, ``serve/prefill``,
+``serve/decode`` (pre-resolved handles; the hot path never resolves names) —
+so the tree report shows batch overhead as ``serve`` exclusive time.  The
+paper's self-adaptation loop rides on the measurements: if the measured
 per-token decode latency exceeds ``target_decode_ms``, the steerable
 ``serving.max_batch`` parameter is lowered (halved); if comfortably below, it
 is raised, bounded by the configured maximum.  See §3.3 of the paper
@@ -53,12 +55,25 @@ class ServingEngine:
         target_decode_ms: float | None = None,
         db: TimerDB | None = None,
         registry: ParamRegistry | None = None,
+        session=None,
     ) -> None:
+        """``session`` (a :class:`repro.timing.TimingSession`) supplies the
+        timer database when given — the session-wired path; ``db`` remains the
+        explicit-database escape hatch, and the process default is used when
+        neither is passed."""
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.target_decode_ms = target_decode_ms
+        if session is not None and db is None:
+            db = session.db
         self._db = db if db is not None else timer_db()
+        # phase scopes pre-resolved once (repro.timing hot path); names are
+        # real paths, so `serve` is the parent of the three phase timers
+        self._scope_serve = self._db.scope_handle("serve")
+        self._scope_admit = self._db.scope_handle("serve/admit")
+        self._scope_prefill = self._db.scope_handle("serve/prefill")
+        self._scope_decode = self._db.scope_handle("serve/decode")
         self._registry = registry if registry is not None else param_registry()
         self._registry.declare(
             "serving.max_batch", max_batch, steerable=True,
@@ -87,7 +102,11 @@ class ServingEngine:
         """Admit → prefill → decode-to-completion for one batch."""
         if not self.queue:
             return []
-        with self._db.timing("serve/admit"):
+        with self._scope_serve:
+            return self._step_batch_scoped()
+
+    def _step_batch_scoped(self) -> list[Request]:
+        with self._scope_admit:
             batch_reqs: list[Request] = []
             while self.queue and len(batch_reqs) < self.max_batch:
                 batch_reqs.append(self.queue.popleft())
@@ -96,7 +115,7 @@ class ServingEngine:
             tokens = np.zeros((b, plen), np.int32)
             for i, r in enumerate(batch_reqs):
                 tokens[i, plen - len(r.prompt):] = r.prompt  # left-pad
-        with self._db.timing("serve/prefill"):
+        with self._scope_prefill:
             cache = M.init_cache(self.cfg, b, self.max_seq)
             batch = {"tokens": jnp.asarray(tokens)}
             if self.cfg.family == "vlm":
@@ -111,10 +130,8 @@ class ServingEngine:
         next_tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(jnp.int32)
         done = np.zeros(b, bool)
         n_decoded = 0
-        decode_before = (
-            self._db.get("serve/decode").seconds() if self._db.exists("serve/decode") else 0.0
-        )
-        with self._db.timing("serve/decode") as decode_timer:
+        decode_before = self._scope_decode.seconds()
+        with self._scope_decode as decode_timer:
             for step_i in range(max_new):
                 for i, r in enumerate(batch_reqs):
                     if not done[i]:

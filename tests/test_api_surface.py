@@ -1,0 +1,115 @@
+"""Public-API snapshot of the ``repro.timing`` facade.
+
+The facade is the repo's supported instrumentation surface; future PRs must
+not silently rename, drop, or re-sign it.  Changing anything below is an API
+decision — update this snapshot *and* the README migration table together.
+"""
+
+import inspect
+
+import repro.timing as timing
+
+EXPECTED_ALL = [
+    "ScopeHandle",
+    "Timer",
+    "TimerDB",
+    "TimerNode",
+    "TimingSession",
+    "counter",
+    "current_scope",
+    "current_session",
+    "format_tree",
+    "scope",
+    "scope_handle",
+    "session",
+    "timed",
+    "timer_db",
+    "total_seconds",
+    "tree",
+]
+
+# facade callables: exact parameter names, in order
+EXPECTED_PARAMS = {
+    "scope": ["name", "db"],
+    "scope_handle": ["path", "db"],
+    "current_scope": ["db"],
+    "counter": ["name", "absolute", "db"],
+    "timed": ["name", "db"],
+    "session": ["db", "kwargs"],
+    "current_session": [],
+    "tree": ["db"],
+    "format_tree": ["db", "prefix", "title"],
+    "total_seconds": ["prefix", "db"],
+    "timer_db": [],
+}
+
+EXPECTED_SESSION_METHODS = {
+    "scope": ["self", "name"],
+    "scope_handle": ["self", "path"],
+    "counter": ["self", "name", "absolute"],
+    "timer": ["self", "ref"],
+    "tree": ["self"],
+    "tree_rows": ["self", "prefix"],
+    "total_seconds": ["self", "prefix"],
+    "report": ["self", "kwargs"],
+    "tree_report": ["self", "kwargs"],
+    "snapshot": ["self"],
+    "__enter__": ["self"],
+    "__exit__": ["self", "exc_type", "exc", "tb"],
+}
+
+
+def test_all_is_frozen():
+    assert list(timing.__all__) == EXPECTED_ALL
+
+
+def test_every_name_importable():
+    for name in timing.__all__:
+        assert getattr(timing, name, None) is not None, name
+
+
+def test_facade_signatures():
+    for name, params in EXPECTED_PARAMS.items():
+        sig = inspect.signature(getattr(timing, name))
+        assert list(sig.parameters) == params, f"{name}{sig}"
+
+
+def test_session_constructor_signature():
+    sig = inspect.signature(timing.TimingSession.__init__)
+    assert list(sig.parameters) == ["self", "db", "scheduler", "control_loop"]
+    # scheduler/control_loop are keyword-only injection points
+    assert sig.parameters["scheduler"].kind is inspect.Parameter.KEYWORD_ONLY
+    assert sig.parameters["control_loop"].kind is inspect.Parameter.KEYWORD_ONLY
+
+
+def test_session_surface():
+    for name, params in EXPECTED_SESSION_METHODS.items():
+        method = inspect.getattr_static(timing.TimingSession, name)
+        sig = inspect.signature(method)
+        assert list(sig.parameters) == params, f"TimingSession.{name}{sig}"
+    for prop in ("scheduler", "control_loop"):
+        assert isinstance(inspect.getattr_static(timing.TimingSession, prop), property)
+
+
+def test_timer_node_fields():
+    import dataclasses
+
+    fields = [f.name for f in dataclasses.fields(timing.TimerNode)]
+    assert fields == ["name", "count", "inclusive", "exclusive", "children"]
+
+
+def test_timerdb_hierarchy_surface():
+    for name, params in {
+        "scope": ["self", "name"],
+        "scope_handle": ["self", "path"],
+        "tree": ["self"],
+        "total_seconds": ["self", "prefix"],
+        "current_scope": ["self"],
+    }.items():
+        sig = inspect.signature(inspect.getattr_static(timing.TimerDB, name))
+        assert list(sig.parameters) == params, f"TimerDB.{name}{sig}"
+
+
+def test_scope_handle_slots():
+    # the hot-path object stays lean: no instance dict to allocate
+    assert timing.ScopeHandle.__slots__ == ("path", "timer", "_tls")

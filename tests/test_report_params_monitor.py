@@ -78,6 +78,23 @@ def test_status_writer_atomic(tmp_path):
     assert "simulation/total" in payload["timers"]
 
 
+def test_format_tree_report_and_rows():
+    from repro.core.report import format_tree_report, tree_rows
+    from repro.core.timers import timer_db as _tdb
+
+    db = _tdb()
+    with db.scope("run"):
+        with db.scope("phase"):
+            time.sleep(0.002)
+    text = format_tree_report(db)
+    lines = text.splitlines()
+    assert any(line.startswith("run ") for line in lines)
+    assert any(line.startswith("  run/phase ") for line in lines)
+    (root,) = tree_rows(db, prefix="run")
+    assert root["children"][0]["timer"] == "run/phase"
+    assert root["children"][0]["inclusive_s"] <= root["inclusive_s"]
+
+
 def test_monitor_http_endpoints():
     db = _populate_db()
     reg = param_registry()
@@ -88,6 +105,10 @@ def test_monitor_http_endpoints():
         base = f"http://127.0.0.1:{port}"
         timers = json.loads(urllib.request.urlopen(base + "/timers").read())
         assert "simulation/total" in timers
+        tree = json.loads(urllib.request.urlopen(base + "/tree").read())
+        tree_names = {row["timer"] for row in tree}
+        assert "simulation/total" in tree_names
+        assert all({"inclusive_s", "exclusive_s", "children"} <= set(r) for r in tree)
         status = json.loads(urllib.request.urlopen(base + "/status").read())
         assert status["iteration"] == 5
         html = urllib.request.urlopen(base + "/").read().decode()

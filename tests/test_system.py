@@ -35,6 +35,29 @@ def test_training_loop_runs_and_profiles(tmp_path):
     bins = summary["bin_seconds"]
     assert bins["EVOL"] > 0 and bins["STARTUP"] > 0
     assert summary["checkpoint"]["n_checkpoints"] >= 1
+    # the hierarchical profile: >=3-deep scope nesting with consistent
+    # inclusive/exclusive seconds (simulation/total -> bin -> routine -> scope)
+    def depth(row):
+        return 1 + max((depth(c) for c in row["children"]), default=0)
+
+    def check(row):
+        child_sum = sum(c["inclusive_s"] for c in row["children"])
+        assert child_sum <= row["inclusive_s"] + 1e-9, row["timer"]
+        assert row["exclusive_s"] == pytest.approx(row["inclusive_s"] - child_sum)
+        for c in row["children"]:
+            check(c)
+
+    forest = {row["timer"]: row for row in summary["timer_tree"]}
+    total = forest["simulation/total"]
+    assert depth(total) >= 3
+    for row in summary["timer_tree"]:
+        check(row)
+    # the compile scope nests under the STARTUP driver routine
+    startup_bin = next(c for c in total["children"] if c["timer"] == "bin/STARTUP")
+    driver = next(
+        c for c in startup_bin["children"] if c["timer"] == "STARTUP/driver::startup"
+    )
+    assert any(c["timer"] == "STARTUP/compile" for c in driver["children"])
 
 
 @pytest.mark.slow

@@ -1,0 +1,413 @@
+"""The ``repro.timing`` facade: hierarchical scopes, handles, counters,
+sessions, tree aggregation, and the deprecation shims over the old surface."""
+
+import time
+
+import pytest
+
+from repro import timing
+from repro.core import clocks as C
+from repro.core.timers import TimerError, path_matches, timer_db
+
+
+# ---------------------------------------------------------------------------
+# scopes
+# ---------------------------------------------------------------------------
+
+def test_scope_paths_nest_via_runtime_stack():
+    with timing.scope("train"):
+        with timing.scope("step"):
+            with timing.scope("forward"):
+                pass
+            with timing.scope("backward"):
+                pass
+    db = timer_db()
+    assert db.exists("train/step/forward") and db.exists("train/step/backward")
+    assert db.get("train/step/forward").parent_name == "train/step"
+    assert db.get("train/step").parent_name == "train"
+    assert db.get("train").parent_name is None
+
+
+def test_scope_reuses_timer_across_entries():
+    for _ in range(3):
+        with timing.scope("outer"):
+            with timing.scope("inner"):
+                pass
+    db = timer_db()
+    assert db.get("outer/inner").count == 3
+    assert db.get("outer").count == 3
+
+
+def test_scope_name_may_contain_segments():
+    with timing.scope("serve"):
+        with timing.scope("phase/admit"):
+            pass
+    assert timer_db().exists("serve/phase/admit")
+
+
+def test_scope_handle_absolute_path_and_dynamic_parent():
+    h = timing.scope_handle("train/step")
+    with h:
+        pass
+    db = timer_db()
+    assert db.get("train/step").parent_name is None  # entered at top level
+    with timing.scope("warmup"):
+        with h:  # same handle, different enclosing scope
+            pass
+    assert db.get("train/step").parent_name == "warmup"
+    assert db.get("train/step").count == 2
+
+
+def test_scope_handle_is_cached_per_path():
+    assert timing.scope_handle("a/b") is timing.scope_handle("a/b")
+    db2 = timing.TimerDB()
+    assert timing.scope_handle("a/b", db=db2) is not timing.scope_handle("a/b")
+
+
+def test_scope_handle_nests_scopes_under_it():
+    h = timing.scope_handle("serve")
+    with h:
+        with timing.scope("admit"):
+            pass
+    assert timer_db().get("serve/admit").parent_name == "serve"
+
+
+def test_scope_handle_double_enter_raises():
+    h = timing.scope_handle("once")
+    with h:
+        with pytest.raises(TimerError):
+            h.__enter__()
+
+
+def test_timed_records_under_callers_active_scope():
+    @timing.timed("build")
+    def build():
+        time.sleep(0.001)
+
+    build()  # bare: top-level path
+    with timing.scope("train"):
+        build()  # nested path
+    db = timer_db()
+    assert db.get("build").count == 1
+    assert db.get("train/build").count == 1
+    assert db.get("train/build").parent_name == "train"
+
+
+def test_timed_default_label_is_qualname():
+    @timing.timed()
+    def helper():
+        pass
+
+    helper()
+    names = timer_db().names()
+    assert any(n.endswith("helper") for n in names)
+
+
+def test_counter_namespaced_under_resolution_scope():
+    base_scoped = C.counter_channel("serve/tokens")
+    base_raw = C.counter_channel("tokens")  # global channel; other tests bump it
+    with timing.scope("serve"):
+        bump = timing.counter("tokens")
+    bump(3.0)
+    bump(4.0)
+    assert C.counter_channel("serve/tokens") - base_scoped == 7.0
+    # absolute addressing skips the namespace
+    raw = timing.counter("tokens", absolute=True)
+    raw(5.0)
+    assert C.counter_channel("tokens") - base_raw == 5.0
+
+
+def test_current_scope():
+    assert timing.current_scope() == ""
+    with timing.scope("a"):
+        with timing.scope("b"):
+            assert timing.current_scope() == "a/b"
+    assert timing.current_scope() == ""
+
+
+# ---------------------------------------------------------------------------
+# tree aggregation
+# ---------------------------------------------------------------------------
+
+def test_tree_inclusive_exclusive_identity():
+    with timing.scope("root"):
+        time.sleep(0.002)
+        with timing.scope("child1"):
+            time.sleep(0.004)
+        with timing.scope("child2"):
+            time.sleep(0.002)
+    roots = {n.name: n for n in timing.tree()}
+    root = roots["root"]
+    assert [c.name for c in root.children] == ["root/child1", "root/child2"]
+    child_sum = sum(c.inclusive for c in root.children)
+    assert root.exclusive == pytest.approx(root.inclusive - child_sum)
+    assert 0.0 <= root.exclusive < root.inclusive
+    assert child_sum <= root.inclusive
+    leaf = root.children[0]
+    assert leaf.exclusive == pytest.approx(leaf.inclusive)
+    assert root.depth == 2
+
+
+def test_tree_renders_three_deep():
+    with timing.scope("a"):
+        with timing.scope("b"):
+            with timing.scope("c"):
+                time.sleep(0.001)
+    text = timing.format_tree()
+    lines = text.splitlines()
+    assert any(line.startswith("a ") for line in lines)
+    assert any(line.startswith("  a/b ") for line in lines)
+    assert any(line.startswith("    a/b/c ") for line in lines)
+    root = next(n for n in timing.tree() if n.name == "a")
+    assert root.depth == 3
+
+
+def test_tree_rows_nested_json():
+    from repro.core.report import tree_rows
+
+    with timing.scope("x"):
+        with timing.scope("y"):
+            pass
+    rows = tree_rows(timer_db(), prefix="x")
+    assert len(rows) == 1
+    assert rows[0]["timer"] == "x"
+    (child,) = rows[0]["children"]
+    assert child["timer"] == "x/y"
+    assert child["inclusive_s"] <= rows[0]["inclusive_s"]
+
+
+def test_tree_splits_timer_entered_under_multiple_parents():
+    """A shared scope entered under two different parents (e.g. the final
+    checkpoint write running in SHUTDOWN) must split into per-call-path nodes
+    carrying exactly the seconds accrued under each — keeping the
+    sum(child.inclusive) <= parent.inclusive invariant everywhere."""
+    shared = timing.scope_handle("shared/write")
+    for _ in range(3):
+        with timing.scope("loop"):
+            with shared:
+                time.sleep(0.001)
+    with timing.scope("final"):
+        with shared:
+            time.sleep(0.002)
+    db = timer_db()
+    stats = db.get("shared/write").parent_stats()
+    assert stats[("loop",)][1] == 3 and stats[("final",)][1] == 1
+    nodes = {n.name: n for n in timing.tree()}
+    loop_node, final_node = nodes["loop"], nodes["final"]
+    (w_loop,) = loop_node.children
+    (w_final,) = final_node.children
+    assert w_loop.name == w_final.name == "shared/write"
+    assert w_loop.count == 3 and w_final.count == 1
+    assert w_loop.inclusive <= loop_node.inclusive
+    assert w_final.inclusive <= final_node.inclusive
+    assert w_loop.inclusive + w_final.inclusive == pytest.approx(
+        db.get("shared/write").seconds(), rel=1e-6
+    )
+
+
+def test_tree_split_timer_sub_scopes_follow_their_call_path():
+    """Sub-scopes opened inside a shared scope land under the matching split
+    node, never inflating the other parent's subtree (exclusive seconds stay
+    non-negative everywhere)."""
+    shared = timing.scope_handle("shared")
+    for _ in range(3):
+        with timing.scope("loop"):
+            with shared:
+                with timing.scope("sub"):
+                    pass
+    with timing.scope("final"):
+        with shared:
+            with timing.scope("sub"):
+                time.sleep(0.005)
+    nodes = {n.name: n for n in timing.tree()}
+
+    def walk_check(node):
+        child_sum = sum(c.inclusive for c in node.children)
+        assert child_sum <= node.inclusive + 1e-9, node.name
+        assert node.exclusive == pytest.approx(node.inclusive - child_sum)
+        for c in node.children:
+            walk_check(c)
+
+    for name in ("loop", "final"):
+        walk_check(nodes[name])
+        (shared_node,) = nodes[name].children
+        assert shared_node.name == "shared"
+        (sub_node,) = shared_node.children
+        assert sub_node.name == "shared/sub"
+    loop_sub = nodes["loop"].children[0].children[0]
+    final_sub = nodes["final"].children[0].children[0]
+    assert loop_sub.count == 3 and final_sub.count == 1
+    assert final_sub.inclusive >= 0.005  # the sleepy window is on final's path
+
+
+def test_tree_prefix_selects_nested_subtrees():
+    """A prefix naming a nested scope must find it wherever it sits in the
+    forest (consistent with total_seconds), not return an empty report."""
+    from repro.core.report import tree_rows
+
+    with timing.scope("run"):
+        with timing.scope("evol"):
+            with timing.scope("step"):
+                pass
+    (row,) = tree_rows(timer_db(), prefix="run/evol")
+    assert row["timer"] == "run/evol"
+    assert row["children"][0]["timer"] == "run/evol/step"
+    text = timing.format_tree(prefix="run/evol")
+    assert "run/evol/step" in text and "(no timers)" not in text
+
+
+def test_tree_tolerates_parent_cycles():
+    db = timer_db()
+    a, b = db.get(db.create("a")), db.get(db.create("b"))
+    a.parent_name, b.parent_name = "b", "a"  # pathological hand-made cycle
+    roots = {n.name for n in db.tree()}
+    assert {"a", "b"} <= roots  # both surfaced, nothing lost, no hang
+
+
+# ---------------------------------------------------------------------------
+# rollups (satellite: segment matching)
+# ---------------------------------------------------------------------------
+
+def test_path_matches_whole_segments():
+    assert path_matches("serve", "serve")
+    assert path_matches("serve/admit", "serve")
+    assert not path_matches("server_x", "serve")
+    assert path_matches("EVOL/trainer::step", "EVOL/")
+    assert path_matches("anything", "")
+
+
+def test_total_seconds_segment_match_no_false_positive():
+    db = timer_db()
+    for name in ("serve", "serve/admit", "server_x"):
+        h = db.create(name)
+        db.start(h)
+        time.sleep(0.001)
+        db.stop(h)
+    both = db.total_seconds("serve")
+    assert both == pytest.approx(
+        db.get("serve").seconds() + db.get("serve/admit").seconds()
+    )
+    assert db.total_seconds("server_x") > 0.0  # exact name still addressable
+    assert timing.total_seconds("serve") == pytest.approx(both)
+
+
+def test_report_rows_prefix_segment_match():
+    from repro.core.report import report_rows
+
+    db = timer_db()
+    for name in ("serve", "serve/admit", "server_x"):
+        db.create(name)
+    names = {r["timer"] for r in report_rows(db, prefix="serve")}
+    assert names == {"serve", "serve/admit"}
+
+
+# ---------------------------------------------------------------------------
+# satellite: out-of-order stops re-derive parents (overlapping windows)
+# ---------------------------------------------------------------------------
+
+def test_out_of_order_stop_reparents_later_starts():
+    """The paper allows overlapping windows: a scope started under parent A
+    and stopped after A must not leave stale attribution on later starts."""
+    db = timer_db()
+    a, b, c = db.create("A"), db.create("B"), db.create("C")
+    db.start(a)
+    db.start(b)                      # B under A
+    db.stop(a)                       # out of order: A closes while B runs
+    assert db.get(b).parent_name == "A"
+    db.start(c)                      # stack is [B] now
+    assert db.get(c).parent_name == "B"
+    db.stop(c)
+    db.stop(b)
+    db.start(b)                      # top level: parent re-derived, not stale
+    assert db.get(b).parent_name is None
+    db.stop(b)
+    # and the forest builds cleanly from the final attribution
+    roots = {n.name for n in db.tree()}
+    assert "B" in roots
+
+
+def test_out_of_order_scope_exit_keeps_stack_consistent():
+    h1, h2 = timing.scope_handle("w1"), timing.scope_handle("w2")
+    h1.__enter__()
+    h2.__enter__()
+    h1.__exit__(None, None, None)    # overlapping, not nested exit order
+    assert timing.current_scope() == "w2"
+    h2.__exit__(None, None, None)
+    assert timing.current_scope() == ""
+
+
+# ---------------------------------------------------------------------------
+# sessions
+# ---------------------------------------------------------------------------
+
+def test_session_installs_and_restores_db():
+    outer_db = timer_db()
+    with timing.session() as ts:
+        assert timer_db() is ts.db
+        assert timer_db() is not outer_db
+        assert timing.current_session() is ts
+        with timing.scope("inside"):
+            pass
+        assert ts.db.exists("inside")
+    assert timer_db() is outer_db
+    assert not outer_db.exists("inside")
+    assert timing.current_session() is None
+
+
+def test_sessions_nest():
+    with timing.session() as s1:
+        with timing.session() as s2:
+            assert timer_db() is s2.db
+        assert timer_db() is s1.db
+        assert timing.current_session() is s1
+
+
+def test_session_bundles_scheduler_and_control_loop():
+    from repro.core import RunState
+
+    with timing.session() as ts:
+        ts.scheduler.schedule(lambda s: None, bin="EVOL", thorn="t", name="noop")
+        ts.scheduler.attach_control_loop(ts.control_loop)
+        ts.scheduler.run(RunState(max_iterations=2))
+        assert ts.db.get("EVOL/t::noop").count == 2
+        assert ts.control_loop.polls == 2
+        assert ts.total_seconds("simulation/total") > 0.0
+        assert "simulation/total" in ts.report()
+        assert "EVOL/t::noop" in ts.tree_report()
+        # bins are children of simulation/total; routines children of bins
+        root = next(n for n in ts.tree() if n.name == "simulation/total")
+        assert root.depth >= 3
+
+
+def test_session_scope_sugar_and_counter():
+    with timing.session() as ts:
+        with ts.scope("work"):
+            bump = ts.counter("events")
+        bump(2.0)
+        assert C.counter_channel("work/events") == 2.0
+        assert ts.timer("work").count == 1
+        assert ts.tree_rows()[0]["timer"] == "work"
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (the old sugar keeps working, loudly)
+# ---------------------------------------------------------------------------
+
+def test_db_timing_deprecated_but_functional():
+    db = timer_db()
+    with pytest.warns(DeprecationWarning, match="TimerDB.timing"):
+        with db.timing("legacy"):
+            pass
+    assert db.get("legacy").count == 1
+
+
+def test_core_timed_deprecated_but_functional():
+    from repro.core.timers import timed as legacy_timed
+
+    with pytest.warns(DeprecationWarning, match="repro.core.timers.timed"):
+        @legacy_timed("legacy_fn")
+        def fn():
+            return 7
+
+    assert fn() == 7
+    assert timer_db().get("legacy_fn").count == 1

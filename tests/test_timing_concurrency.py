@@ -162,3 +162,119 @@ def test_shared_timer_double_start_still_raises():
     with pytest.raises(TimerError):
         db.start(h)
     db.stop(h)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical scopes across threads (repro.timing)
+# ---------------------------------------------------------------------------
+
+def _assert_exclusive_identity(node):
+    """node.exclusive must be *exactly* inclusive minus children's inclusive,
+    recursively (the tree computes it; this guards the arithmetic)."""
+    assert node.exclusive == pytest.approx(
+        node.inclusive - sum(c.inclusive for c in node.children), abs=1e-12
+    )
+    for child in node.children:
+        _assert_exclusive_identity(child)
+
+
+def _assert_children_bounded(node):
+    """Invariant: sum(child.inclusive) <= parent.inclusive per node — child
+    windows sit inside the parent's window on one monotonic clock."""
+    child_sum = sum(c.inclusive for c in node.children)
+    assert child_sum <= node.inclusive + 1e-9, node.name
+    for child in node.children:
+        _assert_children_bounded(child)
+
+
+def test_threaded_scopes_produce_disjoint_subtrees():
+    """Two threads nesting different paths concurrently: each thread's stack
+    is thread-local, so the forest must contain one clean subtree per thread
+    with no cross-attribution and exact exclusive arithmetic."""
+    db = timer_db()
+    barrier = threading.Barrier(2)
+    windows = 100
+
+    def worker(i):
+        root = f"thr{i}"
+        barrier.wait()
+        for _ in range(windows):
+            with db.scope(root):
+                with db.scope("mid"):
+                    with db.scope("leaf"):
+                        pass
+
+    _run_threads_2(worker)
+    roots = {n.name: n for n in db.tree()}
+    for i in range(2):
+        root = roots[f"thr{i}"]
+        assert [c.name for c in root.children] == [f"thr{i}/mid"]
+        (mid,) = root.children
+        assert [c.name for c in mid.children] == [f"thr{i}/mid/leaf"]
+        assert root.count == mid.count == mid.children[0].count == windows
+        # parents never point across threads
+        assert db.get(f"thr{i}/mid").parent_name == f"thr{i}"
+        assert db.get(f"thr{i}/mid/leaf").parent_name == f"thr{i}/mid"
+        _assert_exclusive_identity(root)
+        _assert_children_bounded(root)
+    # the two subtrees are disjoint name sets
+    names0 = {n.name for _, n in roots["thr0"].walk()}
+    names1 = {n.name for _, n in roots["thr1"].walk()}
+    assert not names0 & names1
+
+
+def _run_threads_2(worker):
+    errors = []
+
+    def wrapped(i):
+        try:
+            worker(i)
+        except Exception as exc:  # noqa: BLE001 - surfaced via assert below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=wrapped, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+
+def test_shared_scope_handles_across_threads_exact_counts():
+    """All threads entering thread-distinct handles concurrently: handle
+    enter/exit must stay exact (counts and stack hygiene) without the DB lock."""
+    db = timer_db()
+    windows = 200
+    handles = [db.scope_handle(f"conc/h{i}") for i in range(N_THREADS)]
+
+    def worker(i):
+        h = handles[i]
+        for _ in range(windows):
+            with h:
+                pass
+        assert db.current_scope() == ""  # thread's stack fully unwound
+
+    _run_threads(worker)
+    for i in range(N_THREADS):
+        assert db.get(f"conc/h{i}").count == windows
+
+
+def test_tree_invariant_under_concurrent_nesting_with_real_sleep():
+    """sum(child.inclusive) <= parent.inclusive holds on every node of every
+    thread's subtree, with real (sleepy) child windows."""
+    import time
+
+    db = timer_db()
+
+    def worker(i):
+        for _ in range(5):
+            with db.scope(f"sleepy{i}"):
+                with db.scope("a"):
+                    time.sleep(0.002)
+                with db.scope("b"):
+                    time.sleep(0.001)
+
+    _run_threads_2(worker)
+    for root in db.tree():
+        _assert_children_bounded(root)
+        _assert_exclusive_identity(root)
