@@ -1,0 +1,129 @@
+"""1F1B pipeline-step overheads: the schedule rows the CI perf gate pins.
+
+Measures us per operation for the fused 1F1B dispatch (one jitted tick loop:
+loss + per-stage grads), the phase-split dispatch (warmup/steady/cooldown as
+three synchronized segments — the launcher's timed path; the delta against
+the fused row is the price of per-phase timing), and the StagePlan
+pack/unpack round trip (the restage actuator's per-step cost).
+
+Methodology matches bench_clock_overhead: each row is the best of ``repeats``
+timed loops after a warmup call (jit tracing excluded), run on a 1-device
+``pod`` mesh so CI needs no forced topology; ``--scale`` shrinks iteration
+counts for smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+
+def _time_op(fn, n: int, scale: float = 1.0, repeats: int = 3) -> float:
+    n = max(int(n * scale), 3)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        best = min(best, time.perf_counter() - t0)
+    return best / n * 1e6
+
+
+def run(scale: float = 1.0) -> list[tuple[str, float, str]]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.meshutil import local_mesh
+    from repro.dist.pipeline import PipelineStep, StagePlan
+
+    width, n_layers, n_micro, micro_batch = 16, 4, 4, 2
+    mesh = local_mesh((1,), ("pod",))
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    layers = jax.random.normal(k1, (n_layers, 2, width, width)) * 0.3
+    x = jax.random.normal(k2, (n_micro * micro_batch, width))
+    tgt = jax.random.normal(k3, (n_micro * micro_batch, width))
+
+    def layer_fn(w, a):
+        return a + jnp.tanh(a @ w[0]) @ w[1] * 0.1
+
+    def loss_fn(y, t):
+        return jnp.mean((y - t) ** 2)
+
+    rows: list[tuple[str, float, str]] = []
+
+    fused = PipelineStep(layer_fn, loss_fn, mesh=mesh, axis="pod", n_micro=n_micro)
+
+    def fused_step():
+        loss, grads = fused(layers, x, tgt)
+        jax.block_until_ready(grads)
+
+    fused_step()  # trace + compile outside the timed region
+    rows.append(("pipeline_step/fused", _time_op(fused_step, 60, scale), "us_per_step"))
+
+    class _NoopPhase:
+        def __enter__(self):
+            return None
+
+        def __exit__(self, *exc):
+            return False
+
+    phased = PipelineStep(
+        layer_fn, loss_fn, mesh=mesh, axis="pod", n_micro=n_micro,
+        phase_cb=lambda name: _NoopPhase(),
+    )
+
+    def phased_step():
+        loss, grads = phased(layers, x, tgt)
+        jax.block_until_ready(grads)
+
+    phased_step()
+    rows.append(("pipeline_step/phased", _time_op(phased_step, 60, scale), "us_per_step"))
+
+    plan = StagePlan(n_layers=n_layers, weights={0: 2.0, 1: 1.0})
+
+    def repack():
+        packed, mask = plan.pack(layers)
+        jax.block_until_ready(plan.unpack(packed))
+
+    repack()
+    rows.append(("stage_plan_pack_unpack", _time_op(repack, 200, scale), "us_per_call"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="1F1B pipeline schedule overheads (CI perf-gate rows)."
+    )
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="iteration-count multiplier (CI smoke: 0.5)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (BENCH_*.json perf trajectory)")
+    args = ap.parse_args(argv)
+    rows = run(scale=args.scale)
+    print("name,us_per_call,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.3f},{derived}")
+    if args.json:
+        payload = {
+            "bench": "pipeline_step",
+            "scale": args.scale,
+            "unix_time": time.time(),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "rows": [
+                {"name": name, "us_per_call": value, "derived": derived}
+                for name, value, derived in rows
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

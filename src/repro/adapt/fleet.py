@@ -19,7 +19,14 @@ evict → rebuild chain is exercisable in CI:
   multi-host mesh;
 * optionally (``run_pipeline=True``) each host really feeds its share through
   :func:`~repro.dist.pipeline.gpipe_forward` on its local mesh, proving the
-  rebalanced assignment produces working pipeline calls end to end.
+  rebalanced assignment produces working pipeline calls end to end;
+* with ``n_layers > 0`` the fleet becomes a **pipeline fleet**: host ``h``
+  owns pipeline stage ``h`` of a shared :class:`~repro.dist.pipeline.StagePlan`
+  and its synthetic step time scales with its *stage depth* — so the straggler
+  response answers a slow stage owner by moving the stage boundary
+  (``restage``), and ``run_pipeline=True`` executes the restaged boundaries
+  through a real 1F1B :class:`~repro.dist.pipeline.PipelineStep` (packed
+  params + slot mask) to prove the new split computes.
 
 Inject a slowdown with :meth:`slow_host`, drive steps with :meth:`run_step`,
 and read convergence off :meth:`spread`.
@@ -32,7 +39,12 @@ import jax.numpy as jnp
 
 from ..core.timers import TimerDB, timer_db
 from ..dist.meshutil import local_mesh
-from ..dist.pipeline import MicrobatchPlan, gpipe_forward
+from ..dist.pipeline import (
+    MicrobatchPlan,
+    PipelineStep,
+    StagePlan,
+    gpipe_forward,
+)
 from ..dist.stragglers import LocalTransport, StragglerDetector
 from .stragglers import StragglerResponse
 
@@ -64,10 +76,15 @@ class SimulatedFleet:
         run_pipeline: bool = False,
         micro_batch: int = 2,
         feature_dim: int = 4,
+        n_layers: int = 0,
     ) -> None:
         self.db = db if db is not None else timer_db()
         self.transport = LocalTransport()
         self.plan = MicrobatchPlan.equal(range(n_hosts), n_micro)
+        #: pipeline mode: host h owns stage h of a shared layer stack
+        self.stage_plan = (
+            StagePlan.equal(range(n_hosts), n_layers) if n_layers > 0 else None
+        )
         self.detector = StragglerDetector(
             n_hosts,
             window=window,
@@ -82,7 +99,12 @@ class SimulatedFleet:
             confirm_after=confirm_after,
             evict_after=evict_after,
             min_weight=min_weight,
+            stage_plan=self.stage_plan,
+            stage_for_host=(
+                {h: h for h in range(n_hosts)} if self.stage_plan else None
+            ),
             on_evict=self._rebuild_meshes,
+            on_restage=self._on_restage,
         )
         #: per-microbatch execution cost of each host (seconds, synthetic)
         self.costs: dict[int, float] = {h: float(per_micro_seconds) for h in range(n_hosts)}
@@ -91,8 +113,12 @@ class SimulatedFleet:
         self.feature_dim = feature_dim
         self.evicted: list[int] = []
         self.mesh_generation = 0
+        #: restage actions applied: [(host, stage, depths)]
+        self.restages: list[tuple[int, int, dict[int, int]]] = []
         self.meshes: dict[int, object] = {}
         self.last_step_seconds: dict[int, float] = {}
+        self._pipeline_step: PipelineStep | None = None
+        self._layer_params: jax.Array | None = None
         self._rebuild_meshes(host=None, report=None)
 
     # -- environment --------------------------------------------------------------
@@ -105,15 +131,32 @@ class SimulatedFleet:
 
     # -- one fleet step ------------------------------------------------------------
     def run_step(self, step: int) -> dict[int, float]:
-        """Execute one fleet step: every active host runs its share and
+        """Execute one fleet step: every active host runs its assignment and
         publishes its (synthetic) walltime through the transport.  Returns
-        {host: step seconds}."""
+        {host: step seconds}.
+
+        Data-parallel mode: a host's work is its microbatch share.  Pipeline
+        mode (``n_layers > 0``): every microbatch traverses every stage, so a
+        host's work is ``stage depth x n_micro`` — shifting a stage boundary
+        (restage) is what changes its step time.
+        """
         shares = self.plan.shares()
+        depths = self.stage_plan.depths() if self.stage_plan is not None else {}
+        if self.run_pipeline and self.stage_plan is not None:
+            self._run_stage_pipeline()
         seconds: dict[int, float] = {}
         for host, share in shares.items():
-            if self.run_pipeline:
-                self._run_host_pipeline(host, share)
-            seconds[host] = self.costs[host] * share
+            if self.stage_plan is not None:
+                # the controller's map is authoritative (it prunes entries on
+                # eviction); the fleet constructs it as host h -> stage h but
+                # must not assume that identity here
+                stage = self.controller.stage_for_host.get(host)
+                work = depths.get(stage, 0) * self.plan.n_micro
+            else:
+                if self.run_pipeline:
+                    self._run_host_pipeline(host, share)
+                work = share
+            seconds[host] = self.costs[host] * work
             self.transport.publish(host, seconds[host])
         self.last_step_seconds = seconds
         return seconds
@@ -137,6 +180,34 @@ class SimulatedFleet:
         if y.shape != x.shape:
             raise AssertionError(f"pipeline shape drift: {y.shape} != {x.shape}")
 
+    def _run_stage_pipeline(self) -> None:
+        """Execute the current :class:`StagePlan` boundaries through a real
+        1F1B step (packed params + slot mask on the local pod mesh) — proof
+        that a restaged split still computes a loss and per-slot gradients."""
+        plan = self.stage_plan
+        assert plan is not None
+        if self._layer_params is None:
+            self._layer_params = (
+                jnp.ones((plan.n_layers, self.feature_dim), jnp.float32) * 0.9
+            )
+            mesh = local_mesh((1,), ("pod",))
+            self._pipeline_step = PipelineStep(
+                lambda w, a: a * w,
+                lambda y, t: jnp.mean((y - t) ** 2),
+                mesh=mesh,
+                axis="pod",
+                n_micro=self.plan.n_micro,
+            )
+        packed, mask = plan.pack(self._layer_params)
+        batch = self.plan.n_micro * self.micro_batch
+        x = jnp.ones((batch, self.feature_dim), jnp.float32)
+        loss, grads = self._pipeline_step(packed, x, x * 0.5, stage_mask=mask)
+        jax.block_until_ready(loss)
+        if grads.shape != packed.shape:
+            raise AssertionError(
+                f"pipeline grad shape drift: {grads.shape} != {packed.shape}"
+            )
+
     # -- queries -------------------------------------------------------------------
     def active_hosts(self) -> list[int]:
         return self.plan.hosts
@@ -150,6 +221,14 @@ class SimulatedFleet:
         if not vals:
             return 0.0
         return max(vals) - min(vals)
+
+    # -- restage actuator ------------------------------------------------------------
+    def _on_restage(self, host, stage, depths, report) -> None:
+        """Record a stage-boundary move.  The next :meth:`run_step` (and the
+        next :meth:`_run_stage_pipeline` pack) picks the new depths up from
+        the shared plan — the simulated analogue of a launcher re-packing
+        stage parameters before its next pipelined step."""
+        self.restages.append((host, stage, dict(depths)))
 
     # -- eviction actuator -----------------------------------------------------------
     def _rebuild_meshes(self, host, report) -> None:

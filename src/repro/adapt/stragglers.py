@@ -5,8 +5,16 @@ measure, decide, migrate).
 
 :class:`StragglerResponse` sits between the measurement reduction
 (:class:`~repro.dist.stragglers.StragglerDetector`, fed by all hosts through
-an injectable transport) and two actuators:
+an injectable transport) and three actuators:
 
+* **restage** — when the confirmed straggler *owns a pipeline stage* (the
+  controller was given a :class:`~repro.dist.pipeline.StagePlan` and a
+  ``host -> stage`` map), move the stage boundaries: derate the stage's
+  capacity weight by the same equilibrium rule so the largest-remainder depth
+  apportionment sheds whole layers off the slow device.  A stage owner's work
+  is depth-bound (every microbatch traverses its stage), so the microbatch
+  share derate would move no work for it: when the boundary cannot shift any
+  further, escalation goes straight to the eviction streak backstop;
 * **rebalance** — set the flagged host's weight in the fleet's
   :class:`~repro.dist.pipeline.MicrobatchPlan` to its equilibrium (nominal
   weight / per-microbatch slowdown, floored at ``min_weight``), so its share
@@ -39,11 +47,19 @@ from __future__ import annotations
 import statistics
 from collections.abc import Callable, Mapping
 
-from ..dist.pipeline import MicrobatchPlan
+from ..dist.pipeline import MicrobatchPlan, StagePlan
 from ..dist.stragglers import StragglerDetector, StragglerReport
 from .controller import ControlAction, Measurement
 
 __all__ = ["StragglerResponse"]
+
+#: shared stepped-probe policy for both granularity probes (microbatch share
+#: in :meth:`StragglerResponse._weight_dropping_share`, stage depth in
+#: :meth:`StragglerResponse._try_restage`): weights decay by this factor per
+#: probe until the ``min_weight`` floor (within the epsilon guard) — tune it
+#: here so the two actuators keep identical exhaustion semantics
+_PROBE_DECAY = 0.75
+_PROBE_FLOOR_EPS = 1e-12
 
 
 class StragglerResponse:
@@ -82,10 +98,26 @@ class StragglerResponse:
         process's own step timer straight out of the timer database — the
         single-process path the training launcher uses alongside (or instead
         of) a transport.
-    on_rebalance / on_evict:
+    stage_plan / stage_for_host:
+        Optional pipeline-stage wiring: ``stage_plan`` is the fleet's
+        :class:`~repro.dist.pipeline.StagePlan` and ``stage_for_host`` maps a
+        host id to the pipeline stage it owns.  A confirmed straggler that
+        owns a stage is answered with a **restage** (stage weight derated by
+        the equilibrium rule until the depth apportionment actually sheds a
+        layer off *its* stage); when the boundary cannot move further (stage
+        already at one layer, or weight floor reached without a depth change)
+        the policy escalates straight to the ``evict_after`` backstop — a
+        stage owner runs every microbatch through its stage, so the
+        microbatch share derate would shed no work for it.  Per-unit slowdown
+        for stage owners is normalized by ``n_micro x stage depth``
+        (share-independent) — a deliberately deeper stage is not "slow" for
+        taking proportionally longer.
+    on_rebalance / on_evict / on_restage:
         Actuator callbacks: ``on_rebalance(host, weight, report)`` after a
         weight change, ``on_evict(host, report)`` after an eviction (where the
-        launcher rebuilds the mesh).
+        launcher rebuilds the mesh), ``on_restage(host, stage, depths,
+        report)`` after a stage-boundary move (where the launcher re-packs
+        stage parameters via :meth:`~repro.dist.pipeline.StagePlan.pack`).
     """
 
     def __init__(
@@ -99,8 +131,11 @@ class StragglerResponse:
         min_weight: float = 0.25,
         rel_tol: float = 0.05,
         local_feed: tuple[int, str] | None = None,
+        stage_plan: StagePlan | None = None,
+        stage_for_host: Mapping[int, int] | None = None,
         on_rebalance: Callable[[int, float, StragglerReport], None] | None = None,
         on_evict: Callable[[int, StragglerReport], None] | None = None,
+        on_restage: Callable[[int, int, dict[int, int], StragglerReport], None] | None = None,
     ) -> None:
         if check_every < 1:
             raise ValueError(f"check_every must be >= 1, got {check_every}")
@@ -120,9 +155,16 @@ class StragglerResponse:
         self.evict_after = evict_after
         self.min_weight = min_weight
         self.rel_tol = rel_tol
+        if (stage_plan is None) != (stage_for_host is None):
+            raise ValueError(
+                "stage_plan and stage_for_host must be passed together"
+            )
         self.local_feed = local_feed
+        self.stage_plan = stage_plan
+        self.stage_for_host = dict(stage_for_host) if stage_for_host else {}
         self.on_rebalance = on_rebalance
         self.on_evict = on_evict
+        self.on_restage = on_restage
         self.channels = tuple(
             f"DIST/host{h}::step" for h in range(detector.n_hosts)
         )
@@ -130,6 +172,10 @@ class StragglerResponse:
         #: each host's weight at registration — the ceiling restores climb
         #: back to (plans may assign above-1.0 weights to bigger hosts)
         self._full_weight: dict[int, float] = dict(plan.weights)
+        #: each stage's weight at registration — the restage derate baseline
+        self._full_stage_weight: dict[int, float] = (
+            dict(stage_plan.weights) if stage_plan is not None else {}
+        )
 
     # -- Controller protocol ------------------------------------------------------
     def control(
@@ -147,11 +193,12 @@ class StragglerResponse:
         for host in list(self._streak):
             if host not in flagged:
                 self._streak[host] = 0
-        # snapshot the shares the report's means were measured under: acting
-        # on the first of two simultaneous stragglers changes every host's
-        # live share, and dividing the second host's (old-share) mean by its
-        # new share would misjudge it as share-induced
-        shares = self.plan.shares()
+        # snapshot the work units the report's means were measured under:
+        # acting on the first of two simultaneous stragglers changes every
+        # host's live share (or stage depth), and dividing the second host's
+        # (old-assignment) mean by its new units would misjudge it as
+        # assignment-induced
+        shares = self._work_units(self.plan.shares())
         actions: list[ControlAction] = []
         for host in sorted(flagged):
             self._streak[host] = self._streak.get(host, 0) + 1
@@ -160,24 +207,54 @@ class StragglerResponse:
                 actions.append(action)
         for host in self.plan.hosts:
             if host not in flagged:
-                action = self._restore(step, host, report, shares)
+                if self._owns_stage(host):
+                    action = self._restore_stage(step, host, report, shares)
+                else:
+                    action = self._restore(step, host, report, shares)
                 if action is not None:
                     actions.append(action)
         return actions
 
     # -- policy -------------------------------------------------------------------
+    def _owns_stage(self, host: int) -> bool:
+        return (
+            self.stage_plan is not None
+            and self.stage_for_host.get(host) in self.stage_plan.weights
+        )
+
+    def _work_units(self, shares: Mapping[int, float]) -> dict[int, float]:
+        """{host: work units per step}.
+
+        For a data-parallel host this is its microbatch share.  A host that
+        owns a pipeline stage runs *every* microbatch through its stage
+        regardless of share, so its work is ``n_micro x stage depth`` —
+        share-independent.  Normalizing a stage owner by its share would make
+        a share derate (which moves no work for it) look like a slowdown and
+        a small-share healthy host look like a straggler.
+        """
+        depths = self.stage_plan.depths() if self.stage_plan is not None else {}
+        units: dict[int, float] = {}
+        for h, s in shares.items():
+            stage = self.stage_for_host.get(h)
+            if stage in depths:
+                units[h] = self.plan.n_micro * depths[stage]
+            else:
+                units[h] = s
+        return units
+
     def _unit_slowdown(
-        self, host: int, report: StragglerReport, shares: Mapping[int, int]
+        self, host: int, report: StragglerReport, shares: Mapping[int, float]
     ) -> float | None:
-        """Per-microbatch slowdown vs the fleet's median per-microbatch time.
+        """Per-work-unit slowdown vs the fleet's median per-unit time.
 
         The detector flags on *raw* step time — the right fleet-health signal,
         but it conflates "slow per unit of work" with "deliberately assigned
         more work" (a weight-2 host takes proportionally longer steps by
         design).  The response policy therefore normalizes by each host's
-        share before deciding, so only genuine per-unit slowness is ever
-        acted on.  ``shares`` is the caller's per-check snapshot — the
-        apportionment the report's means were measured under.
+        work units (microbatch share x owned stage depth) before deciding, so
+        only genuine per-unit slowness is ever acted on.  ``shares`` is the
+        caller's per-check snapshot — the apportionment the report's means
+        were measured under.
         """
         per_unit = {
             h: mean / shares[h]
@@ -216,8 +293,8 @@ class StragglerResponse:
         found = None
         probe = saved
         try:
-            while probe > self.min_weight + 1e-12:
-                probe = max(probe * 0.75, self.min_weight)
+            while probe > self.min_weight + _PROBE_FLOOR_EPS:
+                probe = max(probe * _PROBE_DECAY, self.min_weight)
                 plan.weights[host] = probe
                 if plan.shares()[host] < current:
                     found = probe
@@ -227,7 +304,7 @@ class StragglerResponse:
         return found
 
     def _respond(
-        self, step: int, host: int, report: StragglerReport, shares: Mapping[int, int]
+        self, step: int, host: int, report: StragglerReport, shares: Mapping[int, float]
     ) -> ControlAction | None:
         plan = self.plan
         streak = self._streak[host]
@@ -240,6 +317,16 @@ class StragglerResponse:
         if slowdown is None or slowdown <= self.detector.threshold:
             # the raw-step-time flag was share-induced, not per-unit slowness
             self._streak[host] = 0
+            return None
+        if self._owns_stage(host):
+            # a stage owner's work is depth-bound: move its boundary; when
+            # the boundary cannot move further, a share derate would shed no
+            # work, so escalation goes straight to the eviction backstop
+            restaged = self._try_restage(step, host, report, slowdown)
+            if restaged is not None:
+                return restaged
+            if streak >= self.evict_after and len(plan.weights) > 1:
+                return self._evict(step, host, report, slowdown)
             return None
         at_floor = weight <= self.min_weight * (1.0 + 1e-9)
         if (at_floor or streak >= self.evict_after) and len(plan.weights) > 1:
@@ -272,8 +359,123 @@ class StragglerResponse:
             },
         )
 
+    def _try_restage(
+        self, step: int, host: int, report: StragglerReport, slowdown: float
+    ) -> ControlAction | None:
+        """Move the stage boundary off a slow stage owner, if it can move.
+
+        Derates the owned stage's capacity weight to its equilibrium (nominal
+        stage weight / per-unit slowdown, floored at ``min_weight``) and, when
+        the equilibrium weight alone does not change the largest-remainder
+        depth apportionment, probes smaller weights until one actually sheds
+        a layer — mirroring :meth:`_weight_dropping_share` on the microbatch
+        side.  Returns ``None`` when the host owns no stage, the stage is
+        already at one layer, or no admissible weight moves the boundary —
+        granularity exhausted: the caller escalates straight to the
+        ``evict_after`` backstop (a share derate would shed no work for a
+        depth-bound stage owner).
+        """
+        plan = self.stage_plan
+        if plan is None:
+            return None
+        stage = self.stage_for_host.get(host)
+        if stage is None or stage not in plan.weights:
+            return None
+        depths = plan.depths()
+        if depths[stage] <= 1:
+            return None  # boundary cannot move further
+        full = self._full_stage_weight.get(stage, 1.0)
+        saved = plan.weights[stage]
+        candidate = min(max(full / slowdown, self.min_weight), saved)
+        plan.weights[stage] = candidate
+        # success means the straggler's OWN stage sheds a layer — rounding can
+        # move a layer between two healthy stages while the slow one keeps its
+        # full depth, and counting that as a restage would churn boundaries
+        # and reset the escalation streak without making the host any faster
+        shed = plan.depths()[stage] < depths[stage]
+        while not shed and candidate > self.min_weight + _PROBE_FLOOR_EPS:
+            # stepped apportionment: probe down for a weight that sheds a layer
+            candidate = max(candidate * _PROBE_DECAY, self.min_weight)
+            plan.weights[stage] = candidate
+            shed = plan.depths()[stage] < depths[stage]
+        if not shed:
+            plan.weights[stage] = saved
+            return None
+        new_depths = plan.depths()
+        # same stale-sample hygiene as a share change: the host's next
+        # judgment must use samples measured under the new stage depth
+        self.detector.reset_window(host)
+        self._streak[host] = 0
+        if self.on_restage is not None:
+            self.on_restage(host, stage, new_depths, report)
+        return ControlAction(
+            step=step,
+            controller=self.name,
+            trigger=f"DIST/host{host}::step",
+            action="restage",
+            detail={
+                "host": host,
+                "stage": stage,
+                "slowdown": round(slowdown, 3),
+                "weight": round(candidate, 4),
+                "depths": new_depths,
+            },
+        )
+
+    def _restore_stage(
+        self, step: int, host: int, report: StragglerReport, shares: Mapping[int, float]
+    ) -> ControlAction | None:
+        """Give a restaged, now-healthy stage owner its layers back.
+
+        The stage-side mirror of :meth:`_restore`: the stage weight climbs
+        toward its registered full value by the same equilibrium rule
+        (``full / per-unit slowdown``, capped at full), so a transient
+        throttle never permanently parks layers on the healthy stages.  An
+        action is only emitted when the climb actually moves a boundary; a
+        sub-granularity weight climb is applied silently (the next checks
+        keep climbing until a layer moves back or the ceiling is reached).
+        Per-unit slowdown is depth-normalized, so a host that just regained a
+        layer is not re-judged slow merely for running more layers.
+        """
+        plan = self.stage_plan
+        stage = self.stage_for_host.get(host)
+        if plan is None or stage not in plan.weights or not shares.get(host):
+            return None
+        weight = plan.weights[stage]
+        full = self._full_stage_weight.get(stage, 1.0)
+        if weight >= full:
+            return None
+        slowdown = self._unit_slowdown(host, report, shares)
+        if slowdown is None or slowdown <= 0.0:
+            return None
+        desired = min(max(full / slowdown, self.min_weight), full)
+        if desired <= weight * (1.0 + self.rel_tol):
+            return None  # not measurably under-loaded: leave it
+        depths_before = plan.depths()
+        plan.weights[stage] = desired
+        new_depths = plan.depths()
+        if new_depths == depths_before:
+            return None  # weight climbed, boundary unchanged: no action yet
+        self.detector.reset_window(host)
+        self._streak[host] = 0
+        if self.on_restage is not None:
+            self.on_restage(host, stage, new_depths, report)
+        return ControlAction(
+            step=step,
+            controller=self.name,
+            trigger=f"DIST/host{host}::step",
+            action="restore",
+            detail={
+                "host": host,
+                "stage": stage,
+                "slowdown": round(slowdown, 3),
+                "weight": round(desired, 4),
+                "depths": new_depths,
+            },
+        )
+
     def _restore(
-        self, step: int, host: int, report: StragglerReport, shares: Mapping[int, int]
+        self, step: int, host: int, report: StragglerReport, shares: Mapping[int, float]
     ) -> ControlAction | None:
         """Give a derated, now-healthy host its weight back (same equilibrium
         rule as rebalance, capped at the host's original weight)."""
@@ -299,11 +501,11 @@ class StragglerResponse:
             saved = self.plan.weights[host]
             self.plan.weights[host] = desired
             try:
-                new_share = self.plan.shares()[host]
+                new_units = self.plan.shares()[host]
             finally:
                 self.plan.weights[host] = saved
             unit_seconds = report.host_means[host] / shares[host]
-            predicted = unit_seconds * new_share
+            predicted = unit_seconds * new_units
             fleet_median = statistics.median(report.host_means.values())
             if fleet_median > 0.0 and predicted > self.detector.threshold * fleet_median:
                 return None
@@ -337,6 +539,21 @@ class StragglerResponse:
         self.plan.evict(host)
         self.detector.evict(host)
         self._streak.pop(host, None)
+        # an evicted host's stage must not stay in the StagePlan: depths()
+        # would keep apportioning layers to a rank nobody runs.  Drop the
+        # stage (its layers re-apportion among survivors) unless another host
+        # still owns it; the launcher's on_evict rebuilds the shrunk mesh, so
+        # the next pack() targets the surviving rank count.
+        stage = self.stage_for_host.pop(host, None)
+        if (
+            self.stage_plan is not None
+            and stage is not None
+            and stage in self.stage_plan.weights
+            and stage not in self.stage_for_host.values()
+            and len(self.stage_plan.weights) > 1
+        ):
+            del self.stage_plan.weights[stage]
+            self._full_stage_weight.pop(stage, None)
         if self.on_evict is not None:
             self.on_evict(host, report)
         return ControlAction(

@@ -13,8 +13,9 @@ Modules
 ``sharding``   logical-axis rules -> ``PartitionSpec``/``NamedSharding``
 ``context``    ambient (mesh, rules) context + ``constrain`` annotations
 ``meshutil``   local/CI-friendly device-mesh construction + eviction rebuild
+               and per-stage pipeline submeshes
 ``stragglers`` cross-host step-time reduction + slow-host detection
-``pipeline``   GPipe-style microbatched pipeline parallelism + microbatch plans
+``pipeline``   GPipe forward + 1F1B training schedules, microbatch/stage plans
 ``compat``     shims over jax API drift (``shard_map``, ``make_mesh``)
 
 Acting on what the reduction finds — rebalancing microbatch plans, evicting
@@ -22,8 +23,8 @@ hosts, rebuilding meshes — is orchestrated by :mod:`repro.adapt`.
 """
 
 from .context import constrain, current_sharding, use_sharding
-from .meshutil import local_mesh, remove_host
-from .pipeline import MicrobatchPlan
+from .meshutil import local_mesh, pipeline_submeshes, remove_host
+from .pipeline import MicrobatchPlan, PipelineStep, StagePlan, phase_ticks, pipeline_step
 from .sharding import DEFAULT_RULES, FSDP_RULES, Axes, ShardingRules, spec_for, tree_shardings
 from .stragglers import LocalTransport, StragglerDetector, StragglerReport
 
@@ -39,8 +40,13 @@ __all__ = [
     "current_sharding",
     "constrain",
     "local_mesh",
+    "pipeline_submeshes",
     "remove_host",
     "MicrobatchPlan",
+    "PipelineStep",
+    "StagePlan",
+    "phase_ticks",
+    "pipeline_step",
     "LocalTransport",
     "StragglerDetector",
     "StragglerReport",

@@ -21,7 +21,7 @@ from jax.sharding import Mesh
 
 from .compat import make_mesh
 
-__all__ = ["local_mesh", "default_axis_names", "remove_host"]
+__all__ = ["local_mesh", "default_axis_names", "pipeline_submeshes", "remove_host"]
 
 _AXIS_NAMES_BY_RANK = {
     1: ("data",),
@@ -92,3 +92,31 @@ def remove_host(mesh: Mesh, index: int, axis: str | None = None) -> Mesh:
         raise ValueError(f"slice {index} out of range [0, {size}) on axis {axis!r}")
     devices = np.delete(np.asarray(mesh.devices), index, axis=pos)
     return Mesh(devices, names)
+
+
+def pipeline_submeshes(mesh: Mesh, axis: str) -> list[Mesh]:
+    """One mesh per slice along ``axis``, spanning the remaining axes.
+
+    The pipeline-stage hook: a launcher that pipelines over ``axis`` hands
+    each stage its own submesh for stage-local work (per-stage data feeds,
+    per-stage checkpoint shards, restaged parameter placement after a
+    :class:`~repro.dist.pipeline.StagePlan` boundary move).  Slice ``i`` of
+    the returned list holds the devices of pipeline rank ``i``; each submesh
+    keeps the remaining axis names and device order, so existing sharding
+    rules keep applying stage-locally.  A rank-1 mesh yields single-device
+    ``(1,)`` submeshes (the axis name is retained with size 1).
+    """
+    names = tuple(mesh.axis_names)
+    if axis not in names:
+        raise ValueError(f"mesh has no axis {axis!r}; axes are {names}")
+    pos = names.index(axis)
+    devices = np.asarray(mesh.devices)
+    out: list[Mesh] = []
+    for i in range(int(mesh.shape[axis])):
+        stage_devices = np.take(devices, [i], axis=pos)
+        if len(names) > 1:
+            stage_devices = np.squeeze(stage_devices, axis=pos)
+            out.append(Mesh(stage_devices, names[:pos] + names[pos + 1:]))
+        else:
+            out.append(Mesh(stage_devices, names))
+    return out

@@ -1,26 +1,56 @@
-"""GPipe-style pipeline parallelism over one mesh axis.
+"""Pipeline parallelism over one mesh axis: forward-only GPipe and 1F1B.
 
 ``gpipe_forward`` places consecutive layer stages on consecutive devices along
 a mesh axis and streams microbatches through them: at tick ``t`` stage 0
 ingests microbatch ``t`` while every other stage works on the activation its
 predecessor shipped via ``ppermute`` at tick ``t-1``.  After
 ``n_micro + n_stages - 1`` ticks the last stage has emitted every microbatch.
-
-This is the forward-only schedule (serving / dry-run measurement path); the
+It is the forward-only schedule (serving / dry-run measurement path); the
 bubble fraction is ``(n_stages - 1) / (n_micro + n_stages - 1)``, so more
 microbatches amortize the fill/drain cost exactly as in the GPipe paper.
 
-:class:`MicrobatchPlan` is the fleet-level assignment above ``gpipe_forward``:
-a weighted split of the global microbatch count across data-parallel hosts.
-Each host feeds its share through its own pipeline; the straggler-response
-controller (:mod:`repro.adapt.stragglers`) shrinks a slow host's weight so its
-share — and therefore its per-step walltime — drops, and removes the host
-entirely on eviction.
+:class:`PipelineStep` / :func:`pipeline_step` add the training schedule: a
+**1F1B** (one-forward-one-backward) tick loop that returns the loss *and*
+per-stage parameter gradients.  The schedule runs two counter-rotating
+``ppermute`` rings — activations forward, activation-gradients backward —
+driven by one global tick clock ``t``:
+
+* stage ``d`` runs the *forward* of microbatch ``m`` at tick ``m + d``;
+* stage ``d`` runs the *backward* of microbatch ``m`` at tick
+  ``m + 2S - 1 - d`` (``S`` = pipeline depth), i.e. the loss gradient enters
+  the last stage one tick after that microbatch's forward leaves it.
+
+Ticks ``[0, S)`` are pure **warmup** (forward fill), ticks ``[S, M + S - 1)``
+are **steady state** — every stage performs exactly one forward and one
+backward micro-step per tick — and ticks ``[M + S - 1, M + 2S - 1)`` are
+**cooldown** (backward drain).  :func:`phase_ticks` exposes these ranges and
+:class:`PipelineStep` can execute them as three separately dispatched
+segments so a launcher can time each phase (``phase_cb``).
+
+Memory is the 1F1B win: each stage keeps only its *in-flight* stage-input
+activations in a ring stash of ``min(2S, M)`` microbatch slots — sized by the
+pipeline depth, **not** by ``n_micro`` (GPipe's forward-then-backward order
+stashes all ``M``).  The backward recomputes the local stage group under
+``jax.vjp`` from the stashed input (standard rematerialization), so the stash
+holds one activation per in-flight microbatch and nothing else.
+
+Fleet-level assignment objects sit above the schedules:
+
+* :class:`MicrobatchPlan` — weighted largest-remainder split of the global
+  microbatch count across data-parallel hosts (every active host >= 1).
+* :class:`StagePlan` — the same apportionment over *pipeline stage depth*:
+  ``n_layers`` contiguous layers split across stages by capacity weight
+  (every stage >= 1 layer).  :meth:`StagePlan.pack` turns a flat per-layer
+  parameter stack into the padded ``(n_stages * max_depth, ...)`` slot array
+  (+ active mask) that :func:`pipeline_step` consumes, so the
+  straggler-response controller can *move stage boundaries* at run time
+  (``restage``) and the very next step executes the new split.
 """
 
 from __future__ import annotations
 
-from collections.abc import Callable, Iterable
+import functools
+from collections.abc import Callable, Iterable, Mapping
 from dataclasses import dataclass, field
 
 import jax
@@ -29,7 +59,46 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .compat import shard_map
 
-__all__ = ["MicrobatchPlan", "gpipe_forward"]
+__all__ = [
+    "MicrobatchPlan",
+    "PipelineStep",
+    "StagePlan",
+    "gpipe_forward",
+    "phase_ticks",
+    "pipeline_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Weighted largest-remainder apportionment (shared by both plan types)
+# ---------------------------------------------------------------------------
+
+def _largest_remainder(weights: Mapping[int, float], total: int) -> dict[int, int]:
+    """Apportion ``total`` indivisible units over ``weights`` proportionally.
+
+    Every key receives at least one unit (one unit per key is reserved before
+    the proportional split; the remainder is rounded largest-remainder with
+    the key id as the deterministic tie-break).  The result satisfies the
+    quota rule on the non-reserved part: each share is ``1 + floor(q)`` or
+    ``1 + ceil(q)`` for quota ``q = extra * w / sum(w)`` — the invariant the
+    property tests in ``tests/test_properties.py`` pin.
+    """
+    keys = sorted(weights)
+    if not keys:
+        raise ValueError("cannot apportion over an empty weight map")
+    if total < len(keys):
+        raise ValueError(
+            f"total={total} cannot cover {len(keys)} entries with >= 1 each"
+        )
+    total_w = sum(weights.values())
+    extra = total - len(keys)  # one reserved per key
+    quotas = {k: extra * weights[k] / total_w for k in keys}
+    counts = {k: int(quotas[k]) for k in keys}
+    leftover = extra - sum(counts.values())
+    by_remainder = sorted(keys, key=lambda k: (counts[k] - quotas[k], k))
+    for k in by_remainder[:leftover]:
+        counts[k] += 1
+    return {k: counts[k] + 1 for k in keys}
 
 
 @dataclass
@@ -81,23 +150,134 @@ class MicrobatchPlan:
 
     def shares(self) -> dict[int, int]:
         """{host: microbatch count}; counts sum to ``n_micro``, each >= 1."""
-        hosts = self.hosts
-        if not hosts:
+        if not self.weights:
             raise ValueError("plan has no hosts")
-        total_w = sum(self.weights.values())
-        extra = self.n_micro - len(hosts)  # one reserved per host
-        quotas = {h: extra * self.weights[h] / total_w for h in hosts}
-        counts = {h: int(quotas[h]) for h in hosts}
-        leftover = extra - sum(counts.values())
-        # largest remainder, host id as the deterministic tie-break
-        by_remainder = sorted(hosts, key=lambda h: (counts[h] - quotas[h], h))
-        for h in by_remainder[:leftover]:
-            counts[h] += 1
-        return {h: counts[h] + 1 for h in hosts}
+        return _largest_remainder(self.weights, self.n_micro)
 
     def share(self, host: int) -> int:
         return self.shares()[host]
 
+
+@dataclass
+class StagePlan:
+    """Weighted split of ``n_layers`` contiguous layers across pipeline stages.
+
+    The stage-depth analogue of :class:`MicrobatchPlan`: ``weights`` maps each
+    pipeline stage (rank along the pipeline mesh axis) to a positive capacity
+    weight, and :meth:`depths` apportions the layer count proportionally
+    (largest-remainder, every stage >= 1 layer).  The straggler-response
+    controller derates a slow stage-owner's weight (``restage`` action) so the
+    stage boundary moves and the slow device runs fewer layers per microbatch.
+
+    :meth:`pack` / :meth:`unpack` translate between the flat per-layer
+    parameter stack and the padded per-stage slot layout
+    (``n_stages * max_depth`` rows + active mask) that :func:`pipeline_step`
+    executes, so a launcher applies a restage by simply re-packing before the
+    next step.
+    """
+
+    n_layers: int
+    weights: dict[int, float] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.weights:
+            raise ValueError("StagePlan needs at least one stage")
+        if self.n_layers < len(self.weights):
+            raise ValueError(
+                f"n_layers={self.n_layers} cannot cover {len(self.weights)} "
+                f"stages with at least one layer each"
+            )
+        for stage, w in self.weights.items():
+            if w <= 0.0:
+                raise ValueError(f"stage {stage} weight must be positive, got {w}")
+
+    @classmethod
+    def equal(cls, stages: Iterable[int], n_layers: int) -> StagePlan:
+        """Uniform plan over ``stages`` (the pre-adaptation default)."""
+        return cls(n_layers=n_layers, weights={int(s): 1.0 for s in stages})
+
+    @property
+    def stages(self) -> list[int]:
+        return sorted(self.weights)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.weights)
+
+    def set_weight(self, stage: int, weight: float) -> None:
+        if stage not in self.weights:
+            raise ValueError(f"stage {stage} is not in the plan {self.stages}")
+        if weight <= 0.0:
+            raise ValueError(f"weight must be positive, got {weight}")
+        self.weights[stage] = float(weight)
+
+    def depths(self) -> dict[int, int]:
+        """{stage: layer count}; counts sum to ``n_layers``, each >= 1."""
+        return _largest_remainder(self.weights, self.n_layers)
+
+    def boundaries(self) -> dict[int, tuple[int, int]]:
+        """{stage: [start, stop) layer range} in stage order."""
+        depths = self.depths()
+        out: dict[int, tuple[int, int]] = {}
+        start = 0
+        for stage in self.stages:
+            out[stage] = (start, start + depths[stage])
+            start += depths[stage]
+        return out
+
+    def max_depth(self) -> int:
+        return max(self.depths().values())
+
+    def pack(self, layer_params: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Pad a flat ``(n_layers, ...)`` layer stack into pipeline slots.
+
+        Returns ``(packed, mask)``: ``packed`` has shape
+        ``(n_stages * max_depth, ...)`` where stage ``s`` owns the contiguous
+        slot block ``[s * max_depth, (s+1) * max_depth)`` holding its layers
+        front-aligned; ``mask`` is the matching boolean slot-activity vector
+        (inactive slots are identity in the pipeline and receive zero
+        gradient).  Padding makes unequal stage depths executable under the
+        SPMD schedule, whose per-device blocks must be equal-sized.
+        """
+        if int(layer_params.shape[0]) != self.n_layers:
+            raise ValueError(
+                f"layer_params has {layer_params.shape[0]} layers, plan "
+                f"covers {self.n_layers}"
+            )
+        lmax, rows = self._slot_rows()
+        n_slots = self.n_stages * lmax
+        index = jnp.asarray(rows)
+        packed = jnp.zeros((n_slots,) + layer_params.shape[1:], layer_params.dtype)
+        packed = packed.at[index].set(layer_params)
+        mask = jnp.zeros((n_slots,), bool).at[index].set(True)
+        return packed, mask
+
+    def unpack(self, packed: jax.Array) -> jax.Array:
+        """Gather the active slots of a packed array (e.g. per-slot gradients)
+        back into the flat ``(n_layers, ...)`` layer order."""
+        lmax, rows = self._slot_rows()
+        if int(packed.shape[0]) != self.n_stages * lmax:
+            raise ValueError(
+                f"packed has {packed.shape[0]} slots, plan packs to "
+                f"{self.n_stages * lmax}"
+            )
+        return packed[jnp.asarray(rows)]
+
+    def _slot_rows(self) -> tuple[int, list[int]]:
+        """``(max_depth, slot index of each flat layer in layer order)`` —
+        one apportionment pass serves both pack() and unpack(), which sit on
+        the per-step hot path (the live-restage re-pack)."""
+        depths = self.depths()
+        lmax = max(depths.values())
+        rows: list[int] = []
+        for i, stage in enumerate(self.stages):
+            rows.extend(i * lmax + j for j in range(depths[stage]))
+        return lmax, rows
+
+
+# ---------------------------------------------------------------------------
+# Forward-only (GPipe) schedule
+# ---------------------------------------------------------------------------
 
 def gpipe_forward(
     layer_fn: Callable[[jax.Array, jax.Array], jax.Array],
@@ -186,3 +366,284 @@ def gpipe_forward(
         pipelined, mesh=mesh, in_specs=(P(axis), P()), out_specs=P(), check=False
     )
     return fn(stage_params, x)
+
+
+# ---------------------------------------------------------------------------
+# 1F1B training schedule
+# ---------------------------------------------------------------------------
+
+def phase_ticks(n_micro: int, axis_size: int) -> dict[str, tuple[int, int]]:
+    """The 1F1B global tick ranges: ``{phase: [start, stop)}``.
+
+    *warmup* is the forward fill (no backward active anywhere), *steady* the
+    one-forward-one-backward regime, *cooldown* the backward drain (no forward
+    active anywhere).  The full schedule is ``n_micro + 2 * axis_size - 1``
+    ticks; ranges may be empty (e.g. steady when ``n_micro < axis_size``).
+    """
+    s, m = int(axis_size), int(n_micro)
+    return {
+        "warmup": (0, s),
+        "steady": (s, max(m + s - 1, s)),
+        "cooldown": (max(m + s - 1, s), m + 2 * s - 1),
+    }
+
+
+class PipelineStep:
+    """Reusable 1F1B pipeline train step over one mesh axis.
+
+    Builds (and caches, per input shape/dtype signature) the jitted tick
+    runner once; every ``__call__`` then executes the schedule and returns
+    ``(loss, grads)`` where ``loss`` is the mean of
+    ``loss_fn(stage_output, target)`` over microbatches and ``grads`` matches
+    ``stage_params``'s shape (per-slot parameter gradients of that mean loss).
+
+    Parameters
+    ----------
+    layer_fn:
+        ``layer_fn(slot_params, activation) -> activation`` — must preserve
+        activation shape/dtype (homogeneous pipeline).
+    loss_fn:
+        ``loss_fn(final_activation, target_microbatch) -> scalar``; it is
+        evaluated (and differentiated) on the last stage only.
+    mesh / axis:
+        The pipeline mesh axis.  ``stage_params.shape[0]`` must be a multiple
+        of the axis size; each device runs a contiguous slot block.
+    n_micro:
+        Microbatch count ``M``; ``x.shape[0]`` must be divisible by it.
+    phase_cb:
+        Optional ``phase_cb(name) -> context manager`` for
+        ``warmup``/``steady``/``cooldown``.  When set, the schedule executes
+        as three separately dispatched (and synchronized) segments with the
+        callback's context open around each — the launcher hook that times
+        phases as ``repro.timing`` scopes.  When unset the whole schedule is
+        one fused dispatch.
+    """
+
+    def __init__(
+        self,
+        layer_fn: Callable[[jax.Array, jax.Array], jax.Array],
+        loss_fn: Callable[[jax.Array, jax.Array], jax.Array],
+        *,
+        mesh: Mesh,
+        axis: str,
+        n_micro: int,
+        phase_cb: Callable[[str], object] | None = None,
+    ) -> None:
+        self.layer_fn = layer_fn
+        self.loss_fn = loss_fn
+        self.mesh = mesh
+        self.axis = axis
+        self.n_micro = int(n_micro)
+        self.phase_cb = phase_cb
+        self.axis_size = int(mesh.shape[axis])
+        if self.n_micro < 1:
+            raise ValueError(f"n_micro must be >= 1, got {n_micro}")
+        self._runners: dict[tuple, Callable] = {}
+
+    # -- public entry ---------------------------------------------------------
+    def __call__(
+        self,
+        stage_params: jax.Array,
+        x: jax.Array,
+        targets: jax.Array,
+        stage_mask: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array]:
+        s, m = self.axis_size, self.n_micro
+        n_slots = int(stage_params.shape[0])
+        if n_slots % s != 0:
+            raise ValueError(
+                f"n_slots={n_slots} must be a multiple of mesh axis "
+                f"{self.axis!r} size {s}"
+            )
+        batch = int(x.shape[0])
+        if batch % m != 0:
+            raise ValueError(f"batch {batch} not divisible by n_micro={m}")
+        if int(targets.shape[0]) != batch:
+            raise ValueError(
+                f"targets leading dim {targets.shape[0]} != batch {batch}"
+            )
+        if stage_mask is None:
+            stage_mask = jnp.ones((n_slots,), bool)
+        elif stage_mask.shape != (n_slots,):
+            raise ValueError(
+                f"stage_mask shape {stage_mask.shape} != ({n_slots},)"
+            )
+        micro_shape = (batch // m,) + x.shape[1:]
+        tmicro_shape = (batch // m,) + targets.shape[1:]
+
+        key = (
+            stage_params.shape, str(stage_params.dtype),
+            x.shape, str(x.dtype), targets.shape, str(targets.dtype),
+        )
+        runner = self._runners.get(key)
+        if runner is None:
+            runner = self._build(
+                n_slots, micro_shape, tmicro_shape,
+                x.dtype, targets.dtype, stage_params.shape[1:], stage_params.dtype,
+            )
+            self._runners[key] = runner
+
+        micro = x.reshape((m,) + micro_shape)
+        tmicro = targets.reshape((m,) + tmicro_shape)
+        r = min(2 * s, m)
+        carry = (
+            jnp.zeros((s,) + micro_shape, x.dtype),            # forward ring
+            jnp.zeros((s,) + micro_shape, x.dtype),            # backward ring
+            jnp.zeros((s, r) + micro_shape, x.dtype),          # input stash
+            jnp.zeros((s, r) + micro_shape, x.dtype),          # loss-grad seeds
+            jnp.zeros((s,), jnp.float32),                      # per-device loss
+            jnp.zeros((n_slots,) + stage_params.shape[1:], stage_params.dtype),
+        )
+        if self.phase_cb is None:
+            carry = runner(stage_params, stage_mask, micro, tmicro, carry,
+                           0, m + 2 * s - 1)
+        else:
+            for name, (t0, t1) in phase_ticks(m, s).items():
+                if t1 <= t0:
+                    continue
+                with self.phase_cb(name):
+                    carry = runner(stage_params, stage_mask, micro, tmicro,
+                                   carry, t0, t1)
+                    # synchronize inside the scope so the caliper window
+                    # covers the phase's device work, not just its dispatch
+                    jax.block_until_ready(carry[4])
+        loss = jnp.sum(carry[4])  # only the last stage accumulated loss
+        return loss, carry[5]
+
+    # -- schedule construction -------------------------------------------------
+    def _build(self, n_slots, micro_shape, tmicro_shape, x_dtype, t_dtype,
+               param_shape, param_dtype):
+        s, m = self.axis_size, self.n_micro
+        r = min(2 * s, m)
+        axis, layer_fn, loss_fn = self.axis, self.layer_fn, self.loss_fn
+        fwd_ring = [(i, (i + 1) % s) for i in range(s)]
+        bwd_ring = [(i, (i - 1) % s) for i in range(s)]
+
+        out_abstract = jax.eval_shape(
+            layer_fn,
+            jax.ShapeDtypeStruct(tuple(param_shape), param_dtype),
+            jax.ShapeDtypeStruct(micro_shape, x_dtype),
+        )
+        if out_abstract.shape != micro_shape or out_abstract.dtype != x_dtype:
+            raise ValueError(
+                f"layer_fn must preserve activation shape/dtype for "
+                f"pipelining; got {out_abstract.shape}/{out_abstract.dtype} "
+                f"from {micro_shape}/{x_dtype}"
+            )
+        loss_abstract = jax.eval_shape(
+            loss_fn,
+            jax.ShapeDtypeStruct(micro_shape, x_dtype),
+            jax.ShapeDtypeStruct(tmicro_shape, t_dtype),
+        )
+        if loss_abstract.shape != ():
+            raise ValueError(
+                f"loss_fn must return a scalar, got shape {loss_abstract.shape}"
+            )
+
+        def local(stages_local, mask_local, act):
+            # inactive slots (StagePlan padding) are identity and therefore
+            # contribute exactly zero gradient
+            def one(a, wm):
+                w, active = wm
+                return jnp.where(active, layer_fn(w, a), a), None
+
+            res, _ = jax.lax.scan(one, act, (stages_local, mask_local))
+            return res
+
+        def shard_body(stage_params, stage_mask, micro, tmicro, carry, t0, t1):
+            d = jax.lax.axis_index(axis)
+            is_first = d == 0
+            is_last = d == s - 1
+
+            def tick(t, c):
+                recv_f, recv_b, stash, seed, loss_sum, gacc = c
+                # ---- forward: microbatch t - d ----
+                mf = t - d
+                active_f = jnp.logical_and(mf >= 0, mf < m)
+                mf_c = jnp.clip(mf, 0, m - 1)
+                feed = jax.lax.dynamic_index_in_dim(micro, mf_c, keepdims=False)
+                act_in = jnp.where(is_first, feed, recv_f)
+                slot_f = jnp.mod(mf_c, r)
+                cur = jax.lax.dynamic_index_in_dim(stash, slot_f, keepdims=False)
+                stash = jax.lax.dynamic_update_index_in_dim(
+                    stash, jnp.where(active_f, act_in, cur), slot_f, 0
+                )
+                y = local(stage_params, stage_mask, act_in)
+                # last stage: fold the loss in and stash its gradient seed for
+                # the backward tick one step later
+                tgt = jax.lax.dynamic_index_in_dim(tmicro, mf_c, keepdims=False)
+                lm, gm = jax.value_and_grad(lambda yy: loss_fn(yy, tgt))(y)
+                take_loss = jnp.logical_and(active_f, is_last)
+                loss_sum = loss_sum + jnp.where(take_loss, lm, 0.0) / m
+                curs = jax.lax.dynamic_index_in_dim(seed, slot_f, keepdims=False)
+                seed = jax.lax.dynamic_update_index_in_dim(
+                    seed, jnp.where(take_loss, gm / m, curs), slot_f, 0
+                )
+                send_f = jax.lax.ppermute(y, axis, fwd_ring)
+                # ---- backward: microbatch t - (2S - 1 - d) ----
+                mb = t - (2 * s - 1 - d)
+                active_b = jnp.logical_and(mb >= 0, mb < m)
+                slot_b = jnp.mod(jnp.clip(mb, 0, m - 1), r)
+                act_b = jax.lax.dynamic_index_in_dim(stash, slot_b, keepdims=False)
+                g_seed = jax.lax.dynamic_index_in_dim(seed, slot_b, keepdims=False)
+                g_in = jnp.where(is_last, g_seed, recv_b)
+                # rematerialize the local stage group from the stashed input;
+                # only the stage inputs are kept in-flight (the 1F1B stash)
+                _, vjp = jax.vjp(
+                    lambda w, a: local(w, stage_mask, a), stage_params, act_b
+                )
+                dw, dact = vjp(g_in)
+                gacc = gacc + jnp.where(active_b, dw, jnp.zeros_like(dw))
+                send_b = jax.lax.ppermute(
+                    jnp.where(active_b, dact, jnp.zeros_like(dact)),
+                    axis, bwd_ring,
+                )
+                return send_f, send_b, stash, seed, loss_sum, gacc
+
+            recv_f, recv_b, stash, seed, loss_sum, gacc = carry
+            c = (recv_f[0], recv_b[0], stash[0], seed[0], loss_sum[0], gacc)
+            c = jax.lax.fori_loop(t0, t1, tick, c)
+            recv_f, recv_b, stash, seed, loss_sum, gacc = c
+            return (recv_f[None], recv_b[None], stash[None], seed[None],
+                    loss_sum[None], gacc)
+
+        carry_specs = (P(axis), P(axis), P(axis), P(axis), P(axis), P(axis))
+        smapped = shard_map(
+            shard_body,
+            mesh=self.mesh,
+            in_specs=(P(axis), P(axis), P(), P(), carry_specs, None, None),
+            out_specs=carry_specs,
+            check=False,
+        )
+
+        @functools.partial(jax.jit, static_argnums=(5, 6))
+        def run(stage_params, stage_mask, micro, tmicro, carry, t0, t1):
+            return smapped(stage_params, stage_mask, micro, tmicro, carry, t0, t1)
+
+        return run
+
+
+def pipeline_step(
+    layer_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    stage_params: jax.Array,
+    x: jax.Array,
+    targets: jax.Array,
+    *,
+    loss_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    mesh: Mesh,
+    axis: str,
+    n_micro: int,
+    stage_mask: jax.Array | None = None,
+    phase_cb: Callable[[str], object] | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One-shot 1F1B step: ``(loss, per-slot grads)`` for ``x``/``targets``.
+
+    Convenience wrapper over :class:`PipelineStep` (which hot loops should
+    construct once and reuse — the jitted tick runner is cached on the
+    instance, so a fresh ``pipeline_step`` call re-traces).
+    """
+    step = PipelineStep(
+        layer_fn, loss_fn, mesh=mesh, axis=axis, n_micro=n_micro,
+        phase_cb=phase_cb,
+    )
+    return step(stage_params, x, targets, stage_mask)

@@ -15,9 +15,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..dist.context import use_sharding
+from ..dist.pipeline import PipelineStep, StagePlan
 from ..dist.sharding import DEFAULT_RULES, FSDP_RULES, ShardingRules, spec_for, tree_shardings
 from ..models import model as M
 from ..models.config import ArchConfig, ShapeConfig
@@ -29,6 +30,7 @@ __all__ = [
     "input_specs",
     "batch_axes",
     "make_train_step",
+    "make_pipeline_train_step",
     "make_prefill_step",
     "make_serve_step",
     "shardings_for",
@@ -222,6 +224,116 @@ def make_train_step(
         out_shardings=(p_shard, o_shard, None),
         abstract_state={"params": p_abs, "opt_state": o_abs},
         tokens_per_call=shape.global_batch * shape.seq_len,
+    )
+
+
+@dataclass
+class PipelineBuiltStep(BuiltStep):
+    """A :class:`BuiltStep` whose ``fn`` drives the 1F1B pipeline schedule.
+
+    ``fn`` is a host-side callable (not an AOT-compiled executable): the 1F1B
+    schedule re-packs stage parameters from the live :class:`StagePlan` every
+    step — that is what makes a run-time ``restage`` take effect on the very
+    next step — and, when phase timing is on, dispatches
+    warmup/steady/cooldown as separately synchronized segments.  The inner
+    tick runner is jitted and cached per shape signature.
+    """
+
+    stage_plan: StagePlan | None = None
+    pipeline: PipelineStep | None = None
+    init_params: Any = None
+
+
+@timed("steps::make_pipeline_train_step")
+def make_pipeline_train_step(
+    mesh: Mesh,
+    stage_plan: StagePlan,
+    *,
+    axis: str = "pod",
+    width: int = 32,
+    vocab_size: int,
+    seq_len: int,
+    global_batch: int,
+    n_micro: int,
+    opt_cfg: AdamWConfig | None = None,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+    seed: int = 0,
+    phase_cb: Any = None,
+) -> PipelineBuiltStep:
+    """Build the pipeline-parallel (1F1B) train step over mesh axis ``axis``.
+
+    The model is a stack of ``stage_plan.n_layers`` homogeneous residual-MLP
+    layers trained to map a token's (fixed, untrained) embedding to its
+    next-token embedding — the homogeneous-stage workload the 1F1B schedule
+    pipelines over the ``pod`` axis.  Layers are re-packed from the live
+    ``stage_plan`` every step, so a straggler-triggered ``restage`` moves the
+    stage boundaries for the next step without rebuilding anything.
+
+    ``phase_cb(name)`` (a context-manager factory) times the schedule's
+    warmup / steady / cooldown phases; launchers pass ``repro.timing`` scope
+    handles.
+    """
+    opt_cfg = opt_cfg if opt_cfg is not None else AdamWConfig()
+    n_layers = stage_plan.n_layers
+    key = jax.random.PRNGKey(seed)
+    k_emb, k_layers = jax.random.split(key)
+    # fixed featurization: embeddings are not trained, the stage stack is
+    emb = jax.random.normal(k_emb, (vocab_size, width), jnp.float32)
+    emb = emb / jnp.sqrt(jnp.asarray(width, jnp.float32))
+    alpha = 1.0 / float(max(n_layers, 1))
+
+    def layer_fn(w, a):
+        return a + jnp.tanh(a @ w[0]) @ w[1] * alpha
+
+    def loss_fn(y, tgt):
+        return jnp.mean((y - tgt) ** 2)
+
+    pipeline = PipelineStep(
+        layer_fn, loss_fn, mesh=mesh, axis=axis, n_micro=n_micro,
+        phase_cb=phase_cb,
+    )
+
+    def init_params(init_key=None):
+        k = init_key if init_key is not None else k_layers
+        layers = jax.random.normal(k, (n_layers, 2, width, width), jnp.float32)
+        return {"layers": layers * 0.3}
+
+    p_abs = jax.eval_shape(init_params)
+    o_abs = jax.eval_shape(lambda p: init_opt_state(opt_cfg, p), p_abs)
+
+    def train_fn(params, opt_state, batch):
+        x = emb[batch["tokens"]]
+        tgt = emb[batch["targets"]]
+        packed, mask = stage_plan.pack(params["layers"])
+        loss, packed_grads = pipeline(packed, x, tgt, stage_mask=mask)
+        grads = {"layers": stage_plan.unpack(packed_grads)}
+        lr = warmup_cosine(
+            opt_state["step"], peak_lr=peak_lr, warmup_steps=warmup_steps,
+            total_steps=total_steps,
+        )
+        params, opt_state, stats = adamw_update(opt_cfg, params, grads, opt_state, lr)
+        metrics = {"loss": loss, "lr": lr}
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    replicated = NamedSharding(mesh, P())
+    b_abs = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
+    b_shard = {name: replicated for name in b_abs}
+    return PipelineBuiltStep(
+        fn=train_fn,
+        abstract_inputs=(b_abs,),
+        in_shardings=(None, None, b_shard),
+        out_shardings=None,
+        abstract_state={"params": p_abs, "opt_state": o_abs},
+        tokens_per_call=global_batch * seq_len,
+        stage_plan=stage_plan,
+        pipeline=pipeline,
+        init_params=init_params,
     )
 
 

@@ -48,14 +48,14 @@ from ..core import (
 from ..core.clocks import CounterClock, register_clock
 from ..data import DataLoader, SyntheticConfig, SyntheticLM
 from ..dist.meshutil import local_mesh
-from ..dist.pipeline import MicrobatchPlan
+from ..dist.pipeline import MicrobatchPlan, StagePlan, phase_ticks
 from ..dist.stragglers import StragglerDetector
 from ..models import model as M
 from ..models.config import ArchConfig, ShapeConfig
 from ..monitor import MonitorServer, StatusWriter
 from ..optim import AdamWConfig, init_opt_state
 from ..timing import TimingSession
-from .steps import make_train_step, rules_for
+from .steps import make_pipeline_train_step, make_train_step, rules_for
 
 __all__ = ["TrainSettings", "run_training", "main"]
 
@@ -88,6 +88,13 @@ class TrainSettings:
     #: LR-schedule horizon; decoupled from `steps` so an interrupted run and
     #: its resumption share the same schedule (restart determinism)
     lr_total_steps: int | None = None
+    #: pipeline-parallel (1F1B) training path: 0 = off; N > 0 shards stages
+    #: over an N-way "pod" mesh axis (N must not exceed visible devices; the
+    #: CPU smoke path uses 1 and still runs the full tick schedule)
+    pipeline_stages: int = 0
+    pipeline_layers: int = 8          # homogeneous stage-stack depth
+    pipeline_micro: int = 4           # 1F1B microbatch count
+    pipeline_width: int = 32          # stage activation width
 
 
 def _flops_per_step(cfg: ArchConfig, tokens: int) -> float:
@@ -123,7 +130,12 @@ def run_training(
 
     if cfg is None:
         cfg = get_smoke_config(settings.arch) if settings.smoke else get_config(settings.arch)
-    mesh = local_mesh(settings.mesh_shape)
+    pipelined = settings.pipeline_stages > 0
+    if pipelined:
+        # the 1F1B path pipelines homogeneous stages over a dedicated pod axis
+        mesh = local_mesh((settings.pipeline_stages,), ("pod",))
+    else:
+        mesh = local_mesh(settings.mesh_shape)
     rules = rules_for(cfg)
     shape = ShapeConfig("train_local", "train", settings.seq_len, settings.global_batch)
 
@@ -137,7 +149,14 @@ def run_training(
     logger = TimerLogger(settings.log_path) if settings.log_path else None
     status = StatusWriter(settings.status_path) if settings.status_path else None
     monitor = None
-    model_flops = _flops_per_step(cfg, settings.global_batch * settings.seq_len)
+    if pipelined:
+        # the pipeline path trains the residual-MLP stage stack, not the
+        # transformer cfg: same 6 * active-params * tokens convention, with
+        # the stack's actual parameter count (n_layers x 2 W x W matmuls)
+        active = settings.pipeline_layers * 2 * settings.pipeline_width ** 2
+        model_flops = 6.0 * active * settings.global_batch * settings.seq_len
+    else:
+        model_flops = _flops_per_step(cfg, settings.global_batch * settings.seq_len)
 
     # --- the control plane: one loop, every adaptation registered on it ----------
     ckpt_timer_name = "CHECKPOINT/adaptcheck::write"
@@ -159,7 +178,15 @@ def run_training(
         loop.register(ckpt_control)
     # single-process topology: this host feeds its own EVOL step timer into the
     # reduction; multi-host launchers hand the detector a transport instead and
-    # every host publishes through it
+    # every host publishes through it.  On the pipeline path the response
+    # controller additionally owns the StagePlan, so a confirmed straggler
+    # that owns a stage is answered by moving the stage boundary (restage)
+    # before any microbatch derate.
+    stage_plan = (
+        StagePlan.equal(range(settings.pipeline_stages), settings.pipeline_layers)
+        if pipelined
+        else None
+    )
     detector = StragglerDetector(n_hosts=1, db=db)
     loop.register(
         StragglerResponse(
@@ -167,6 +194,8 @@ def run_training(
             MicrobatchPlan.equal([0], n_micro=1),
             check_every=8,
             local_feed=(0, "EVOL/trainer::train_step"),
+            stage_plan=stage_plan,
+            stage_for_host={0: 0} if pipelined else None,
         )
     )
     sch.attach_control_loop(loop, bin="ANALYSIS")
@@ -186,20 +215,44 @@ def run_training(
         nonlocal manager, monitor
         opt_cfg = AdamWConfig()
         horizon = settings.lr_total_steps or settings.steps
-        built = make_train_step(
-            cfg, mesh, rules, shape, opt_cfg=opt_cfg,
-            peak_lr=settings.peak_lr, total_steps=max(horizon, 2),
-            warmup_steps=max(min(100, horizon // 10), 1),
-        )
-        s["built"] = built
-        # absolute-path scope: keeps the historical name while nesting under
-        # the STARTUP driver routine in the tree report
-        with sess.scope_handle("STARTUP/compile"):
-            s["exec"] = built.fn.lower(
-                built.abstract_state["params"],
-                built.abstract_state["opt_state"],
-                *built.abstract_inputs,
-            ).compile()
+        if pipelined:
+            # each schedule phase is a separately dispatched, synchronized
+            # segment recorded under its own timing scope
+            phase_handles = {
+                name: sess.scope_handle(f"train/pipeline/{name}")
+                for name in phase_ticks(settings.pipeline_micro,
+                                        settings.pipeline_stages)
+            }
+            built = make_pipeline_train_step(
+                mesh, stage_plan,
+                width=settings.pipeline_width,
+                vocab_size=cfg.vocab_size,
+                seq_len=settings.seq_len,
+                global_batch=settings.global_batch,
+                n_micro=settings.pipeline_micro,
+                opt_cfg=opt_cfg,
+                peak_lr=settings.peak_lr, total_steps=max(horizon, 2),
+                warmup_steps=max(min(100, horizon // 10), 1),
+                seed=settings.seed,
+                phase_cb=lambda name: phase_handles[name],
+            )
+            s["built"] = built
+            s["exec"] = built.fn  # host-side: re-packs the live StagePlan
+        else:
+            built = make_train_step(
+                cfg, mesh, rules, shape, opt_cfg=opt_cfg,
+                peak_lr=settings.peak_lr, total_steps=max(horizon, 2),
+                warmup_steps=max(min(100, horizon // 10), 1),
+            )
+            s["built"] = built
+            # absolute-path scope: keeps the historical name while nesting
+            # under the STARTUP driver routine in the tree report
+            with sess.scope_handle("STARTUP/compile"):
+                s["exec"] = built.fn.lower(
+                    built.abstract_state["params"],
+                    built.abstract_state["opt_state"],
+                    *built.abstract_inputs,
+                ).compile()
 
         source = SyntheticLM(
             SyntheticConfig(cfg.vocab_size, settings.seq_len, settings.global_batch,
@@ -224,11 +277,18 @@ def run_training(
             print(f"[train] restored checkpoint at step {start_step}")
         else:
             with sess.scope_handle("STARTUP/init_params"):
-                s["params"] = M.init_params(cfg, jax.random.PRNGKey(settings.seed))
+                if pipelined:
+                    s["params"] = built.init_params(
+                        jax.random.PRNGKey(settings.seed)
+                    )
+                else:
+                    s["params"] = M.init_params(cfg, jax.random.PRNGKey(settings.seed))
                 s["opt_state"] = init_opt_state(AdamWConfig(), s["params"])
-        # commit state to the mesh with the step's exact shardings (AOT path)
-        s["params"] = jax.device_put(s["params"], built.in_shardings[0])
-        s["opt_state"] = jax.device_put(s["opt_state"], built.in_shardings[1])
+        # commit state to the mesh with the step's exact shardings (AOT path;
+        # the pipeline path shards inside its shard_map'd tick runner)
+        if built.in_shardings[0] is not None:
+            s["params"] = jax.device_put(s["params"], built.in_shardings[0])
+            s["opt_state"] = jax.device_put(s["opt_state"], built.in_shardings[1])
         s["loader"] = DataLoader(source, start_step=start_step)
 
         ckpt_control.start_run(time.monotonic())
@@ -350,6 +410,22 @@ def run_training(
         # from the scope stack (simulation/total → bins → routines → scopes)
         "timer_tree": tree_rows(db),
     }
+    if pipelined:
+        summary["pipeline"] = {
+            "n_stages": settings.pipeline_stages,
+            "n_layers": settings.pipeline_layers,
+            "n_micro": settings.pipeline_micro,
+            "depths": stage_plan.depths(),
+            "phase_seconds": {
+                name: (
+                    db.get(f"train/pipeline/{name}").seconds()
+                    if db.exists(f"train/pipeline/{name}")
+                    else 0.0
+                )
+                for name in phase_ticks(settings.pipeline_micro,
+                                        settings.pipeline_stages)
+            },
+        }
     return summary
 
 
@@ -369,6 +445,11 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--report", action="store_true", help="print the timer report")
     ap.add_argument("--monitor-port", type=int, default=None)
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="1F1B pipeline-parallel path: pod-axis size (0 = off)")
+    ap.add_argument("--pipeline-layers", type=int, default=8)
+    ap.add_argument("--pipeline-micro", type=int, default=4)
+    ap.add_argument("--pipeline-width", type=int, default=32)
     args = ap.parse_args(argv)
 
     settings = TrainSettings(
@@ -378,6 +459,10 @@ def main(argv=None) -> int:
         ckpt_max_fraction=args.ckpt_max_fraction,
         ckpt_synchronous=args.ckpt_sync, peak_lr=args.lr,
         monitor_port=args.monitor_port,
+        pipeline_stages=args.pipeline_stages,
+        pipeline_layers=args.pipeline_layers,
+        pipeline_micro=args.pipeline_micro,
+        pipeline_width=args.pipeline_width,
     )
     sess = TimingSession(timer_db())
     summary = run_training(settings, session=sess)

@@ -72,11 +72,20 @@ def counter(name: str, *, absolute: bool = False, db: TimerDB | None = None) -> 
     from any thread.  ``absolute=True`` skips the namespacing and addresses
     the process-global channel directly (e.g. channels a registered
     :class:`~repro.core.clocks.CounterClock` exports, like ``io_bytes``).
+
+    Scoped (non-absolute) channels are auto-exported through the session
+    CounterClock (:func:`repro.timing.session.export_counter_channel`), so
+    they render in timer reports without any manual clock registration;
+    absolute names are left alone — they usually address channels an existing
+    clock already exports, and double-exporting would collide.
     """
     if not absolute:
         path = (db if db is not None else timer_db()).current_scope()
         if path:
             name = f"{path}/{name}"
+        from .session import export_counter_channel
+
+        export_counter_channel(name)
     return counter_cell(name)
 
 

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import threading
 
+from ..core.clocks import CounterClock, channel_layout, clock_names, register_clock
 from ..core.report import format_report, format_tree_report, tree_rows
 from ..core.timers import ScopeHandle, Timer, TimerDB, TimerNode, _install_db
 from .scopes import counter as _counter
@@ -32,6 +33,50 @@ __all__ = ["TimingSession", "current_session", "session"]
 
 _ACTIVE: list[TimingSession] = []
 _ACTIVE_LOCK = threading.Lock()
+
+#: channels exported through the auto-registered session CounterClock.  The
+#: map is process-global (counters themselves are process-global channels) and
+#: additive: every scoped counter any session resolves becomes readable; the
+#: clock is never auto-unregistered, because a layout rebuild drops
+#: accumulated values for channels that vanish — reports formatted *after* a
+#: session exits must still render its counters.
+_SESSION_COUNTER_UNITS: dict[str, str] = {}
+_SESSION_CLOCK_NAME = "session_counters"
+_SESSION_CLOCK_LOCK = threading.Lock()
+
+
+def export_counter_channel(channel: str, unit: str = "count") -> None:
+    """Make ``channel`` readable by every timer window from now on.
+
+    Scoped counters (``timing.counter("tokens")`` inside ``scope("serve")``)
+    write to process-global channels that no built-in clock exports; without
+    this, they are write-only — bumpable but invisible in reports.  The first
+    resolution of each such channel re-registers the shared
+    ``session_counters`` :class:`~repro.core.clocks.CounterClock` with the
+    channel added (a registry version bump), so every timer picks it up from
+    its next window and ``format_report(..., channels=("serve/tokens",))``
+    renders it with zero manual clock setup.  A channel some other clock
+    already exports is skipped — double-exporting would force the collision
+    rename onto the established name.
+    """
+    with _SESSION_CLOCK_LOCK:
+        if _SESSION_CLOCK_NAME not in clock_names():
+            # a registry reset (e.g. test isolation) dropped the clock: the
+            # channel cache is stale, rebuild from scratch
+            _SESSION_COUNTER_UNITS.clear()
+        elif channel in _SESSION_COUNTER_UNITS:
+            return
+        if channel_layout().flat_index.get(channel) is not None:
+            # some other clock already exports this exact channel name;
+            # double-exporting would force the collision rename on both
+            return
+        _SESSION_COUNTER_UNITS[channel] = unit
+        units = dict(_SESSION_COUNTER_UNITS)
+        # register inside the lock: two concurrent first-resolutions must not
+        # let a stale (smaller) channel snapshot win the registration race
+        register_clock(
+            _SESSION_CLOCK_NAME, lambda: CounterClock(_SESSION_CLOCK_NAME, units)
+        )
 
 
 class TimingSession:

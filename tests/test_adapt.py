@@ -444,6 +444,234 @@ def test_straggler_response_confirmation_and_hysteresis():
 
 
 # ---------------------------------------------------------------------------
+# Stage-depth rebalancing (restage): the 1F1B acceptance scenario
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_fleet_restage_moves_stage_boundary():
+    """A straggler that owns a pipeline stage is answered by moving the stage
+    boundary: the ADAPT log records a ``restage``, the slow host's depth
+    shrinks, its step time drops, and the restaged (uneven) boundaries really
+    execute through a 1F1B pipeline_step (run_pipeline=True)."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        4, 8, db=db, window=2, threshold=1.3, check_every=1,
+        confirm_after=1, evict_after=8, n_layers=12, run_pipeline=True,
+    )
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+    assert fleet.stage_plan.depths() == {0: 3, 1: 3, 2: 3, 3: 3}
+
+    fleet.slow_host(2, 2.5)
+    fleet.run_step(0)
+    seconds_before = fleet.last_step_seconds[2]
+    for step in range(8):
+        if step:
+            fleet.run_step(step)
+        loop.poll(step)
+    fleet.run_step(8)
+
+    restages = [a for a in loop.actions if a.action == "restage"]
+    assert restages and restages[0].detail["host"] == 2
+    assert restages[0].detail["stage"] == 2
+    # the boundary move is preferred: no share derate before the restage
+    first_action = adapt_rows(loop)[0]
+    assert first_action["action"] == "restage"
+    depths = fleet.stage_plan.depths()
+    assert depths[2] < 3 and sum(depths.values()) == 12
+    assert min(depths.values()) >= 1
+    assert fleet.restages and fleet.restages[0][:2] == (2, 2)
+    assert fleet.last_step_seconds[2] < seconds_before  # work really moved
+    assert 2 in fleet.active_hosts()                    # moved, not evicted
+    # the decision is visible as an ADAPT/ row in the timer report
+    assert db.exists("ADAPT/stragglers::restage")
+    assert "ADAPT/stragglers::restage" in format_report(db, adapt=loop)
+
+
+def test_restage_granularity_exhausted_escalates_to_evict_backstop():
+    """When every stage is already at one layer the boundary cannot move, and
+    a share derate would shed no work for a stage owner (its stage runs every
+    microbatch regardless) — so escalation goes straight to the evict_after
+    backstop: no restage, no rebalance, eventually an eviction."""
+    from repro.dist.pipeline import StagePlan
+
+    transport = LocalTransport()
+    det = StragglerDetector(3, window=2, threshold=1.3, transport=transport,
+                            publish=False)
+    plan = MicrobatchPlan.equal(range(3), 9)
+    stage_plan = StagePlan.equal(range(3), 3)  # depths {1, 1, 1}: immovable
+    resp = StragglerResponse(
+        det, plan, confirm_after=1, evict_after=4, min_weight=0.25,
+        stage_plan=stage_plan, stage_for_host={h: h for h in range(3)},
+    )
+    actions = []
+    n_micro = plan.n_micro
+    for step in range(8):
+        depths = stage_plan.depths()
+        for h in plan.hosts:
+            stage = resp.stage_for_host.get(h)
+            work = n_micro * depths[stage] if stage in depths else plan.shares()[h]
+            transport.publish(h, (3.0 if h == 1 else 1.0) * work)
+        actions += resp.control(step, {})
+    kinds = [a.action for a in actions]
+    assert "restage" not in kinds and "rebalance" not in kinds
+    assert kinds.count("evict") == 1
+    assert plan.hosts == [0, 2]
+    assert set(stage_plan.weights) == {0, 2}  # evicted owner's stage dropped
+
+
+def test_deliberately_deeper_stage_owner_not_misjudged():
+    """Per-unit slowdown normalizes by share x stage depth: a host owning a
+    deliberately deeper stage takes proportionally longer steps by design and
+    must trigger no action."""
+    from repro.dist.pipeline import StagePlan
+
+    transport = LocalTransport()
+    det = StragglerDetector(2, window=2, threshold=1.3, transport=transport,
+                            publish=False)
+    plan = MicrobatchPlan.equal(range(2), 4)           # shares {2, 2}
+    stage_plan = StagePlan(n_layers=4, weights={0: 3.0, 1: 1.0})  # depths {3, 1}
+    resp = StragglerResponse(
+        det, plan, confirm_after=1, evict_after=8, min_weight=0.25,
+        stage_plan=stage_plan, stage_for_host={0: 0, 1: 1},
+    )
+    for step in range(6):
+        depths = stage_plan.depths()
+        for h in plan.hosts:
+            # identical per-unit speed; raw time scales with share x depth
+            transport.publish(h, 1.0 * plan.shares()[h] * depths[h])
+        assert resp.control(step, {}) == []
+    assert stage_plan.depths() == {0: 3, 1: 1}
+    assert plan.shares() == {0: 2, 1: 2}
+
+
+def test_transient_stage_slowdown_restores_layers():
+    """The stage-side restore mirror: a restaged host whose throttle clears
+    earns its layers back (restore action on the stage plan), so a transient
+    hiccup never permanently parks layers on the healthy stages."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        4, 8, db=db, window=2, threshold=1.3, check_every=1,
+        confirm_after=1, evict_after=10, n_layers=12,
+    )
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+    fleet.slow_host(2, 2.5)
+    for step in range(6):
+        fleet.run_step(step)
+        loop.poll(step)
+    assert fleet.stage_plan.depths()[2] < 3        # restaged down
+    fleet.slow_host(2, 1 / 2.5)                    # the throttle clears
+    for step in range(6, 20):
+        fleet.run_step(step)
+        loop.poll(step)
+    restores = [a for a in loop.actions if a.action == "restore"]
+    assert restores and restores[0].detail["host"] == 2
+    assert fleet.stage_plan.depths() == {0: 3, 1: 3, 2: 3, 3: 3}  # layers back
+    # and the recovered boundaries were re-packed by the fleet actuator
+    assert any(r[0] == 2 and r[2][2] == 3 for r in fleet.restages)
+
+
+def test_pipeline_fleet_unequal_shares_only_real_straggler_acted_on():
+    """Stage owners are normalized by n_micro x depth (share-independent) and
+    their microbatch weight is never derated or restored: with an unequal
+    share distribution, the only host acted on is the genuinely slow one."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        4, 8, db=db, window=2, threshold=1.3, check_every=1,
+        confirm_after=1, evict_after=8, n_layers=12,
+    )
+    fleet.plan.set_weight(3, 0.4)   # healthy host with a small share
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+    fleet.slow_host(2, 2.5)
+    for step in range(8):
+        fleet.run_step(step)
+        loop.poll(step)
+    rows = adapt_rows(loop)
+    assert rows and {r["detail"]["host"] for r in rows} == {2}
+    assert all(r["action"] == "restage" for r in rows)
+    assert fleet.stage_plan.depths()[2] < 3
+
+
+def test_restage_only_succeeds_when_stragglers_own_stage_sheds():
+    """Regression: derating a stage weight can shuffle a layer between two
+    *healthy* stages through largest-remainder rounding while the slow stage
+    keeps its full depth — that must not count as a restage (no boundary
+    churn, no streak reset); the streak keeps growing toward the evict
+    backstop instead."""
+    from repro.dist.pipeline import StagePlan
+
+    transport = LocalTransport()
+    det = StragglerDetector(3, window=2, threshold=1.3, transport=transport,
+                            publish=False)
+    plan = MicrobatchPlan.equal(range(3), 6)
+    # the reviewer-found weight set: derating stage 1 moves a layer from
+    # stage 0 to stage 2, never off stage 1 itself
+    stage_plan = StagePlan(n_layers=11, weights={0: 0.34, 1: 2.14, 2: 2.73})
+    depths_before = stage_plan.depths()
+    assert depths_before == {0: 2, 1: 4, 2: 5}
+    resp = StragglerResponse(
+        det, plan, confirm_after=1, evict_after=10, min_weight=0.25,
+        stage_plan=stage_plan, stage_for_host={0: 0, 1: 1, 2: 2},
+    )
+    actions = []
+    for step in range(3):
+        depths = stage_plan.depths()
+        for h in plan.hosts:
+            transport.publish(
+                h, (3.0 if h == 1 else 1.0) * plan.shares()[h] * depths[h]
+            )
+        actions += resp.control(step, {})
+    restages = [a for a in actions if a.action == "restage"]
+    # every logged restage must have really shed a layer off stage 1; stage
+    # owners never get a share derate, so no rebalance can appear either way
+    for a in restages:
+        assert a.detail["depths"][1] < depths_before[1]
+    assert not [a for a in actions if a.action == "rebalance"]
+
+
+def test_evicting_stage_owner_drops_its_stage_from_the_plan():
+    """Regression: an evicted host's stage must leave the StagePlan (its
+    layers re-apportion among survivors) — depths() must never keep
+    assigning layers to a rank nobody runs."""
+    from repro.dist.pipeline import StagePlan
+
+    transport = LocalTransport()
+    det = StragglerDetector(3, window=2, threshold=1.3, transport=transport,
+                            publish=False)
+    plan = MicrobatchPlan.equal(range(3), 6)
+    stage_plan = StagePlan.equal(range(3), 3)  # depth 1 each: restage blocked
+    resp = StragglerResponse(
+        det, plan, confirm_after=1, evict_after=3, min_weight=0.25,
+        stage_plan=stage_plan, stage_for_host={h: h for h in range(3)},
+    )
+    evicted = []
+    for step in range(12):
+        shares = plan.shares()
+        for h in plan.hosts:
+            transport.publish(h, (8.0 if h == 1 else 1.0) * shares[h])
+        evicted += [a for a in resp.control(step, {}) if a.action == "evict"]
+    assert evicted and evicted[0].detail["host"] == 1
+    assert plan.hosts == [0, 2]
+    assert set(stage_plan.weights) == {0, 2}          # stage 1 gone
+    depths = stage_plan.depths()
+    assert sum(depths.values()) == 3                  # layers re-apportioned
+    assert 1 not in resp.stage_for_host
+
+
+def test_stage_plan_and_host_map_must_come_together():
+    from repro.dist.pipeline import StagePlan
+
+    det = StragglerDetector(2, window=2, threshold=1.3, publish=False)
+    plan = MicrobatchPlan.equal(range(2), 4)
+    with pytest.raises(ValueError):
+        StragglerResponse(det, plan, stage_plan=StagePlan.equal(range(2), 4))
+    with pytest.raises(ValueError):
+        StragglerResponse(det, plan, stage_for_host={0: 0})
+
+
+# ---------------------------------------------------------------------------
 # dist primitives backing the controller
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,395 @@
+"""The 1F1B pipeline training schedule: gradient equivalence against the
+non-pipelined reference (the Cactus-Worm criterion — adaptation is only
+trustworthy when the migrated computation is verified equivalent), uneven
+StagePlan boundaries through the slot mask, phase-split execution, the
+train-launcher pipeline path with timed phases, and the stage submesh hook."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist.meshutil import local_mesh, pipeline_submeshes
+from repro.dist.pipeline import (
+    PipelineStep,
+    StagePlan,
+    phase_ticks,
+    pipeline_step,
+)
+
+WIDTH = 8
+MICRO_BATCH = 2
+
+
+def _layer_fn(w, a):
+    return a + jnp.tanh(a @ w[0]) @ w[1] * 0.1
+
+
+def _loss_fn(y, t):
+    return jnp.mean((y - t) ** 2)
+
+
+def _make_inputs(n_micro, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    batch = n_micro * MICRO_BATCH
+    x = jax.random.normal(k1, (batch, WIDTH))
+    tgt = jax.random.normal(k2, (batch, WIDTH))
+    return x, tgt
+
+
+def _reference(layers, x, tgt, n_micro):
+    """Single-device, non-pipelined: scan all layers, mean loss over
+    microbatches — the ground truth the schedule must reproduce."""
+
+    def loss(layers):
+        def seq(a):
+            out, _ = jax.lax.scan(lambda acc, w: (_layer_fn(w, acc), None), a, layers)
+            return out
+
+        micro = x.reshape(n_micro, MICRO_BATCH, WIDTH)
+        tmicro = tgt.reshape(n_micro, MICRO_BATCH, WIDTH)
+        return jnp.mean(jax.vmap(lambda a, t: _loss_fn(seq(a), t))(micro, tmicro))
+
+    return jax.value_and_grad(loss)(layers)
+
+
+def _pod_mesh():
+    return local_mesh((1,), ("pod",))
+
+
+# ---------------------------------------------------------------------------
+# Gradient equivalence (tier-1: 1-device pod mesh, the schedule still runs
+# its full warmup/steady/cooldown tick clock; the forced-multi-device ring is
+# exercised in the multihost subprocess test below)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_stages", [1, 2, 4])
+def test_1f1b_grads_match_reference(n_stages):
+    mesh = _pod_mesh()
+    n_micro = 3
+    x, tgt = _make_inputs(n_micro, seed=n_stages)
+    layers = (
+        jax.random.normal(jax.random.PRNGKey(7 + n_stages), (n_stages, 2, WIDTH, WIDTH))
+        * 0.3
+    )
+    ref_loss, ref_grads = _reference(layers, x, tgt, n_micro)
+    loss, grads = pipeline_step(
+        _layer_fn, layers, x, tgt, loss_fn=_loss_fn, mesh=mesh, axis="pod",
+        n_micro=n_micro,
+    )
+    assert abs(float(loss - ref_loss)) < 1e-5
+    assert float(jnp.max(jnp.abs(grads - ref_grads))) < 1e-5
+
+
+@pytest.mark.parametrize("n_micro", [1, 2, 5])
+def test_1f1b_uneven_microbatch_counts(n_micro):
+    """The schedule cannot assume n_micro is a multiple of (or even exceeds)
+    the stage count: every count must produce reference gradients."""
+    mesh = _pod_mesh()
+    x, tgt = _make_inputs(n_micro, seed=n_micro)
+    layers = jax.random.normal(jax.random.PRNGKey(3), (2, 2, WIDTH, WIDTH)) * 0.3
+    ref_loss, ref_grads = _reference(layers, x, tgt, n_micro)
+    loss, grads = pipeline_step(
+        _layer_fn, layers, x, tgt, loss_fn=_loss_fn, mesh=mesh, axis="pod",
+        n_micro=n_micro,
+    )
+    assert abs(float(loss - ref_loss)) < 1e-5
+    assert float(jnp.max(jnp.abs(grads - ref_grads))) < 1e-5
+
+
+def test_1f1b_uneven_stage_boundaries_via_stageplan_mask():
+    """A restaged (unequal-depth) StagePlan packs into padded slots + mask;
+    the masked pipeline must still produce the flat-stack reference grads."""
+    mesh = _pod_mesh()
+    n_micro = 3
+    x, tgt = _make_inputs(n_micro, seed=11)
+    plan = StagePlan(n_layers=5, weights={0: 2.0, 1: 1.0})
+    assert plan.depths() == {0: 3, 1: 2}  # deliberately unequal
+    layers = jax.random.normal(jax.random.PRNGKey(5), (5, 2, WIDTH, WIDTH)) * 0.3
+    packed, mask = plan.pack(layers)
+    assert packed.shape[0] == plan.n_stages * plan.max_depth()
+    assert jnp.allclose(plan.unpack(packed), layers)
+
+    ref_loss, ref_grads = _reference(layers, x, tgt, n_micro)
+    loss, packed_grads = pipeline_step(
+        _layer_fn, packed, x, tgt, loss_fn=_loss_fn, mesh=mesh, axis="pod",
+        n_micro=n_micro, stage_mask=mask,
+    )
+    grads = plan.unpack(packed_grads)
+    assert abs(float(loss - ref_loss)) < 1e-5
+    assert float(jnp.max(jnp.abs(grads - ref_grads))) < 1e-5
+    # padding slots are identity layers: exactly zero gradient
+    pad_rows = packed_grads[~mask]
+    assert float(jnp.max(jnp.abs(pad_rows))) == 0.0
+
+
+def test_phased_execution_matches_fused_and_times_phases():
+    """warmup/steady/cooldown as three synchronized segments must be
+    numerically identical to the fused dispatch, and the phase callback must
+    see each non-empty phase exactly once per step."""
+    mesh = _pod_mesh()
+    n_micro = 4
+    x, tgt = _make_inputs(n_micro, seed=2)
+    layers = jax.random.normal(jax.random.PRNGKey(9), (2, 2, WIDTH, WIDTH)) * 0.3
+
+    fused_loss, fused_grads = pipeline_step(
+        _layer_fn, layers, x, tgt, loss_fn=_loss_fn, mesh=mesh, axis="pod",
+        n_micro=n_micro,
+    )
+
+    seen = []
+
+    class _Phase:
+        def __init__(self, name):
+            self.name = name
+
+        def __enter__(self):
+            seen.append(self.name)
+
+        def __exit__(self, *exc):
+            return False
+
+    step = PipelineStep(
+        _layer_fn, _loss_fn, mesh=mesh, axis="pod", n_micro=n_micro,
+        phase_cb=_Phase,
+    )
+    loss, grads = step(layers, x, tgt)
+    expected = [
+        name for name, (t0, t1) in phase_ticks(n_micro, 1).items() if t1 > t0
+    ]
+    assert seen == expected
+    assert float(jnp.abs(loss - fused_loss)) < 1e-6
+    assert float(jnp.max(jnp.abs(grads - fused_grads))) < 1e-6
+
+
+def test_1f1b_integer_targets():
+    """Regression: loss_fn validation must use the targets' real dtype — an
+    int-target classification-style loss is legitimate."""
+    mesh = _pod_mesh()
+    n_micro = 2
+    x, _ = _make_inputs(n_micro, seed=21)
+    tgt = jax.random.randint(
+        jax.random.PRNGKey(4), (n_micro * MICRO_BATCH,), 0, WIDTH
+    )
+    layers = jax.random.normal(jax.random.PRNGKey(6), (2, 2, WIDTH, WIDTH)) * 0.3
+
+    def nll(y, t):
+        return -jnp.mean(
+            jnp.take_along_axis(jax.nn.log_softmax(y), t[:, None], axis=-1)
+        )
+
+    def ref(ls):
+        def seq(a):
+            out, _ = jax.lax.scan(lambda acc, w: (_layer_fn(w, acc), None), a, ls)
+            return out
+
+        micro = x.reshape(n_micro, MICRO_BATCH, WIDTH)
+        tmicro = tgt.reshape(n_micro, MICRO_BATCH)
+        return jnp.mean(jax.vmap(lambda a, t: nll(seq(a), t))(micro, tmicro))
+
+    ref_loss, ref_grads = jax.value_and_grad(ref)(layers)
+    loss, grads = pipeline_step(
+        _layer_fn, layers, x, tgt, loss_fn=nll, mesh=mesh, axis="pod",
+        n_micro=n_micro,
+    )
+    assert abs(float(loss - ref_loss)) < 1e-5
+    assert float(jnp.max(jnp.abs(grads - ref_grads))) < 1e-5
+
+
+def test_phase_ticks_partition_the_schedule():
+    for n_micro in (1, 2, 5, 8):
+        for axis_size in (1, 2, 4):
+            ranges = phase_ticks(n_micro, axis_size)
+            assert ranges["warmup"][0] == 0
+            assert ranges["warmup"][1] == ranges["steady"][0]
+            assert ranges["steady"][1] == ranges["cooldown"][0]
+            assert ranges["cooldown"][1] == n_micro + 2 * axis_size - 1
+
+
+def test_pipeline_step_validation():
+    mesh = _pod_mesh()
+    layers = jnp.zeros((2, 2, WIDTH, WIDTH))
+    x = jnp.zeros((4, WIDTH))
+    with pytest.raises(ValueError):  # batch not divisible by n_micro
+        pipeline_step(_layer_fn, layers, x, x, loss_fn=_loss_fn, mesh=mesh,
+                      axis="pod", n_micro=3)
+    with pytest.raises(ValueError):  # bad mask shape
+        pipeline_step(_layer_fn, layers, x, x, loss_fn=_loss_fn, mesh=mesh,
+                      axis="pod", n_micro=2, stage_mask=jnp.ones((3,), bool))
+    with pytest.raises(ValueError):  # shape-changing layer_fn
+        pipeline_step(lambda w, a: a[..., :4], layers, x, x, loss_fn=_loss_fn,
+                      mesh=mesh, axis="pod", n_micro=2)
+
+
+# ---------------------------------------------------------------------------
+# StagePlan semantics
+# ---------------------------------------------------------------------------
+
+
+def test_stage_plan_validation_and_depths():
+    plan = StagePlan.equal(range(4), 12)
+    assert plan.depths() == {0: 3, 1: 3, 2: 3, 3: 3}
+    plan.set_weight(2, 0.5)
+    depths = plan.depths()
+    assert sum(depths.values()) == 12 and depths[2] < 3
+    assert min(depths.values()) >= 1
+    bounds = plan.boundaries()
+    # contiguous, ordered, covering [0, n_layers)
+    cursor = 0
+    for stage in plan.stages:
+        start, stop = bounds[stage]
+        assert start == cursor and stop - start == depths[stage]
+        cursor = stop
+    assert cursor == 12
+    with pytest.raises(ValueError):
+        plan.set_weight(9, 1.0)
+    with pytest.raises(ValueError):
+        plan.set_weight(0, 0.0)
+    with pytest.raises(ValueError):
+        StagePlan.equal(range(5), 4)  # fewer layers than stages
+    with pytest.raises(ValueError):
+        StagePlan(n_layers=4, weights={})
+
+
+def test_stage_plan_pack_rejects_wrong_layer_count():
+    plan = StagePlan.equal(range(2), 4)
+    with pytest.raises(ValueError):
+        plan.pack(jnp.zeros((3, 2)))
+    with pytest.raises(ValueError):
+        plan.unpack(jnp.zeros((3, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Mesh hook
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_submeshes_on_local_mesh():
+    mesh = _pod_mesh()
+    subs = pipeline_submeshes(mesh, "pod")
+    assert len(subs) == 1 and int(subs[0].shape["pod"]) == 1
+    grid = local_mesh((1, 1), ("pod", "model"))
+    subs = pipeline_submeshes(grid, "pod")
+    assert len(subs) == 1
+    assert tuple(subs[0].axis_names) == ("model",)
+    with pytest.raises(ValueError):
+        pipeline_submeshes(mesh, "nope")
+
+
+# ---------------------------------------------------------------------------
+# The train-launcher pipeline path (1F1B over the pod axis, timed phases)
+# ---------------------------------------------------------------------------
+
+
+def test_train_pipeline_path_times_phases_and_learns():
+    from repro.core.timers import TimerDB
+    from repro.launch.train import TrainSettings, run_training
+    from repro.timing import TimingSession
+
+    settings = TrainSettings(
+        steps=6, global_batch=8, seq_len=16, ckpt_dir=None, ckpt_mode="off",
+        report_every=0, pipeline_stages=1, pipeline_layers=4,
+        pipeline_micro=4, pipeline_width=16,
+    )
+    sess = TimingSession(TimerDB())
+    summary = run_training(settings, session=sess)
+    assert summary["iterations"] == 6
+    loss = summary["final_metrics"]["loss"]
+    assert loss == loss and loss >= 0.0  # finite
+    pipe = summary["pipeline"]
+    assert pipe["n_stages"] == 1 and pipe["depths"] == {0: 4}
+    # every schedule phase was really dispatched and timed as a scope
+    for phase in ("warmup", "steady", "cooldown"):
+        timer = sess.db.get(f"train/pipeline/{phase}")
+        assert timer.count == settings.steps
+        assert pipe["phase_seconds"][phase] > 0.0
+    # and the phase scopes appear in the hierarchical profile
+    names = set()
+
+    def walk(rows):
+        for r in rows:
+            names.add(r["timer"])
+            walk(r.get("children", []))
+
+    walk(summary["timer_tree"])
+    assert {"train/pipeline/warmup", "train/pipeline/steady",
+            "train/pipeline/cooldown"} <= names
+
+
+# ---------------------------------------------------------------------------
+# Real multi-device ring (forced 4-device topology, nightly tier)
+# ---------------------------------------------------------------------------
+
+MULTIDEVICE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import jax.numpy as jnp
+
+from repro.dist.meshutil import local_mesh, pipeline_submeshes
+from repro.dist.pipeline import StagePlan, pipeline_step
+
+mesh = local_mesh((4,), ("pod",))
+assert int(mesh.shape["pod"]) == 4
+
+WIDTH, MB, M = 8, 3, 6
+k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+layers = jax.random.normal(k1, (8, 2, WIDTH, WIDTH)) * 0.3
+x = jax.random.normal(k2, (M * MB, WIDTH))
+tgt = jax.random.normal(k3, (M * MB, WIDTH))
+
+layer_fn = lambda w, a: a + jnp.tanh(a @ w[0]) @ w[1] * 0.1
+loss_fn = lambda y, t: jnp.mean((y - t) ** 2)
+
+def ref(ls):
+    def seq(a):
+        out, _ = jax.lax.scan(lambda acc, w: (layer_fn(w, acc), None), a, ls)
+        return out
+    micro = x.reshape(M, MB, WIDTH)
+    tm = tgt.reshape(M, MB, WIDTH)
+    return jnp.mean(jax.vmap(lambda a, t: loss_fn(seq(a), t))(micro, tm))
+
+ref_loss, ref_grads = jax.value_and_grad(ref)(layers)
+loss, grads = pipeline_step(layer_fn, layers, x, tgt, loss_fn=loss_fn,
+                            mesh=mesh, axis="pod", n_micro=M)
+assert abs(float(loss - ref_loss)) < 1e-5, (float(loss), float(ref_loss))
+gd = float(jnp.max(jnp.abs(grads - ref_grads)))
+assert gd < 1e-5, gd
+
+# uneven restaged boundaries across the real 4-rank ring
+plan = StagePlan(n_layers=6, weights={0: 2.0, 1: 1.0, 2: 1.0, 3: 1.0})
+real = jax.random.normal(k1, (6, 2, WIDTH, WIDTH)) * 0.3
+packed, mask = plan.pack(real)
+ref_loss, ref_grads = jax.value_and_grad(ref)(real)
+loss, pg = pipeline_step(layer_fn, packed, x, tgt, loss_fn=loss_fn,
+                         mesh=mesh, axis="pod", n_micro=M, stage_mask=mask)
+grads = plan.unpack(pg)
+assert abs(float(loss - ref_loss)) < 1e-5
+assert float(jnp.max(jnp.abs(grads - ref_grads))) < 1e-5
+
+subs = pipeline_submeshes(mesh, "pod")
+assert len(subs) == 4
+assert [d.id for s in subs for d in s.devices.flat] == [0, 1, 2, 3]
+print("PIPELINE_MULTIDEVICE_OK")
+"""
+
+
+@pytest.mark.multihost
+@pytest.mark.slow
+def test_1f1b_on_real_devices_subprocess():
+    """Gradient equivalence with real ppermute rings on a forced 4-device
+    topology (even and restaged-uneven stage splits), plus the per-stage
+    submesh hook."""
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", MULTIDEVICE_SCRIPT],
+        capture_output=True, text=True, timeout=600, env=env, cwd=repo,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "PIPELINE_MULTIDEVICE_OK" in proc.stdout

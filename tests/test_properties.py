@@ -1,0 +1,202 @@
+"""Property-based tests for the invariants the adaptation stack relies on.
+
+Hypothesis comes through :mod:`repro.testing` (skip-based fallback when the
+dev extra is absent), so this module stays collectable everywhere; each
+property also has a deterministic example-based companion so minimal
+environments still exercise the invariant once.
+
+Pinned invariants:
+
+* ``MicrobatchPlan.shares`` / ``StagePlan.depths`` (both built on the shared
+  largest-remainder apportionment): shares sum to the total, every key gets
+  at least one unit, the non-reserved part satisfies the quota rule
+  (``1 + floor(q) <= share <= 1 + ceil(q)``), and a bounded weight
+  perturbation moves any share by at most its quota drift plus the rounding
+  band — the stability property that keeps the straggler response from
+  thrashing assignments over measurement noise.
+* ``TimerDB.tree()``: ``sum(child.inclusive) <= parent.inclusive`` on every
+  node, for arbitrary (randomized) well-nested scope sequences — the
+  SPACE-Timers guarantee that hierarchical timing survives restructuring of
+  the call tree.
+"""
+
+import math
+
+from repro.core.timers import TimerDB
+from repro.dist.pipeline import MicrobatchPlan, StagePlan
+from repro.testing import given, settings, strategies as st
+
+# -- strategies (inert placeholders when hypothesis is absent) ---------------
+
+_WEIGHTS = st.dictionaries(
+    st.integers(min_value=0, max_value=15),
+    st.floats(min_value=0.01, max_value=100.0,
+              allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=8,
+)
+_EXTRA = st.integers(min_value=0, max_value=48)
+_FACTOR = st.floats(min_value=0.5, max_value=2.0,
+                    allow_nan=False, allow_infinity=False)
+_NESTING = st.lists(
+    st.sampled_from(["alpha", "beta", "gamma", "pop", "pop"]),
+    min_size=0, max_size=40,
+)
+
+
+# -- shared checkers ---------------------------------------------------------
+
+def _quotas(weights, total):
+    extra = total - len(weights)
+    total_w = sum(weights.values())
+    return {k: extra * w / total_w for k, w in weights.items()}
+
+
+def check_apportionment(weights, total, shares):
+    assert sum(shares.values()) == total
+    assert set(shares) == set(weights)
+    assert min(shares.values()) >= 1
+    for k, q in _quotas(weights, total).items():
+        # quota rule on the non-reserved part (float tolerance on the bounds)
+        assert 1 + math.floor(q) - 1e-9 <= shares[k] <= 1 + math.ceil(q) + 1e-9
+
+
+def check_perturbation_stability(weights, total, key, factor, make_shares):
+    before = make_shares(weights)
+    q_before = _quotas(weights, total)
+    perturbed = dict(weights)
+    perturbed[key] = perturbed[key] * factor
+    after = make_shares(perturbed)
+    q_after = _quotas(perturbed, total)
+    assert sum(after.values()) == total and min(after.values()) >= 1
+    for k in weights:
+        drift = abs(q_after[k] - q_before[k])
+        # each share sits within the rounding band of its quota, so a weight
+        # perturbation can move it by at most the quota drift + the band
+        assert abs(after[k] - before[k]) <= drift + 2.0 + 1e-9
+
+
+def check_tree_invariant(db, eps=1e-9):
+    """sum(child.inclusive) <= parent.inclusive on every node of the forest."""
+    todo = list(db.tree())
+    checked = 0
+    while todo:
+        node = todo.pop()
+        child_sum = sum(c.inclusive for c in node.children)
+        assert child_sum <= node.inclusive + eps, (
+            f"{node.name}: children {child_sum} > inclusive {node.inclusive}"
+        )
+        todo.extend(node.children)
+        checked += 1
+    return checked
+
+
+def run_nesting_program(ops):
+    """Interpret push/pop ops as well-nested scopes on a fresh TimerDB."""
+    db = TimerDB()
+    stack = []
+    for op in ops:
+        if op == "pop":
+            if stack:
+                stack.pop().__exit__(None, None, None)
+        else:
+            cm = db.scope(op)
+            cm.__enter__()
+            stack.append(cm)
+    while stack:
+        stack.pop().__exit__(None, None, None)
+    return db
+
+
+# -- MicrobatchPlan ----------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(weights=_WEIGHTS, extra=_EXTRA)
+def test_microbatch_shares_properties(weights, extra):
+    total = len(weights) + extra
+    plan = MicrobatchPlan(n_micro=total, weights=dict(weights))
+    check_apportionment(weights, total, plan.shares())
+
+
+@settings(max_examples=200, deadline=None)
+@given(weights=_WEIGHTS, extra=_EXTRA, factor=_FACTOR)
+def test_microbatch_shares_stable_under_weight_perturbation(
+    weights, extra, factor
+):
+    total = len(weights) + extra
+    key = sorted(weights)[0]
+    check_perturbation_stability(
+        weights, total, key, factor,
+        lambda w: MicrobatchPlan(n_micro=total, weights=dict(w)).shares(),
+    )
+
+
+def test_microbatch_shares_examples():
+    weights = {0: 1.0, 1: 2.5, 2: 0.3, 3: 1.0}
+    check_apportionment(weights, 17, MicrobatchPlan(17, dict(weights)).shares())
+    check_perturbation_stability(
+        weights, 17, 2, 1.9,
+        lambda w: MicrobatchPlan(17, dict(w)).shares(),
+    )
+
+
+# -- StagePlan ---------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(weights=_WEIGHTS, extra=_EXTRA)
+def test_stage_depths_properties(weights, extra):
+    total = len(weights) + extra
+    plan = StagePlan(n_layers=total, weights=dict(weights))
+    check_apportionment(weights, total, plan.depths())
+    # boundaries are the exact prefix partition of the depths
+    depths = plan.depths()
+    cursor = 0
+    for stage in plan.stages:
+        start, stop = plan.boundaries()[stage]
+        assert (start, stop) == (cursor, cursor + depths[stage])
+        cursor = stop
+    assert cursor == total
+
+
+@settings(max_examples=200, deadline=None)
+@given(weights=_WEIGHTS, extra=_EXTRA, factor=_FACTOR)
+def test_stage_depths_stable_under_weight_perturbation(weights, extra, factor):
+    total = len(weights) + extra
+    key = sorted(weights)[-1]
+    check_perturbation_stability(
+        weights, total, key, factor,
+        lambda w: StagePlan(n_layers=total, weights=dict(w)).depths(),
+    )
+
+
+def test_stage_depths_examples():
+    weights = {0: 3.0, 1: 1.0, 2: 1.0}
+    check_apportionment(weights, 11, StagePlan(11, dict(weights)).depths())
+    check_perturbation_stability(
+        weights, 11, 0, 0.5,
+        lambda w: StagePlan(11, dict(w)).depths(),
+    )
+
+
+# -- TimerDB.tree ------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_NESTING)
+def test_tree_child_inclusive_bounded_by_parent(ops):
+    db = run_nesting_program(ops)
+    check_tree_invariant(db)
+
+
+def test_tree_invariant_examples():
+    # shared scope re-entered under two parents, with sub-scopes, unbalanced
+    # pops, and a deep chain — the shapes PR 4's attribution splits on
+    programs = [
+        ["alpha", "beta", "pop", "beta", "gamma", "pop", "pop", "pop"],
+        ["alpha", "pop", "alpha", "alpha", "alpha", "pop"],
+        ["alpha", "beta", "gamma", "alpha", "beta", "gamma"],
+        ["pop", "alpha", "pop", "pop", "beta"],
+    ]
+    total = 0
+    for ops in programs:
+        db = run_nesting_program(ops)
+        total += check_tree_invariant(db)
+    assert total > 0  # the checker actually visited nodes

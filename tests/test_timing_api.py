@@ -389,6 +389,50 @@ def test_session_scope_sugar_and_counter():
         assert ts.tree_rows()[0]["timer"] == "work"
 
 
+def test_scoped_counter_renders_in_reports_without_manual_clock():
+    """Regression (PR-4 follow-up): ``timing.counter("serve/tokens")`` was
+    write-only — bumpable, but invisible to every timer window and report —
+    until a CounterClock was registered by hand.  Resolving a scoped counter
+    now auto-exports its channel through the session CounterClock."""
+    from repro.core.report import format_report
+
+    with timing.session() as ts:
+        with timing.scope("serve"):
+            bump = timing.counter("tokens")
+        # a window *around* the bumps captures the channel delta
+        with timing.scope("serve"):
+            bump(5.0)
+            bump(7.0)
+        flat = ts.db.get("serve").read_flat()
+        assert flat.get("serve/tokens") == 12.0
+        text = ts.report(channels=("walltime", "serve/tokens"))
+        assert "serve/tokens" in text
+    # the channel stays readable after the session exits (reports are often
+    # formatted post-run), because the session clock is never auto-dropped
+    post = format_report(ts.db, channels=("walltime", "serve/tokens"))
+    assert "serve/tokens" in post
+    # later windows keep exporting it
+    with ts.db.scope("serve"):
+        bump(1.0)
+    assert ts.db.get("serve").read_flat().get("serve/tokens") == 13.0
+
+
+def test_counter_never_double_exports_an_existing_channel():
+    """An unscoped non-absolute counter whose name matches a channel some
+    registered clock already exports (e.g. the io clock's ``io_bytes``) must
+    not be re-exported through the session clock — a double export would
+    collision-rename the established plain channel for every reader."""
+    bump = timing.counter("io_bytes")  # no scope active: name stays io_bytes
+    db = timer_db()
+    h = db.create("window")
+    db.start(h)
+    bump(64.0)
+    db.stop(h)
+    flat = db.get(h).read_flat()
+    assert flat.get("io_bytes") == 64.0          # plain name, un-renamed
+    assert "session_counters.io_bytes" not in flat
+
+
 # ---------------------------------------------------------------------------
 # deprecation shims (the old sugar keeps working, loudly)
 # ---------------------------------------------------------------------------
