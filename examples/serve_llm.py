@@ -1,5 +1,5 @@
-"""Serving example (deliverable b): batched requests through the ServingEngine
-with the timing infrastructure and latency-steered batch size (paper §3.3).
+"""Serving example (deliverable b): continuous batching through ServeSession
+with every steering/shed decision on the adapt control plane (paper §3.3).
 
     PYTHONPATH=src python examples/serve_llm.py --requests 24 --target-ms 50
 """
@@ -18,7 +18,7 @@ import numpy as np  # noqa: E402
 from repro import timing  # noqa: E402
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.models import model as M  # noqa: E402
-from repro.serving import Request, ServingEngine  # noqa: E402
+from repro.serving import Request, ServeSession, ServiceLevel  # noqa: E402
 
 
 def main(argv=None) -> int:
@@ -27,31 +27,38 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--target-ms", type=float, default=None,
-                    help="decode latency target; enables self-steering")
+                    help="decode-step latency target; enables ADAPT/serving steering")
+    ap.add_argument("--max-queue-delay", type=float, default=None,
+                    help="shed queued requests past this estimated wait (s)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    sess = timing.session()
-    engine = ServingEngine(
-        cfg, params, max_batch=args.max_batch,
-        max_seq=args.prompt_len + args.max_new + 8,
-        target_decode_ms=args.target_ms,
-        session=sess,
-    )
-    rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        engine.submit(Request(
-            rid, prompt=list(rng.integers(0, cfg.vocab_size, args.prompt_len)),
-            max_new_tokens=args.max_new,
-        ))
-    engine.run()
-    print(json.dumps(engine.stats(), indent=1))
-    print(sess.report())
-    print()
-    print(sess.tree_report())
+    with timing.session() as sess:
+        engine = ServeSession(
+            cfg, params,
+            session=sess,
+            n_slots=args.slots,
+            max_seq=args.prompt_len + args.max_new + 8,
+            slo=ServiceLevel(target_decode_ms=args.target_ms,
+                             max_queue_delay_s=args.max_queue_delay),
+        )
+        rng = np.random.default_rng(0)
+        handles = [
+            engine.submit(Request(
+                rid, prompt=list(rng.integers(0, cfg.vocab_size, args.prompt_len)),
+                max_new_tokens=args.max_new,
+            ))
+            for rid in range(args.requests)
+        ]
+        engine.run_until_idle()
+        print(f"done: {sum(h.done for h in handles)}/{len(handles)} handles resolved")
+        print(json.dumps(engine.stats(), indent=1))
+        print(sess.report())
+        print()
+        print(sess.tree_report())
     return 0
 
 

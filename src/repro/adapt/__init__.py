@@ -15,15 +15,18 @@ The layering:
 ``ControlLoop`` polls each registered :class:`Controller`'s timer-DB channels
 once per step and records every decision as an ``ADAPT/`` row in the decision
 log and the Fig.-2 report.  Shipped controllers: :class:`CheckpointControl`
-(AdaptCheck admission, paper Sec. 3.2) and :class:`StragglerResponse`
+(AdaptCheck admission, paper Sec. 3.2), :class:`StragglerResponse`
 (rebalance microbatch shares, evict persistent stragglers, trigger mesh
-rebuilds).  :class:`SimulatedFleet` packages an n-host, CPU-only simulation of
-the whole loop for tests and demos.
+rebuilds), and :class:`ServingControl` (serving batch-width steering + SLO
+load-shedding — training and serving adaptation share this one loop).
+:class:`SimulatedFleet` packages an n-host, CPU-only simulation of the whole
+loop for tests and demos.
 """
 
 from .checkpoint import CheckpointControl
 from .controller import ControlAction, Controller, ControlLoop, Measurement
 from .fleet import SimulatedFleet
+from .serving import ServingControl
 from .stragglers import StragglerResponse
 
 __all__ = [
@@ -32,6 +35,7 @@ __all__ = [
     "ControlLoop",
     "Measurement",
     "CheckpointControl",
+    "ServingControl",
     "StragglerResponse",
     "SimulatedFleet",
 ]

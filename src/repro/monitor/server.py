@@ -3,13 +3,18 @@ interface") — a stdlib HTTP server in a daemon thread serving the live timer
 database, steerable parameters, and run status.
 
 Endpoints:
-    /            HTML overview (Fig.-2-style timer table + scope tree)
+    /            HTML overview (Fig.-2-style timer table + scope tree + the
+                 serving queue/slot/shed rows when a serving engine is wired)
     /timers      JSON timer snapshot
     /tree        nested JSON timer forest (inclusive/exclusive seconds per
                  scope, children recursively — repro.timing tree view)
     /params      JSON steerable parameters; POST /params {"name":..,"value":..}
                  steers a parameter live (paper Sec. 5 steering)
     /status      JSON run status (iteration, loss, checkpoint stats)
+    /serving     JSON serving view: engine-level stats (queue depth, slot
+                 occupancy, shed count, KV utilization) + per-request rows —
+                 wire with ``serving_fn=engine.stats`` or the richer
+                 ``serving_payload(engine)``
 
 Also provides :class:`StatusWriter`, which atomically writes the same payload to
 a JSON file for clusters where an open port is not possible.
@@ -29,7 +34,30 @@ from ..core.report import format_report, format_tree_report, tree_rows
 from ..core.timers import TimerDB, timer_db
 
 
-__all__ = ["MonitorServer", "StatusWriter"]
+__all__ = ["MonitorServer", "StatusWriter", "serving_payload"]
+
+
+def serving_payload(engine) -> Callable[[], dict[str, Any]]:
+    """Build a ``serving_fn`` over a :class:`repro.serving.ServeSession`:
+    engine-level stats plus the per-request rows, refreshed per scrape."""
+
+    def payload() -> dict[str, Any]:
+        return {"engine": engine.stats(), "requests": engine.request_stats()}
+
+    return payload
+
+
+def _serving_table(payload: dict[str, Any]) -> str:
+    """Render the serving stats as report-style rows for the HTML overview."""
+    engine = payload.get("engine", payload)
+    width = max([len(k) for k in engine] + [len("serving row")]) + 2
+    lines = ["Serving", "=" * (width + 14), f"{'serving row'.ljust(width)} {'value':>12}"]
+    lines.append("-" * (width + 14))
+    for key in sorted(engine):
+        value = engine[key]
+        shown = f"{value:12.4f}" if isinstance(value, float) else f"{value!s:>12}"
+        lines.append(f"{key.ljust(width)} {shown}")
+    return "\n".join(lines)
 
 
 class StatusWriter:
@@ -57,10 +85,12 @@ class MonitorServer:
         db: TimerDB | None = None,
         params: ParamRegistry | None = None,
         status_fn: Callable[[], dict[str, Any]] | None = None,
+        serving_fn: Callable[[], dict[str, Any]] | None = None,
     ) -> None:
         self._db = db if db is not None else timer_db()
         self._params = params if params is not None else param_registry()
         self._status_fn = status_fn or (lambda: {})
+        self._serving_fn = serving_fn
         self._httpd: ThreadingHTTPServer | None = None
         self._thread: threading.Thread | None = None
         self._port = port
@@ -94,12 +124,18 @@ class MonitorServer:
                     self._send(200, json.dumps(monitor._params.describe()).encode())
                 elif self.path.startswith("/status"):
                     self._send(200, json.dumps(monitor._status_fn()).encode())
+                elif self.path.startswith("/serving"):
+                    if monitor._serving_fn is None:
+                        self._send(404, b'{"error": "no serving engine wired"}')
+                    else:
+                        self._send(200, json.dumps(monitor._serving_fn()).encode())
                 elif self.path == "/" or self.path.startswith("/index"):
+                    sections = [format_report(monitor._db), format_tree_report(monitor._db)]
+                    if monitor._serving_fn is not None:
+                        sections.append(_serving_table(monitor._serving_fn()))
                     body = (
                         "<html><body><pre>"
-                        + format_report(monitor._db)
-                        + "\n\n"
-                        + format_tree_report(monitor._db)
+                        + "\n\n".join(sections)
                         + "</pre></body></html>"
                     )
                     self._send(200, body.encode(), "text/html")

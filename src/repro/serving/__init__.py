@@ -1,3 +1,36 @@
-from .engine import Request, ServingEngine
+"""``repro.serving`` — the continuous-batching inference engine.
 
-__all__ = ["Request", "ServingEngine"]
+The supported surface (frozen by ``tests/test_api_surface.py``):
+
+* :class:`ServeSession` — persistent decode batch with per-slot state;
+  ``submit()`` returns a :class:`RequestHandle` (``.done`` / ``.result()``),
+  ``step()``/``run_until_idle()`` drive the engine, ``stats()`` is the
+  engine-level view and ``request_stats()`` / :class:`RequestResult` the
+  per-request one.  Construct with ``session=`` (a
+  :class:`repro.timing.TimingSession`) so measurements and the serving
+  controller land on that session's database and control loop.
+* :class:`Request` — the work item (prompt, ``max_new_tokens``, eos).
+* :class:`ServiceLevel` — latency/queueing objectives the
+  ``ADAPT/serving`` controller enforces.
+* :class:`KVCacheManager` — block-based cache accounting (admission bound +
+  utilization counters).
+
+:class:`ServingEngine` is the deprecated static-batch engine — exact old
+behavior behind a ``DeprecationWarning`` (ROADMAP deprecation policy); see
+the README "Serving" migration table.
+"""
+
+from ._legacy import ServingEngine
+from .engine import Request, RequestHandle, RequestResult, ServeSession
+from .kvcache import KVCacheManager
+from .slo import ServiceLevel
+
+__all__ = [
+    "KVCacheManager",
+    "Request",
+    "RequestHandle",
+    "RequestResult",
+    "ServeSession",
+    "ServiceLevel",
+    "ServingEngine",
+]

@@ -1,0 +1,190 @@
+"""Deprecated static-batch engine (the pre-continuous-batching API).
+
+:class:`ServingEngine` is the PR-4-era serving loop: admit up to ``max_batch``
+queued requests (left-padded to a common prompt length), one jitted prefill,
+lock-step decode until **every** request in the batch finishes, then the next
+batch — and a private halve/double rule steering ``serving.max_batch`` off
+the control plane.  It is kept byte-for-byte behavioral (modulo the admit-path
+crash fixes below) behind a ``DeprecationWarning`` per the ROADMAP
+deprecation policy: exact behavior + warning for >= 2 PRs before removal.
+New code uses :class:`repro.serving.ServeSession`, whose steering lives on
+the adapt control plane (``ADAPT/serving::*`` rows).
+
+Fixes folded in (covered by ``tests/test_serving.py``): ``submit`` now
+validates/truncates prompts that would overrun ``max_seq`` (previously a
+silent out-of-bounds cache scatter), and ``stats`` guards the percentile of
+degenerate completion lists.
+"""
+
+from __future__ import annotations
+
+import time
+import warnings
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.params import ParamRegistry, param_registry
+from ..core.timers import TimerDB, timer_db
+from ..models import model as M
+from ..models.config import ArchConfig
+from .engine import Request, _percentile, validate_request
+
+__all__ = ["ServingEngine"]
+
+
+class ServingEngine:
+    """Deprecated: use :class:`repro.serving.ServeSession` (continuous
+    batching on the adapt control plane).  See the README migration table."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        max_batch: int = 8,
+        max_seq: int = 256,
+        target_decode_ms: float | None = None,
+        db: TimerDB | None = None,
+        registry: ParamRegistry | None = None,
+        session=None,
+    ) -> None:
+        """``session`` (a :class:`repro.timing.TimingSession`) supplies the
+        timer database when given — the session-wired path; ``db`` remains the
+        explicit-database escape hatch, and the process default is used when
+        neither is passed."""
+        warnings.warn(
+            "ServingEngine is deprecated; use repro.serving.ServeSession "
+            "(continuous batching, steered on the adapt control plane)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.target_decode_ms = target_decode_ms
+        if session is not None and db is None:
+            db = session.db
+        self._db = db if db is not None else timer_db()
+        # phase scopes pre-resolved once (repro.timing hot path); names are
+        # real paths, so `serve` is the parent of the three phase timers
+        self._scope_serve = self._db.scope_handle("serve")
+        self._scope_admit = self._db.scope_handle("serve/admit")
+        self._scope_prefill = self._db.scope_handle("serve/prefill")
+        self._scope_decode = self._db.scope_handle("serve/decode")
+        self._registry = registry if registry is not None else param_registry()
+        self._registry.declare(
+            "serving.max_batch", max_batch, steerable=True,
+            doc="admitted batch size (self-steered from decode latency)",
+            validator=lambda v: isinstance(v, int) and v >= 1,
+        )
+        self._hard_max = max_batch
+        self.queue: deque[Request] = deque()
+        self.completed: list[Request] = []
+        self._decode_ms_history: list[float] = []
+
+        self._prefill = jax.jit(lambda p, b, c: M.prefill(cfg, p, b, c))
+        self._decode = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        n_prefix = self.cfg.n_vision_patches if self.cfg.family == "vlm" else 0
+        validate_request(req, self.max_seq, n_prefix)
+        req.admitted_at = time.monotonic()
+        self.queue.append(req)
+
+    @property
+    def max_batch(self) -> int:
+        return int(self._registry.get("serving.max_batch"))
+
+    # -- one engine iteration ------------------------------------------------
+    def step_batch(self) -> list[Request]:
+        """Admit → prefill → decode-to-completion for one batch."""
+        if not self.queue:
+            return []
+        with self._scope_serve:
+            return self._step_batch_scoped()
+
+    def _step_batch_scoped(self) -> list[Request]:
+        with self._scope_admit:
+            batch_reqs: list[Request] = []
+            while self.queue and len(batch_reqs) < self.max_batch:
+                batch_reqs.append(self.queue.popleft())
+            b = len(batch_reqs)
+            plen = max(len(r.prompt) for r in batch_reqs)
+            tokens = np.zeros((b, plen), np.int32)
+            for i, r in enumerate(batch_reqs):
+                tokens[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        with self._scope_prefill:
+            cache = M.init_cache(self.cfg, b, self.max_seq)
+            batch = {"tokens": jnp.asarray(tokens)}
+            if self.cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (b, self.cfg.n_vision_patches, self.cfg.d_model), jnp.bfloat16
+                )
+            if self.cfg.family == "encdec":
+                batch["src_frames"] = jnp.zeros((b, plen, self.cfg.d_model), jnp.bfloat16)
+            cache, logits = self._prefill(self.params, batch, cache)
+            logits = jax.block_until_ready(logits)
+        max_new = max(r.max_new_tokens for r in batch_reqs)
+        next_tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(jnp.int32)
+        done = np.zeros(b, bool)
+        n_decoded = 0
+        decode_before = self._scope_decode.seconds()
+        with self._scope_decode as decode_timer:
+            for step_i in range(max_new):
+                for i, r in enumerate(batch_reqs):
+                    if not done[i]:
+                        tok = int(next_tok[i])
+                        r.output.append(tok)
+                        if (r.eos_token is not None and tok == r.eos_token) or len(
+                            r.output
+                        ) >= r.max_new_tokens:
+                            done[i] = True
+                n_decoded += 1
+                if done.all() or step_i == max_new - 1:
+                    break
+                cache, logits = self._decode(self.params, cache, next_tok[:, None])
+                logits = jax.block_until_ready(logits)
+                next_tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(
+                    jnp.int32
+                )
+        decode_s = decode_timer.seconds() - decode_before
+        per_token_ms = 1e3 * decode_s / max(n_decoded, 1)
+        self._decode_ms_history.append(per_token_ms)
+        self._steer_batch_size(per_token_ms)
+        now = time.monotonic()
+        for r in batch_reqs:
+            r.finished_at = now
+            self.completed.append(r)
+        return batch_reqs
+
+    def run(self) -> list[Request]:
+        while self.queue:
+            self.step_batch()
+        return self.completed
+
+    # -- self-steering (the rule ServingControl replaced; kept for exact
+    # -- deprecated behavior until removal) ----------------------------------
+    def _steer_batch_size(self, per_token_ms: float) -> None:
+        if self.target_decode_ms is None:
+            return
+        current = self.max_batch
+        if per_token_ms > self.target_decode_ms and current > 1:
+            self._registry.set("serving.max_batch", max(current // 2, 1))
+        elif per_token_ms < 0.5 * self.target_decode_ms and current < self._hard_max:
+            self._registry.set("serving.max_batch", min(current * 2, self._hard_max))
+
+    def stats(self) -> dict[str, float]:
+        lat = [r.finished_at - r.admitted_at for r in self.completed]
+        return {
+            "completed": float(len(self.completed)),
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "p95_latency_s": _percentile(lat, 95),
+            "decode_ms_per_token_last": self._decode_ms_history[-1]
+            if self._decode_ms_history
+            else 0.0,
+            "max_batch": float(self.max_batch),
+        }

@@ -1,0 +1,111 @@
+"""Slot state and cache splicing — the in-flight half of continuous batching.
+
+The engine keeps ONE persistent decode cache of ``n_slots`` batch rows and
+never re-batches it: a newly admitted request is prefilled alone (exact, no
+cross-request padding) into a single-row cache and **spliced** into a free
+slot, while every other slot keeps decoding.  Splicing is a pure jitted
+scatter over the cache pytree: for each leaf, the batch axis (located by the
+leaf's logical axes from :func:`repro.models.model.cache_axes`) is rotated to
+the front, row ``slot`` is overwritten with the fresh row, and the axis is
+rotated back — XLA fuses the transposes into the scatter, and the compiled
+splice is shared by every admission because its shapes never change.
+
+Heterogeneous progress needs no masking machinery: the decode cache carries a
+per-row ``pos`` (see :func:`repro.models.model.decode_step` and
+``_attn_core_decode``, which rotate, scatter, and mask per element), so slots
+prefilled at different times simply decode at different positions in the same
+lock-step call.  Free slots decode garbage that is never read; their cache
+rows are fully overwritten by the next splice.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Callable
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ArchConfig
+
+__all__ = ["Slot", "make_cache_splicer"]
+
+
+def make_cache_splicer(
+    cfg: ArchConfig, n_slots: int, max_seq: int
+) -> Callable[[Any, Any, jax.Array], Any]:
+    """Build the jitted ``splice(dst_cache, src_cache, slot) -> dst_cache``.
+
+    ``dst_cache`` is the persistent ``n_slots``-row cache, ``src_cache`` a
+    freshly prefilled single-row cache of the same ``max_seq``; ``slot`` the
+    destination row index.  Works for every family because the batch axis is
+    found per leaf from the cache's logical-axes tree, not assumed positional.
+    """
+    axes = M.cache_axes(cfg, n_slots, max_seq)
+
+    def _splice(dst, src, slot):
+        leaves_d, treedef = jax.tree_util.tree_flatten(dst)
+        leaves_s = jax.tree_util.tree_leaves(src)
+        leaves_a = treedef.flatten_up_to(axes)
+        out = []
+        for d, s, ax in zip(leaves_d, leaves_s, leaves_a):
+            b = ax.index("batch")
+            d2 = jnp.moveaxis(d, b, 0)
+            s2 = jnp.moveaxis(s, b, 0)
+            out.append(jnp.moveaxis(d2.at[slot].set(s2[0]), 0, b))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return jax.jit(_splice)
+
+
+@dataclass
+class Slot:
+    """One row of the persistent decode batch.
+
+    A slot is *free* when ``request is None``; admission binds a request (and
+    its result-in-progress) to the slot, completion unbinds it.  ``generated``
+    counts emitted tokens (the prefill token included), so
+    ``generated == request.max_new_tokens`` is the length stop.
+    """
+
+    index: int
+    request: Any | None = None
+    handle: Any | None = None
+    generated: int = 0
+    blocks: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+    def bind(self, request, handle, blocks: int) -> None:
+        self.request = request
+        self.handle = handle
+        self.generated = 0
+        self.blocks = blocks
+
+    def release(self) -> None:
+        self.request = None
+        self.handle = None
+        self.generated = 0
+        self.blocks = 0
+
+
+@dataclass
+class SlotStats:
+    """Aggregate view over the slot array (engine-level ``stats()`` rows)."""
+
+    n_slots: int
+    active: int
+    free: int
+    occupancy: float = field(init=False)
+
+    def __post_init__(self) -> None:
+        self.occupancy = self.active / self.n_slots if self.n_slots else 0.0
+
+
+def slot_stats(slots: list[Slot]) -> SlotStats:
+    active = sum(1 for s in slots if not s.free)
+    return SlotStats(n_slots=len(slots), active=active, free=len(slots) - active)

@@ -1,17 +1,33 @@
-"""Batched serving engine with timing-driven adaptive batching.
+"""Continuous-batching serving engine — the supported ``repro.serving`` API.
 
-Static-batch scheduler: admit up to ``max_batch`` queued requests (padded to a
-common prompt length), one jitted prefill, then lock-step decode until every
-request finishes.  Every phase is a hierarchical ``repro.timing`` scope — a
-``serve`` parent enclosing ``serve/admit``, ``serve/prefill``,
-``serve/decode`` (pre-resolved handles; the hot path never resolves names) —
-so the tree report shows batch overhead as ``serve`` exclusive time.  The
-paper's self-adaptation loop rides on the measurements: if the measured
-per-token decode latency exceeds ``target_decode_ms``, the steerable
-``serving.max_batch`` parameter is lowered (halved); if comfortably below, it
-is raised, bounded by the configured maximum.  See §3.3 of the paper
-("future scenarios": output/analysis frequency chosen dynamically from
-performance measurements).
+:class:`ServeSession` keeps ONE persistent decode batch alive: each of its
+``n_slots`` cache rows independently carries a request at its own sequence
+position, newly admitted requests are prefilled *exactly* (alone, no
+cross-request padding) and spliced into free rows while every other row keeps
+decoding, and finished rows free their cache blocks for the next admission —
+no request ever waits for a batch to drain.  The measured phases are
+hierarchical ``repro.timing`` scopes (``serve`` enclosing ``serve/admit``,
+``serve/prefill``, ``serve/decode``) and the bookkeeping events are lock-free
+counters (``serve/queued|admitted|shed|tokens``), which is what puts serving
+on the paper's measure→decide→act loop: a
+:class:`~repro.adapt.serving.ServingControl` registered on the session's
+:class:`~repro.adapt.controller.ControlLoop` reads those channels and steers
+admission width (the steerable ``serving.max_active`` parameter), sheds load
+against the :class:`~repro.serving.slo.ServiceLevel`, and records every
+decision as an ``ADAPT/serving::*`` row — serving adaptation shares the one
+control plane with training (PR-3 follow-up closed; no private steering rule
+remains on this path).
+
+Admission is capacity-checked three ways before a request leaves the queue: a
+free slot, the ``serving.max_active`` width, and a
+:class:`~repro.serving.kvcache.KVCacheManager` block reservation sized to the
+request's worst case — so decode can never run out of cache mid-stream.
+
+Correctness invariant (pinned by ``tests/test_serve_consistency.py``): greedy
+outputs are token-identical to running each request alone through
+``prefill``/``decode_step``, across mid-stream admissions — per-request
+prefill is exact, and the decode cache's per-row ``pos`` lets rows at
+different positions share one lock-step decode.
 """
 
 from __future__ import annotations
@@ -28,160 +44,495 @@ from ..core.params import ParamRegistry, param_registry
 from ..core.timers import TimerDB, timer_db
 from ..models import model as M
 from ..models.config import ArchConfig
+from .batching import Slot, make_cache_splicer, slot_stats
+from .kvcache import KVCacheManager
+from .slo import ServiceLevel
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "RequestHandle", "RequestResult", "ServeSession"]
 
 
 @dataclass
 class Request:
+    """One generation request: prompt tokens in, up to ``max_new_tokens`` out.
+
+    The last three fields are legacy state filled by the deprecated
+    :class:`~repro.serving._legacy.ServingEngine`; :class:`ServeSession`
+    reports through :class:`RequestResult` instead and leaves them untouched.
+    """
+
     rid: int
     prompt: list[int]
     max_new_tokens: int = 16
     eos_token: int | None = None
-    # filled by the engine
+    # filled by the deprecated static-batch engine only
     output: list[int] = field(default_factory=list)
     admitted_at: float = 0.0
     finished_at: float = 0.0
 
 
-class ServingEngine:
+@dataclass
+class RequestResult:
+    """Per-request view of a finished (or shed) request.
+
+    ``status`` is ``"completed"`` or ``"shed"``; timestamps are
+    ``time.monotonic`` values (``admitted_at``/``first_token_at`` are ``None``
+    for shed requests, which never reached a slot).  ``truncated`` counts
+    prompt tokens dropped at ``submit`` to fit the cache.
+    """
+
+    rid: int
+    tokens: list[int]
+    status: str
+    submitted_at: float
+    finished_at: float
+    admitted_at: float | None = None
+    first_token_at: float | None = None
+    prompt_len: int = 0
+    truncated: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        """Submit-to-finish wall time."""
+        return self.finished_at - self.submitted_at
+
+    @property
+    def queue_s(self) -> float | None:
+        """Time spent waiting for admission (``None`` if never admitted)."""
+        return None if self.admitted_at is None else self.admitted_at - self.submitted_at
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Submit-to-first-token wall time (``None`` if shed before one)."""
+        return None if self.first_token_at is None else self.first_token_at - self.submitted_at
+
+    def stats(self) -> dict[str, object]:
+        """The per-request stats row (JSON-ready)."""
+        return {
+            "rid": self.rid,
+            "status": self.status,
+            "prompt_len": self.prompt_len,
+            "n_tokens": len(self.tokens),
+            "truncated": self.truncated,
+            "latency_s": self.latency_s,
+            "queue_s": self.queue_s,
+            "ttft_s": self.ttft_s,
+        }
+
+
+class RequestHandle:
+    """Future-like handle returned by :meth:`ServeSession.submit`.
+
+    ``done`` is non-blocking; :meth:`result` cooperatively drives the engine
+    (``step()`` in a loop) until this request finishes or is shed — the
+    single-threaded analogue of awaiting a server response.
+    """
+
+    __slots__ = (
+        "request", "_engine", "_result", "_submitted_at", "_admitted_at",
+        "_first_token_at", "_tokens", "_truncated", "_slot",
+    )
+
+    def __init__(self, request: Request, engine: ServeSession) -> None:
+        self.request = request
+        self._engine = engine
+        self._result: RequestResult | None = None
+        self._submitted_at = 0.0
+        self._admitted_at: float | None = None
+        self._first_token_at: float | None = None
+        self._tokens: list[int] = []
+        self._truncated = 0
+        self._slot = None
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> RequestResult:
+        while self._result is None:
+            self._engine.step()
+        return self._result
+
+
+def validate_request(req: Request, max_seq: int, n_prefix: int = 0) -> int:
+    """Admission validation shared by both engines: reject impossible
+    requests, left-truncate (keep the newest tokens of) prompts that would
+    overrun the cache.  Returns the number of prompt tokens dropped.
+
+    A request needs ``prompt + max_new_tokens`` cache positions (plus the
+    vision-patch prefix for vlm); writing past ``max_seq`` is a silent
+    out-of-bounds scatter under jit — wrong outputs, not an error — so the
+    bound is enforced here, at submit time.
+    """
+    if req.max_new_tokens < 1:
+        raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1")
+    if not req.prompt:
+        raise ValueError(f"request {req.rid}: empty prompt")
+    budget = max_seq - req.max_new_tokens - n_prefix
+    if budget < 1:
+        raise ValueError(
+            f"request {req.rid}: max_new_tokens={req.max_new_tokens} leaves no "
+            f"prompt room within max_seq={max_seq} (prefix {n_prefix})"
+        )
+    drop = len(req.prompt) - budget
+    if drop > 0:
+        req.prompt = list(req.prompt[drop:])
+    return max(drop, 0)
+
+
+def _percentile(values: list[float], q: float) -> float:
+    """``np.percentile`` with the degenerate cases pinned: empty -> 0.0,
+    single sample -> that sample (no interpolation over a length-1 axis)."""
+    if not values:
+        return 0.0
+    if len(values) == 1:
+        return float(values[0])
+    return float(np.percentile(values, q))
+
+
+class ServeSession:
+    """The continuous-batching engine over one model + one timing session.
+
+    Parameters
+    ----------
+    cfg / params:
+        Model family configuration and weights (any family
+        :mod:`repro.models.model` serves: attention, windowed/hybrid,
+        recurrent, vlm, encdec).
+    session:
+        A :class:`repro.timing.TimingSession` — the primary wiring.  Supplies
+        the timer database *and* the control loop the serving controller
+        registers on, so serving and training adaptation share one loop.
+    n_slots:
+        Rows of the persistent decode batch (compiled shape; admission width
+        is steered *within* it via ``serving.max_active``).
+    max_seq:
+        Cache positions per slot (prompt + generated tokens + prefix).
+    block_size:
+        KV-cache accounting granularity (see
+        :class:`~repro.serving.kvcache.KVCacheManager`).
+    slo:
+        The :class:`~repro.serving.slo.ServiceLevel` the controller enforces;
+        ``None`` serves best-effort (no steering targets, no shedding).
+    db / registry:
+        Escape hatches: explicit timer database (defaults to ``session.db``,
+        then the process default) and steerable-parameter registry.
+    control:
+        When true (default), build and register the
+        :class:`~repro.adapt.serving.ServingControl`; the engine polls its
+        control loop once per :meth:`step`.
+    """
+
     def __init__(
         self,
         cfg: ArchConfig,
         params,
         *,
-        max_batch: int = 8,
+        session=None,
+        n_slots: int = 8,
         max_seq: int = 256,
-        target_decode_ms: float | None = None,
+        block_size: int = 16,
+        slo: ServiceLevel | None = None,
         db: TimerDB | None = None,
         registry: ParamRegistry | None = None,
-        session=None,
+        control: bool = True,
     ) -> None:
-        """``session`` (a :class:`repro.timing.TimingSession`) supplies the
-        timer database when given — the session-wired path; ``db`` remains the
-        explicit-database escape hatch, and the process default is used when
-        neither is passed."""
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
         self.cfg = cfg
         self.params = params
+        self.n_slots = n_slots
         self.max_seq = max_seq
-        self.target_decode_ms = target_decode_ms
+        self.slo = slo if slo is not None else ServiceLevel()
         if session is not None and db is None:
             db = session.db
         self._db = db if db is not None else timer_db()
-        # phase scopes pre-resolved once (repro.timing hot path); names are
-        # real paths, so `serve` is the parent of the three phase timers
+        self._registry = registry if registry is not None else param_registry()
+        self._registry.declare(
+            "serving.max_active", n_slots, steerable=True,
+            doc="admission width of the persistent decode batch "
+                "(steered by ADAPT/serving from decode latency)",
+            validator=lambda v: isinstance(v, int) and v >= 1,
+        )
+        self._n_prefix = cfg.n_vision_patches if cfg.family == "vlm" else 0
+
+        # phase scopes pre-resolved once; real paths, so `serve` parents them
         self._scope_serve = self._db.scope_handle("serve")
         self._scope_admit = self._db.scope_handle("serve/admit")
         self._scope_prefill = self._db.scope_handle("serve/prefill")
         self._scope_decode = self._db.scope_handle("serve/decode")
-        self._registry = registry if registry is not None else param_registry()
-        self._registry.declare(
-            "serving.max_batch", max_batch, steerable=True,
-            doc="admitted batch size (self-steered from decode latency)",
-            validator=lambda v: isinstance(v, int) and v >= 1,
+        from ..timing.scopes import counter
+
+        self._c_queued = counter("serve/queued", db=self._db)
+        self._c_admitted = counter("serve/admitted", db=self._db)
+        self._c_shed = counter("serve/shed", db=self._db)
+        self._c_tokens = counter("serve/tokens", db=self._db)
+
+        self.kv = KVCacheManager(
+            cfg, n_slots=n_slots, max_seq=max_seq, block_size=block_size, db=self._db
         )
-        self._hard_max = max_batch
-        self.queue: deque[Request] = deque()
-        self.completed: list[Request] = []
-        self._decode_ms_history: list[float] = []
+        self._slots = [Slot(i) for i in range(n_slots)]
+        self._queue: deque[RequestHandle] = deque()
+        self.completed: list[RequestResult] = []
+        self.shed_results: list[RequestResult] = []
+        self._steps = 0
+        self._tokens_emitted = 0
 
-        self._prefill = jax.jit(lambda p, b, c: M.prefill(cfg, p, b, c))
-        self._decode = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+        self._cache = None  # allocated lazily on first admission
+        self._next_tok = np.zeros(n_slots, np.int32)
+        self._jit_prefill = jax.jit(lambda p, b, c: M.prefill(cfg, p, b, c))
+        self._jit_decode = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+        self._splice = make_cache_splicer(cfg, n_slots, max_seq)
 
-    # -- queue -------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        req.admitted_at = time.monotonic()
-        self.queue.append(req)
+        self._control = None
+        self._loop = None
+        if control:
+            if session is not None:
+                self._loop = session.control_loop
+            else:
+                from ..adapt.controller import ControlLoop
+
+                self._loop = ControlLoop(self._db)
+            from ..adapt.serving import ServingControl
+
+            self._control = ServingControl(self, slo=self.slo, registry=self._registry)
+            self._loop.register(self._control)
+
+    # -- introspection ----------------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
 
     @property
-    def max_batch(self) -> int:
-        return int(self._registry.get("serving.max_batch"))
+    def active_slots(self) -> int:
+        return sum(1 for s in self._slots if not s.free)
 
-    # -- one engine iteration ------------------------------------------------
-    def step_batch(self) -> list[Request]:
-        """Admit → prefill → decode-to-completion for one batch."""
-        if not self.queue:
-            return []
-        with self._scope_serve:
-            return self._step_batch_scoped()
+    @property
+    def max_active(self) -> int:
+        """Effective admission width: the steerable parameter, capped at the
+        compiled slot count."""
+        return min(int(self._registry.get("serving.max_active")), self.n_slots)
 
-    def _step_batch_scoped(self) -> list[Request]:
-        with self._scope_admit:
-            batch_reqs: list[Request] = []
-            while self.queue and len(batch_reqs) < self.max_batch:
-                batch_reqs.append(self.queue.popleft())
-            b = len(batch_reqs)
-            plen = max(len(r.prompt) for r in batch_reqs)
-            tokens = np.zeros((b, plen), np.int32)
-            for i, r in enumerate(batch_reqs):
-                tokens[i, plen - len(r.prompt):] = r.prompt  # left-pad
-        with self._scope_prefill:
-            cache = M.init_cache(self.cfg, b, self.max_seq)
-            batch = {"tokens": jnp.asarray(tokens)}
-            if self.cfg.family == "vlm":
-                batch["patch_embeds"] = jnp.zeros(
-                    (b, self.cfg.n_vision_patches, self.cfg.d_model), jnp.bfloat16
-                )
-            if self.cfg.family == "encdec":
-                batch["src_frames"] = jnp.zeros((b, plen, self.cfg.d_model), jnp.bfloat16)
-            cache, logits = self._prefill(self.params, batch, cache)
-            logits = jax.block_until_ready(logits)
-        max_new = max(r.max_new_tokens for r in batch_reqs)
-        next_tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(jnp.int32)
-        done = np.zeros(b, bool)
-        n_decoded = 0
-        decode_before = self._scope_decode.seconds()
-        with self._scope_decode as decode_timer:
-            for step_i in range(max_new):
-                for i, r in enumerate(batch_reqs):
-                    if not done[i]:
-                        tok = int(next_tok[i])
-                        r.output.append(tok)
-                        if (r.eos_token is not None and tok == r.eos_token) or len(
-                            r.output
-                        ) >= r.max_new_tokens:
-                            done[i] = True
-                n_decoded += 1
-                if done.all() or step_i == max_new - 1:
-                    break
-                cache, logits = self._decode(self.params, cache, next_tok[:, None])
-                logits = jax.block_until_ready(logits)
-                next_tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(
-                    jnp.int32
-                )
-        decode_s = decode_timer.seconds() - decode_before
-        per_token_ms = 1e3 * decode_s / max(n_decoded, 1)
-        self._decode_ms_history.append(per_token_ms)
-        self._steer_batch_size(per_token_ms)
+    @property
+    def control_loop(self):
+        """The adapt loop serving decisions land on (``None`` with
+        ``control=False``)."""
+        return self._loop
+
+    # -- submission -------------------------------------------------------------
+    def submit(self, request: Request) -> RequestHandle:
+        """Validate, enqueue, and return the request's future-like handle.
+
+        Prompts that would overrun the cache are left-truncated (newest
+        tokens kept) — the drop count lands on ``RequestResult.truncated``;
+        impossible requests (empty prompt, ``max_new_tokens`` that cannot fit
+        at all) raise ``ValueError`` here rather than corrupting the cache.
+        """
+        truncated = validate_request(request, self.max_seq, self._n_prefix)
+        handle = RequestHandle(request, self)
+        handle._submitted_at = time.monotonic()
+        handle._truncated = truncated
+        self._queue.append(handle)
+        self._c_queued(1)
+        return handle
+
+    # -- actuators (driven by ADAPT/serving) -------------------------------------
+    def shed(self, n: int) -> list[RequestResult]:
+        """Drop ``n`` queued requests per the SLO's ``shed_from`` policy;
+        their handles resolve immediately with ``status="shed"``."""
+        dropped: list[RequestResult] = []
         now = time.monotonic()
-        for r in batch_reqs:
-            r.finished_at = now
-            self.completed.append(r)
-        return batch_reqs
+        for _ in range(min(n, len(self._queue))):
+            handle = (
+                self._queue.popleft() if self.slo.shed_from == "oldest"
+                else self._queue.pop()
+            )
+            result = RequestResult(
+                rid=handle.rid, tokens=[], status="shed",
+                submitted_at=handle._submitted_at, finished_at=now,
+                prompt_len=len(handle.request.prompt),
+                truncated=handle._truncated,
+            )
+            handle._result = result
+            self.shed_results.append(result)
+            dropped.append(result)
+            self._c_shed(1)
+        return dropped
 
-    def run(self) -> list[Request]:
-        while self.queue:
-            self.step_batch()
-        return self.completed
+    def completion_rate(self) -> float:
+        """Recent requests-per-second, measured over busy (``serve``-scoped)
+        seconds — the rate the SLO queue-delay estimate divides by."""
+        busy = self._scope_serve.timer.seconds()
+        if busy <= 0.0:
+            return 0.0
+        return len(self.completed) / busy
 
-    # -- self-steering ----------------------------------------------------------
-    def _steer_batch_size(self, per_token_ms: float) -> None:
-        if self.target_decode_ms is None:
+    # -- the engine iteration ----------------------------------------------------
+    def step(self) -> list[RequestResult]:
+        """One engine iteration: admit into free slots, one lock-step decode,
+        harvest finished requests, poll the control loop.  Returns the
+        requests that finished this step."""
+        finished: list[RequestResult] = []
+        if self._queue or self.active_slots:
+            self._steps += 1
+            with self._scope_serve:
+                self._admit(finished)
+                if self.active_slots:
+                    self._decode_once(finished)
+            if self._loop is not None:
+                self._loop.poll(self._steps)
+        return finished
+
+    def run_until_idle(self, max_steps: int | None = None) -> list[RequestResult]:
+        """Drive :meth:`step` until queue and slots are empty; returns every
+        request completed during the drain (shed requests excluded)."""
+        drained: list[RequestResult] = []
+        while self._queue or self.active_slots:
+            drained.extend(self.step())
+            if max_steps is not None:
+                max_steps -= 1
+                if max_steps <= 0:
+                    break
+        return drained
+
+    # -- internals ---------------------------------------------------------------
+    def _admit(self, finished: list[RequestResult]) -> None:
+        while True:
+            with self._scope_admit:
+                handle = self._pick_admission()
+            if handle is None:
+                return
+            self._prefill_into_slot(handle, finished)
+
+    def _pick_admission(self) -> RequestHandle | None:
+        if not self._queue or self.active_slots >= self.max_active:
+            return None
+        slot = next((s for s in self._slots if s.free), None)
+        if slot is None:
+            return None
+        head = self._queue[0]
+        req = head.request
+        total = self._n_prefix + len(req.prompt) + req.max_new_tokens
+        if not self.kv.can_admit(total):
+            return None
+        self._queue.popleft()
+        blocks = self.kv.allocate(req.rid, total)
+        slot.bind(req, head, blocks)
+        head._slot = slot
+        self._c_admitted(1)
+        return head
+
+    def _prefill_batch(self, req: Request) -> dict:
+        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (1, self.cfg.n_vision_patches, self.cfg.d_model), jnp.bfloat16
+            )
+        if self.cfg.family == "encdec":
+            batch["src_frames"] = jnp.zeros(
+                (1, len(req.prompt), self.cfg.d_model), jnp.bfloat16
+            )
+        return batch
+
+    def _prefill_into_slot(self, handle: RequestHandle, finished: list[RequestResult]) -> None:
+        slot: Slot = handle._slot
+        req = handle.request
+        now = time.monotonic()
+        handle._admitted_at = now
+        with self._scope_prefill:
+            fresh = M.init_cache(self.cfg, 1, self.max_seq)
+            fresh, logits = self._jit_prefill(self.params, self._prefill_batch(req), fresh)
+            logits = jax.block_until_ready(logits)
+        tok = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
+        handle._tokens = [tok]
+        handle._first_token_at = time.monotonic()
+        slot.generated = 1
+        self._tokens_emitted += 1
+        self._c_tokens(1)
+        if req.max_new_tokens == 1 or (req.eos_token is not None and tok == req.eos_token):
+            self._finish(slot, finished)
             return
-        current = self.max_batch
-        if per_token_ms > self.target_decode_ms and current > 1:
-            self._registry.set("serving.max_batch", max(current // 2, 1))
-        elif per_token_ms < 0.5 * self.target_decode_ms and current < self._hard_max:
-            self._registry.set("serving.max_batch", min(current * 2, self._hard_max))
+        if self._cache is None:
+            self._cache = M.init_cache(self.cfg, self.n_slots, self.max_seq)
+        self._cache = self._splice(self._cache, fresh, jnp.int32(slot.index))
+        self._next_tok[slot.index] = tok
 
+    def _decode_once(self, finished: list[RequestResult]) -> None:
+        with self._scope_decode:
+            self._cache, logits = self._jit_decode(
+                self.params, self._cache, jnp.asarray(self._next_tok[:, None])
+            )
+            logits = jax.block_until_ready(logits)
+        toks = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1))
+        emitted = 0
+        for slot in self._slots:
+            if slot.free:
+                continue
+            tok = int(toks[slot.index])
+            slot.handle._tokens.append(tok)
+            slot.generated += 1
+            self._next_tok[slot.index] = tok
+            emitted += 1
+            req = slot.request
+            if slot.generated >= req.max_new_tokens or (
+                req.eos_token is not None and tok == req.eos_token
+            ):
+                self._finish(slot, finished)
+        self._tokens_emitted += emitted
+        if emitted:
+            self._c_tokens(emitted)
+
+    def _finish(self, slot: Slot, finished: list[RequestResult]) -> None:
+        handle: RequestHandle = slot.handle
+        req = slot.request
+        result = RequestResult(
+            rid=req.rid,
+            tokens=list(handle._tokens),
+            status="completed",
+            submitted_at=handle._submitted_at,
+            finished_at=time.monotonic(),
+            admitted_at=handle._admitted_at,
+            first_token_at=handle._first_token_at,
+            prompt_len=len(req.prompt),
+            truncated=handle._truncated,
+        )
+        handle._result = result
+        self.kv.free(req.rid)
+        slot.release()
+        self.completed.append(result)
+        finished.append(result)
+
+    # -- read side ---------------------------------------------------------------
     def stats(self) -> dict[str, float]:
-        lat = [r.finished_at - r.admitted_at for r in self.completed]
+        """Engine-level view: throughput, latency distribution, occupancy,
+        shedding, and the KV pool (per-request rows live on
+        :meth:`request_stats` / :meth:`RequestResult.stats`)."""
+        lat = [r.latency_s for r in self.completed]
+        ttft = [r.ttft_s for r in self.completed if r.ttft_s is not None]
+        busy = self._scope_serve.timer.seconds()
+        occupancy = slot_stats(self._slots)
         return {
             "completed": float(len(self.completed)),
+            "shed": float(len(self.shed_results)),
+            "queue_depth": float(self.queue_depth),
+            "active_slots": float(occupancy.active),
+            "occupancy": occupancy.occupancy,
+            "max_active": float(self.max_active),
+            "steps": float(self._steps),
+            "tokens": float(self._tokens_emitted),
+            "throughput_tokens_per_s": self._tokens_emitted / busy if busy > 0 else 0.0,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
-            "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
-            "decode_ms_per_token_last": self._decode_ms_history[-1]
-            if self._decode_ms_history
-            else 0.0,
-            "max_batch": float(self.max_batch),
+            "p95_latency_s": _percentile(lat, 95),
+            "p95_ttft_s": _percentile(ttft, 95),
+            "kv_utilization": self.kv.utilization(),
+            "kv_high_water_blocks": float(self.kv.high_water),
         }
+
+    def request_stats(self) -> list[dict[str, object]]:
+        """Per-request stats rows, completed then shed, submission order."""
+        rows = [r.stats() for r in self.completed]
+        rows.extend(r.stats() for r in self.shed_results)
+        return rows

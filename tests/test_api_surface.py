@@ -1,12 +1,14 @@
-"""Public-API snapshot of the ``repro.timing`` facade.
+"""Public-API snapshots of the ``repro.timing`` and ``repro.serving`` facades.
 
-The facade is the repo's supported instrumentation surface; future PRs must
-not silently rename, drop, or re-sign it.  Changing anything below is an API
-decision — update this snapshot *and* the README migration table together.
+These are the repo's supported surfaces; future PRs must not silently rename,
+drop, or re-sign them.  Changing anything below is an API decision — update
+this snapshot *and* the README migration table together.
 """
 
+import dataclasses
 import inspect
 
+import repro.serving as serving
 import repro.timing as timing
 
 EXPECTED_ALL = [
@@ -92,8 +94,6 @@ def test_session_surface():
 
 
 def test_timer_node_fields():
-    import dataclasses
-
     fields = [f.name for f in dataclasses.fields(timing.TimerNode)]
     assert fields == ["name", "count", "inclusive", "exclusive", "children"]
 
@@ -113,3 +113,87 @@ def test_timerdb_hierarchy_surface():
 def test_scope_handle_slots():
     # the hot-path object stays lean: no instance dict to allocate
     assert timing.ScopeHandle.__slots__ == ("path", "timer", "_tls")
+
+
+# --- repro.serving (PR 6 API redesign: continuous batching) -------------------
+
+EXPECTED_SERVING_ALL = [
+    "KVCacheManager",
+    "Request",
+    "RequestHandle",
+    "RequestResult",
+    "ServeSession",
+    "ServiceLevel",
+    "ServingEngine",  # deprecated static-batch shim, kept >= 2 PRs
+]
+
+EXPECTED_SERVE_SESSION_METHODS = {
+    "__init__": [
+        "self", "cfg", "params", "session", "n_slots", "max_seq",
+        "block_size", "slo", "db", "registry", "control",
+    ],
+    "submit": ["self", "request"],
+    "shed": ["self", "n"],
+    "step": ["self"],
+    "run_until_idle": ["self", "max_steps"],
+    "completion_rate": ["self"],
+    "stats": ["self"],
+    "request_stats": ["self"],
+}
+
+
+def test_serving_all_is_frozen():
+    assert list(serving.__all__) == EXPECTED_SERVING_ALL
+
+
+def test_serving_every_name_importable():
+    for name in serving.__all__:
+        assert getattr(serving, name, None) is not None, name
+
+
+def test_serve_session_surface():
+    for name, params in EXPECTED_SERVE_SESSION_METHODS.items():
+        method = inspect.getattr_static(serving.ServeSession, name)
+        sig = inspect.signature(method)
+        assert list(sig.parameters) == params, f"ServeSession.{name}{sig}"
+    # everything after the model is keyword-only wiring
+    init = inspect.signature(serving.ServeSession.__init__)
+    for kw in ("session", "n_slots", "max_seq", "block_size", "slo", "db",
+               "registry", "control"):
+        assert init.parameters[kw].kind is inspect.Parameter.KEYWORD_ONLY, kw
+    for prop in ("queue_depth", "active_slots", "max_active", "control_loop"):
+        assert isinstance(inspect.getattr_static(serving.ServeSession, prop), property)
+
+
+def test_request_handle_surface():
+    # submit() returns a lean future-like handle: done is non-blocking, result
+    # drives the engine; no instance dict
+    assert isinstance(inspect.getattr_static(serving.RequestHandle, "done"), property)
+    assert list(inspect.signature(serving.RequestHandle.result).parameters) == ["self"]
+    assert serving.RequestHandle.__slots__ == (
+        "request", "_engine", "_result", "_submitted_at", "_admitted_at",
+        "_first_token_at", "_tokens", "_truncated", "_slot",
+    )
+
+
+def test_request_and_result_fields():
+    fields = [f.name for f in dataclasses.fields(serving.Request)]
+    assert fields == [
+        "rid", "prompt", "max_new_tokens", "eos_token",
+        "output", "admitted_at", "finished_at",  # legacy-engine state
+    ]
+    fields = [f.name for f in dataclasses.fields(serving.RequestResult)]
+    assert fields == [
+        "rid", "tokens", "status", "submitted_at", "finished_at",
+        "admitted_at", "first_token_at", "prompt_len", "truncated",
+    ]
+
+
+def test_service_level_fields():
+    fields = [f.name for f in dataclasses.fields(serving.ServiceLevel)]
+    assert fields == ["target_decode_ms", "max_queue_delay_s", "grow_headroom", "shed_from"]
+
+
+def test_kv_cache_manager_signature():
+    sig = inspect.signature(serving.KVCacheManager.__init__)
+    assert list(sig.parameters) == ["self", "cfg", "n_slots", "max_seq", "block_size", "db"]

@@ -1,0 +1,305 @@
+"""Serving-layer tests: KV block accounting, admission validation (the
+prompt-overrun fix), degenerate-stats fix, SLO shedding arithmetic + the
+ADAPT/serving controller, request handles, the monitor ``/serving`` view, and
+the deprecated static-batch shim (warns, identical outputs)."""
+
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.adapt.controller import Measurement
+from repro.adapt.serving import ServingControl
+from repro.configs import get_smoke_config
+from repro.core.params import param_registry
+from repro.core.timers import TimerDB
+from repro.models import model as M
+from repro.monitor import MonitorServer
+from repro.monitor.server import serving_payload
+from repro.serving import (
+    KVCacheManager,
+    Request,
+    ServeSession,
+    ServiceLevel,
+    ServingEngine,
+)
+from repro.serving.engine import _percentile, validate_request
+from repro.serving.slo import estimated_queue_delay, shed_count
+
+
+# --- KV-cache block accounting ------------------------------------------------
+
+def test_kv_footprint_is_family_aware():
+    # global attention: K/V grow with the sequence -> max_seq positions
+    attn = KVCacheManager(get_smoke_config("llama3.2-1b"), n_slots=4, max_seq=64,
+                          block_size=16, db=TimerDB())
+    assert attn.blocks_per_slot == 4 and attn.total_blocks == 16
+    # windowed-only stack: the ring buffer bounds the footprint at window=16
+    hybrid = KVCacheManager(get_smoke_config("recurrentgemma-9b"), n_slots=4,
+                            max_seq=64, block_size=8, db=TimerDB())
+    assert hybrid.blocks_per_slot == 2  # ceil(16 / 8), not ceil(64 / 8)
+    # pure recurrent: O(1) state -> one recurrent-state block per request
+    ssm = KVCacheManager(get_smoke_config("rwkv6-1.6b"), n_slots=4, max_seq=64,
+                         block_size=16, db=TimerDB())
+    assert ssm.blocks_per_slot == 1
+    assert ssm.blocks_for(10_000) == 1
+
+
+def test_kv_alloc_free_cycle():
+    kv = KVCacheManager(get_smoke_config("llama3.2-1b"), n_slots=2, max_seq=32,
+                        block_size=16, db=TimerDB())
+    assert kv.total_blocks == 4 and kv.free_blocks == 4
+    assert kv.blocks_for(1) == 1 and kv.blocks_for(17) == 2
+    assert kv.blocks_for(10_000) == 2  # capped at the per-slot footprint
+    with pytest.raises(ValueError):
+        kv.blocks_for(-1)
+
+    assert kv.allocate(0, 32) == 2
+    assert kv.can_admit(32) and kv.allocate(1, 20) == 2
+    assert not kv.can_admit(1) and kv.free_blocks == 0
+    assert kv.utilization() == 1.0 and kv.high_water == 4
+    with pytest.raises(ValueError):
+        kv.allocate(0, 8)  # double reservation
+    with pytest.raises(ValueError):
+        kv.allocate(2, 8)  # pool exhausted
+    assert kv.free(0) == 2 and kv.free(0) == 0  # idempotent free
+    assert kv.free_blocks == 2 and kv.high_water == 4  # high water sticks
+    stats = kv.stats()
+    assert stats["reserved_blocks"] == 2.0 and stats["utilization"] == 0.5
+
+
+# --- admission validation (the overrun crash fix) -----------------------------
+
+def test_validate_request_truncates_keeping_tail():
+    req = Request(0, list(range(100)), max_new_tokens=8)
+    dropped = validate_request(req, max_seq=32)
+    assert dropped == 76
+    assert req.prompt == list(range(76, 100))  # newest tokens kept
+    assert validate_request(Request(1, [1, 2, 3], max_new_tokens=8), 32) == 0
+
+
+def test_validate_request_rejects_impossible():
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        validate_request(Request(0, [1], max_new_tokens=0), 32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        validate_request(Request(0, [], max_new_tokens=4), 32)
+    with pytest.raises(ValueError, match="no.*prompt room"):
+        validate_request(Request(0, [1, 2], max_new_tokens=32), 32)
+    with pytest.raises(ValueError, match="prefix"):
+        validate_request(Request(0, [1, 2], max_new_tokens=4), 32, n_prefix=30)
+
+
+def test_percentile_degenerate_cases():
+    assert _percentile([], 95) == 0.0
+    assert _percentile([0.25], 95) == 0.25
+    vals = [float(v) for v in range(100)]
+    assert _percentile(vals, 95) == pytest.approx(np.percentile(vals, 95))
+
+
+# --- SLO arithmetic -----------------------------------------------------------
+
+def test_service_level_validation():
+    with pytest.raises(ValueError):
+        ServiceLevel(target_decode_ms=0.0)
+    with pytest.raises(ValueError):
+        ServiceLevel(max_queue_delay_s=-1.0)
+    with pytest.raises(ValueError):
+        ServiceLevel(grow_headroom=0.0)
+    with pytest.raises(ValueError):
+        ServiceLevel(shed_from="middle")
+
+
+def test_queue_delay_estimate_and_shed_count():
+    assert estimated_queue_delay(0, 0.0) == 0.0
+    assert estimated_queue_delay(4, 0.0) is None  # no rate measured yet
+    assert estimated_queue_delay(4, 2.0) == 2.0
+    slo = ServiceLevel(max_queue_delay_s=1.0)
+    assert shed_count(10, 2.0, ServiceLevel()) == 0  # shedding disabled
+    assert shed_count(0, 2.0, slo) == 0
+    assert shed_count(10, 0.0, slo) == 0  # never shed on no estimate
+    assert shed_count(2, 2.0, slo) == 0  # 1s estimated wait meets the SLO
+    assert shed_count(10, 2.0, slo) == 8  # keep int(1.0 * 2.0), shed the rest
+
+
+# --- shedding through the control plane (no model work needed) ----------------
+
+def _queue_only_engine(**kw):
+    """A ServeSession that only ever queues/sheds: no admission happens, so
+    params are never touched and no model compiles."""
+    cfg = get_smoke_config("llama3.2-1b")
+    return ServeSession(cfg, params=None, n_slots=2, max_seq=32, **kw)
+
+
+def test_shed_resolves_handles_newest_first():
+    engine = _queue_only_engine(control=False)
+    handles = [engine.submit(Request(rid, [1, 2, 3], max_new_tokens=2))
+               for rid in range(4)]
+    dropped = engine.shed(2)
+    assert [r.rid for r in dropped] == [3, 2]  # shed_from="newest"
+    assert handles[3].done and handles[3].result().status == "shed"
+    assert handles[3].result().tokens == []
+    assert not handles[0].done and engine.queue_depth == 2
+    assert engine.stats()["shed"] == 2.0
+
+
+def test_shed_oldest_policy():
+    engine = _queue_only_engine(
+        control=False, slo=ServiceLevel(max_queue_delay_s=1.0, shed_from="oldest"))
+    for rid in range(3):
+        engine.submit(Request(rid, [1, 2, 3], max_new_tokens=2))
+    assert [r.rid for r in engine.shed(2)] == [0, 1]
+
+
+def test_serving_control_sheds_on_the_adapt_plane():
+    """Queue pressure -> the controller (not the engine) decides, the engine's
+    shed actuator acts, and the decision lands as an ADAPT/serving::shed row."""
+    engine = _queue_only_engine(slo=ServiceLevel(max_queue_delay_s=1.0))
+    handles = [engine.submit(Request(rid, [1, 2, 3], max_new_tokens=2))
+               for rid in range(6)]
+    engine.completion_rate = lambda: 2.0  # measured rate: 2 req/s
+    actions = engine.control_loop.poll(1)
+    (shed,) = actions
+    assert shed.controller == "serving" and shed.action == "shed"
+    assert shed.detail["n"] == 4 and shed.detail["rids"] == (5, 4, 3, 2)
+    assert engine.queue_depth == 2
+    assert sum(h.done for h in handles) == 4
+    # published as a decision row in the timer DB (renders in the report)
+    assert engine.control_loop.db.get("ADAPT/serving::shed").count == 1
+    # queue now meets the SLO: next poll takes no action
+    assert engine.control_loop.poll(2) == []
+
+
+def test_serving_control_grow_shrink_cooldown():
+    """Width steering from the serve/decode channel: shrink above target,
+    grow (with queue pressure) under the headroom, cooldown between resizes.
+    The controller judges measurement *deltas* between polls, so each window
+    below is what the decode timer accumulated since the previous poll."""
+    engine = _queue_only_engine(control=False)
+    engine.submit(Request(0, [1, 2, 3], max_new_tokens=2))  # queue pressure
+    ctl = ServingControl(engine, ServiceLevel(target_decode_ms=10.0),
+                         registry=param_registry(), cooldown=1)
+
+    def decode_channel(total_s, count):
+        return {"serve/decode": Measurement(total_s, count)}
+
+    # 100 ms/step >> 10 ms target -> shrink 2 -> 1
+    (act,) = ctl.control(1, decode_channel(0.100, 1))
+    assert act.action == "shrink_batch" and engine.max_active == 1
+    assert act.trigger == "serve/decode" and act.detail["max_active"] == "2->1"
+    # cooldown poll: fresh fast window, but no resize judged at the old width
+    assert ctl.control(2, decode_channel(0.102, 2)) == []
+    # 1 ms/step < 0.5 * 10 ms with a queued request -> grow 1 -> 2
+    (act,) = ctl.control(3, decode_channel(0.103, 3))
+    assert act.action == "grow_batch" and engine.max_active == 2
+    assert act.detail["max_active"] == "1->2"
+
+
+# --- the full engine over a real model ----------------------------------------
+
+def test_serve_session_end_to_end_bookkeeping():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeSession(cfg, params, n_slots=2, max_seq=32, control=False)
+    rng = np.random.default_rng(0)
+    # over-long prompt: truncated at submit instead of corrupting the cache
+    long_handle = engine.submit(Request(
+        0, list(rng.integers(0, cfg.vocab_size, 100)), max_new_tokens=3))
+    short = engine.submit(Request(
+        1, list(rng.integers(0, cfg.vocab_size, 8)), max_new_tokens=3))
+    # result() drives the engine to completion on its own
+    result = long_handle.result()
+    assert result.status == "completed" and len(result.tokens) == 3
+    assert result.truncated == 100 - (32 - 3) and result.prompt_len == 29
+    assert short.result().tokens and short.result().truncated == 0
+    engine.run_until_idle()
+    assert engine.kv.reserved_blocks == 0  # all blocks returned
+    assert engine.kv.high_water > 0
+    stats = engine.stats()
+    assert stats["completed"] == 2.0 and stats["tokens"] == 6.0
+    assert stats["queue_depth"] == 0.0 and stats["active_slots"] == 0.0
+    assert stats["p95_latency_s"] > 0.0 and stats["throughput_tokens_per_s"] > 0.0
+    rows = engine.request_stats()
+    assert [r["rid"] for r in rows] == [0, 1]
+    assert all(r["ttft_s"] is not None and r["queue_s"] is not None for r in rows)
+    # phase scopes measured hierarchically: serve parents admit/prefill/decode
+    for name in ("serve", "serve/admit", "serve/prefill", "serve/decode"):
+        assert engine._db.get(name).count > 0, name
+
+
+# --- deprecated static-batch shim ---------------------------------------------
+
+def test_legacy_engine_warns_and_matches_serve_session():
+    """The ROADMAP deprecation contract: old entry points keep exact behavior
+    behind a DeprecationWarning.  With uniform prompt lengths (legacy
+    left-padding is a no-op) the static-batch engine and ServeSession must
+    produce identical greedy tokens."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 12)) for _ in range(4)]
+
+    with pytest.warns(DeprecationWarning, match="ServingEngine is deprecated"):
+        legacy = ServingEngine(cfg, params, max_batch=4, max_seq=32)
+    for rid, prompt in enumerate(prompts):
+        legacy.submit(Request(rid, list(prompt), max_new_tokens=4))
+    legacy_done = legacy.run()
+    assert len(legacy_done) == 4
+
+    engine = ServeSession(cfg, params, n_slots=4, max_seq=32, control=False)
+    handles = [engine.submit(Request(rid, list(prompt), max_new_tokens=4))
+               for rid, prompt in enumerate(prompts)]
+    engine.run_until_idle()
+    assert [h.result().tokens for h in handles] == [r.output for r in legacy_done]
+
+    stats = legacy.stats()  # degenerate-percentile fix holds on the shim too
+    assert stats["completed"] == 4.0 and stats["p95_latency_s"] >= 0.0
+
+
+def test_legacy_engine_validates_and_guards_stats():
+    cfg = get_smoke_config("llama3.2-1b")
+    with pytest.warns(DeprecationWarning):
+        legacy = ServingEngine(cfg, params=None, max_batch=2, max_seq=32)
+    assert legacy.stats()["p95_latency_s"] == 0.0  # no completions: no crash
+    req = Request(0, list(range(100)), max_new_tokens=8)
+    legacy.submit(req)
+    assert len(req.prompt) == 32 - 8  # truncated at submit, not scattered OOB
+    with pytest.raises(ValueError):
+        legacy.submit(Request(1, [], max_new_tokens=4))
+
+
+# --- monitor /serving endpoint ------------------------------------------------
+
+class _FakeEngine:
+    def stats(self):
+        return {"completed": 3.0, "queue_depth": 1.0, "kv_utilization": 0.5}
+
+    def request_stats(self):
+        return [{"rid": 0, "status": "completed", "latency_s": 0.01}]
+
+
+def test_monitor_serving_endpoint():
+    srv = MonitorServer(0, TimerDB(), serving_fn=serving_payload(_FakeEngine()))
+    port = srv.start()
+    try:
+        base = f"http://127.0.0.1:{port}"
+        view = json.loads(urllib.request.urlopen(base + "/serving").read())
+        assert view["engine"]["completed"] == 3.0
+        assert view["requests"][0]["rid"] == 0
+        html = urllib.request.urlopen(base + "/").read().decode()
+        assert "Serving" in html and "kv_utilization" in html
+    finally:
+        srv.stop()
+
+
+def test_monitor_serving_unwired_is_404():
+    srv = MonitorServer(0, TimerDB())
+    port = srv.start()
+    try:
+        with pytest.raises(urllib.error.HTTPError) as err:
+            urllib.request.urlopen(f"http://127.0.0.1:{port}/serving")
+        assert err.value.code == 404
+    finally:
+        srv.stop()

@@ -10,7 +10,7 @@ import pytest
 from repro.core.params import reset_param_registry
 from repro.core.timers import reset_timer_db
 from repro.launch.train import TrainSettings, run_training
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServeSession, ServiceLevel
 
 
 def _settings(tmp_path, steps, **kw):
@@ -122,17 +122,24 @@ def test_serving_engine_completes_and_steers():
 
     cfg = get_smoke_config("llama3.2-1b")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, max_batch=4, max_seq=64,
-                           target_decode_ms=1e-6)  # impossible target -> steer down
+    engine = ServeSession(
+        cfg, params, n_slots=4, max_seq=64,
+        slo=ServiceLevel(target_decode_ms=1e-6),  # impossible target -> steer down
+    )
     rng = np.random.default_rng(0)
-    for rid in range(8):
+    handles = [
         engine.submit(Request(rid, list(rng.integers(0, cfg.vocab_size, 16)), max_new_tokens=4))
-    done = engine.run()
+        for rid in range(8)
+    ]
+    done = engine.run_until_idle()
     assert len(done) == 8
-    assert all(len(r.output) == 4 for r in done)
-    assert engine.max_batch < 4  # steered down due to impossible latency target
+    assert all(h.done and len(h.result().tokens) == 4 for h in handles)
+    assert engine.max_active < 4  # steered down due to impossible latency target
     stats = engine.stats()
     assert stats["completed"] == 8.0
+    # the steering happened ON the control plane: ADAPT rows in the decision log
+    shrinks = [a for a in engine.control_loop.actions if a.action == "shrink_batch"]
+    assert shrinks and all(a.controller == "serving" for a in shrinks)
 
 
 def test_straggler_detection():
