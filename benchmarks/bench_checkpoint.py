@@ -1,0 +1,132 @@
+"""Checkpoint-path overheads: the fault-tolerance rows the CI perf gate pins.
+
+Measures us per operation for the hardened checkpoint layer on a ~1 MB state
+tree: the synchronous durable save (full write + hash-during-write + GC — the
+eviction-barrier / preemption path), the async save's *blocking* phase (what
+AdaptCheck actually bounds; the relational gate pins it well under the sync
+cost), load-free validation (streamed sha256, the per-checkpoint resume-scan
+cost), and a manager ``restore_latest`` (scan + validate + select + load).
+
+Methodology matches bench_clock_overhead: each row is the best of ``repeats``
+timed loops after a warmup call, everything on a tmpdir; ``--scale`` shrinks
+iteration counts for smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import shutil
+import sys
+import tempfile
+import time
+
+
+def _time_op(fn, n: int, scale: float = 1.0, repeats: int = 3) -> float:
+    n = max(int(n * scale), 3)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        best = min(best, time.perf_counter() - t0)
+    return best / n * 1e6
+
+
+def run(scale: float = 1.0) -> list[tuple[str, float, str]]:
+    import numpy as np
+
+    from repro.checkpoint import (
+        CheckpointManager,
+        save_checkpoint,
+        validate_checkpoint,
+    )
+
+    # ~1 MB of state: big enough that hashing cost is real, small enough that
+    # the smoke gate stays sub-second per row
+    tree = {
+        "params": {"w": np.arange(1 << 17, dtype=np.float32).reshape(512, 256)},
+        "opt": {"m": np.zeros((1 << 17,), np.float32)},
+        "step": np.int64(7),
+    }
+    rows: list[tuple[str, float, str]] = []
+    root = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        sync = CheckpointManager(f"{root}/sync", keep_n=2, synchronous=True)
+        counter = iter(range(1, 1 << 20))
+
+        def save_sync():
+            sync.save(next(counter), tree)
+
+        save_sync()
+        rows.append(("ckpt/save_sync", _time_op(save_sync, 20, scale), "us_per_save"))
+        sync.close()
+
+        asy = CheckpointManager(f"{root}/async", keep_n=2, synchronous=False)
+
+        def save_async_blocking():
+            asy.save(next(counter), tree)
+
+        save_async_blocking()
+        rows.append((
+            "ckpt/save_async_blocking",
+            _time_op(save_async_blocking, 20, scale),
+            "us_per_save",
+        ))
+        asy.close()
+
+        path, _ = save_checkpoint(f"{root}/val", 1, tree)
+
+        def validate():
+            validate_checkpoint(path)
+
+        validate()
+        rows.append(("ckpt/validate", _time_op(validate, 40, scale), "us_per_call"))
+
+        mgr = CheckpointManager(f"{root}/val", synchronous=True)
+
+        def restore():
+            mgr.restore_latest()
+
+        restore()
+        rows.append(("ckpt/restore_latest", _time_op(restore, 20, scale), "us_per_call"))
+        mgr.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Hardened checkpoint-path overheads (CI perf-gate rows)."
+    )
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="iteration-count multiplier (CI smoke: 0.5)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (BENCH_*.json perf trajectory)")
+    args = ap.parse_args(argv)
+    rows = run(scale=args.scale)
+    print("name,us_per_call,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.3f},{derived}")
+    if args.json:
+        payload = {
+            "bench": "checkpoint",
+            "scale": args.scale,
+            "unix_time": time.time(),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "rows": [
+                {"name": name, "us_per_call": value, "derived": derived}
+                for name, value, derived in rows
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,15 @@ duration predictor keeps learning.
 
 This replaces the inline decision block ``repro.launch.train`` used to carry:
 the same policy now lives behind the same registry as every other adaptation.
+
+With a durable-save routine bound (:meth:`CheckpointControl.bind_durable_save`)
+the controller also serves as the fleet's **eviction barrier**: removing a host
+rebuilds the mesh and re-apportions its work, so the last thing that should
+happen *before* that irreversible step is a checkpoint that is known durable.
+:meth:`evict_barrier` plugs into
+:class:`~repro.adapt.stragglers.StragglerResponse` — an eviction only proceeds
+once the save lands, and the save itself shows up in the ``ADAPT/`` log as a
+``checkpoint``-controller ``before_evict`` row.
 """
 
 from __future__ import annotations
@@ -69,6 +78,12 @@ class CheckpointControl:
         self._fraction_param = fraction_param
         self._interval_param = interval_param
         self._pending: Decision | None = None
+        #: durable-save routine for the eviction barrier; bound by the
+        #: launcher (``bind_durable_save``) once a checkpoint manager exists
+        self._durable_save: Callable[[int], float] | None = None
+        #: barrier bookkeeping for summaries / tests
+        self.barrier_saves = 0
+        self.barrier_failures = 0
 
     # -- lifecycle ---------------------------------------------------------------
     def start_run(self, now: float | None = None) -> None:
@@ -82,6 +97,44 @@ class CheckpointControl:
         """Pop the decision made at the last poll (None when never polled)."""
         decision, self._pending = self._pending, None
         return decision
+
+    # -- eviction barrier ---------------------------------------------------------
+    def bind_durable_save(self, save_fn: Callable[[int], float]) -> None:
+        """Bind the launcher's durable-save routine: ``save_fn(step)`` must
+        write a checkpoint at ``step`` and *block until it is durable on
+        disk* (manager ``save`` + ``wait``), returning the write seconds."""
+        self._durable_save = save_fn
+
+    def evict_barrier(self, step: int, report: object = None) -> ControlAction | None:
+        """Checkpoint-before-evict: run a durable save, or veto the eviction.
+
+        Plugged into :class:`~repro.adapt.stragglers.StragglerResponse` as its
+        ``evict_barrier``.  Returns the ``ADAPT/checkpoint::before_evict``
+        action once a save is durably on disk — the eviction may proceed — or
+        ``None`` (no save routine bound, or the save failed), which defers the
+        eviction to a later check; the straggler streak keeps growing, so the
+        eviction retries as soon as a save succeeds.
+        """
+        if self._durable_save is None:
+            return None
+        start = self._clock()
+        try:
+            seconds = float(self._durable_save(step))
+        except Exception as exc:  # noqa: BLE001 - a failed save must veto, not crash
+            self.barrier_failures += 1
+            del exc
+            return None
+        if seconds <= 0.0:
+            seconds = max(self._clock() - start, 0.0)
+        self.barrier_saves += 1
+        self.observe_checkpoint(seconds)
+        return ControlAction(
+            step=step,
+            controller="checkpoint",
+            trigger=self.ckpt_timer,
+            action="before_evict",
+            detail={"seconds": round(seconds, 6), "saves": self.barrier_saves},
+        )
 
     # -- steering ---------------------------------------------------------------
     def _apply_steering(self) -> None:
@@ -128,4 +181,10 @@ class CheckpointControl:
         ]
 
     def summary(self) -> dict:
-        return self.inner.summary()
+        out = dict(self.inner.summary())
+        if self.barrier_saves or self.barrier_failures:
+            out["barrier"] = {
+                "saves": self.barrier_saves,
+                "failures": self.barrier_failures,
+            }
+        return out

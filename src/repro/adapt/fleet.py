@@ -108,6 +108,8 @@ class SimulatedFleet:
         )
         #: per-microbatch execution cost of each host (seconds, synthetic)
         self.costs: dict[int, float] = {h: float(per_micro_seconds) for h in range(n_hosts)}
+        #: nominal (fault-free) costs — what :meth:`restore_host` returns to
+        self.nominal_costs: dict[int, float] = dict(self.costs)
         self.run_pipeline = run_pipeline
         self.micro_batch = micro_batch
         self.feature_dim = feature_dim
@@ -128,6 +130,22 @@ class SimulatedFleet:
         if host not in self.costs:
             raise ValueError(f"unknown host {host}")
         self.costs[host] *= float(factor)
+
+    def hang_host(self, host: int, factor: float = 1000.0) -> None:
+        """Inject a (near-)hang: the host still answers the transport but its
+        steps take ``factor``× nominal — a wedged accelerator or livelocked
+        rank.  Finite on purpose: the reduction still sees samples, so the
+        response policy (derate → evict backstop) is what ends the stall."""
+        if host not in self.costs:
+            raise ValueError(f"unknown host {host}")
+        self.costs[host] = self.nominal_costs[host] * float(factor)
+
+    def restore_host(self, host: int) -> None:
+        """Clear injected degradation: cost returns to nominal (the fault —
+        noisy neighbor, thermal throttle — passed)."""
+        if host not in self.costs:
+            raise ValueError(f"unknown host {host}")
+        self.costs[host] = self.nominal_costs[host]
 
     # -- one fleet step ------------------------------------------------------------
     def run_step(self, step: int) -> dict[int, float]:
@@ -239,6 +257,7 @@ class SimulatedFleet:
             self.evicted.append(host)
             self.meshes.pop(host, None)
             self.costs.pop(host, None)
+            self.nominal_costs.pop(host, None)
             self.last_step_seconds.pop(host, None)
             self.mesh_generation += 1
         self.meshes = {h: local_mesh((1,), ("pod",)) for h in self.plan.hosts}

@@ -118,6 +118,14 @@ class StragglerResponse:
         launcher rebuilds the mesh), ``on_restage(host, stage, depths,
         report)`` after a stage-boundary move (where the launcher re-packs
         stage parameters via :meth:`~repro.dist.pipeline.StagePlan.pack`).
+    evict_barrier:
+        Optional checkpoint-before-evict gate: ``evict_barrier(step, report)``
+        must make the fleet safe to shrink (durably checkpoint) and return the
+        :class:`ControlAction` describing what it did — recorded *before* the
+        ``evict`` row — or ``None`` to veto.  On a veto the eviction is
+        deferred, not cancelled: the streak is left growing, so the next
+        flagged check retries the barrier.  Typically
+        :meth:`repro.adapt.checkpoint.CheckpointControl.evict_barrier`.
     """
 
     def __init__(
@@ -136,6 +144,7 @@ class StragglerResponse:
         on_rebalance: Callable[[int, float, StragglerReport], None] | None = None,
         on_evict: Callable[[int, StragglerReport], None] | None = None,
         on_restage: Callable[[int, int, dict[int, int], StragglerReport], None] | None = None,
+        evict_barrier: Callable[[int, StragglerReport], ControlAction | None] | None = None,
     ) -> None:
         if check_every < 1:
             raise ValueError(f"check_every must be >= 1, got {check_every}")
@@ -165,6 +174,10 @@ class StragglerResponse:
         self.on_rebalance = on_rebalance
         self.on_evict = on_evict
         self.on_restage = on_restage
+        self.evict_barrier = evict_barrier
+        #: evictions vetoed by the barrier (save not yet durable) — each one
+        #: is a deferral, retried on the next flagged check
+        self.deferred_evictions = 0
         self.channels = tuple(
             f"DIST/host{h}::step" for h in range(detector.n_hosts)
         )
@@ -202,9 +215,7 @@ class StragglerResponse:
         actions: list[ControlAction] = []
         for host in sorted(flagged):
             self._streak[host] = self._streak.get(host, 0) + 1
-            action = self._respond(step, host, report, shares)
-            if action is not None:
-                actions.append(action)
+            actions.extend(self._respond(step, host, report, shares))
         for host in self.plan.hosts:
             if host not in flagged:
                 if self._owns_stage(host):
@@ -305,32 +316,32 @@ class StragglerResponse:
 
     def _respond(
         self, step: int, host: int, report: StragglerReport, shares: Mapping[int, float]
-    ) -> ControlAction | None:
+    ) -> list[ControlAction]:
         plan = self.plan
         streak = self._streak[host]
         if streak < self.confirm_after:
-            return None  # not yet confirmed: wait out transients
+            return []  # not yet confirmed: wait out transients
         weight = plan.weights.get(host)
         if weight is None:  # host not in this plan (already gone)
-            return None
+            return []
         slowdown = self._unit_slowdown(host, report, shares)
         if slowdown is None or slowdown <= self.detector.threshold:
             # the raw-step-time flag was share-induced, not per-unit slowness
             self._streak[host] = 0
-            return None
+            return []
         if self._owns_stage(host):
             # a stage owner's work is depth-bound: move its boundary; when
             # the boundary cannot move further, a share derate would shed no
             # work, so escalation goes straight to the eviction backstop
             restaged = self._try_restage(step, host, report, slowdown)
             if restaged is not None:
-                return restaged
+                return [restaged]
             if streak >= self.evict_after and len(plan.weights) > 1:
-                return self._evict(step, host, report, slowdown)
-            return None
+                return self._evict_with_barrier(step, host, report, slowdown)
+            return []
         at_floor = weight <= self.min_weight * (1.0 + 1e-9)
         if (at_floor or streak >= self.evict_after) and len(plan.weights) > 1:
-            return self._evict(step, host, report, slowdown)
+            return self._evict_with_barrier(step, host, report, slowdown)
         desired = self._target_weight(host, slowdown)
         if desired >= weight * (1.0 - self.rel_tol):
             # Weight already matches the degraded capacity, yet the host is
@@ -343,21 +354,41 @@ class StragglerResponse:
             #    is exactly the case the evict_after backstop exists for.
             shed = self._weight_dropping_share(host)
             if shed is None:
-                return None
+                return []
             desired = shed
         self._set_weight(host, desired, report)
-        return ControlAction(
-            step=step,
-            controller=self.name,
-            trigger=f"DIST/host{host}::step",
-            action="rebalance",
-            detail={
-                "host": host,
-                "slowdown": round(slowdown, 3),
-                "weight": round(desired, 4),
-                "shares": plan.shares(),
-            },
-        )
+        return [
+            ControlAction(
+                step=step,
+                controller=self.name,
+                trigger=f"DIST/host{host}::step",
+                action="rebalance",
+                detail={
+                    "host": host,
+                    "slowdown": round(slowdown, 3),
+                    "weight": round(desired, 4),
+                    "shares": plan.shares(),
+                },
+            )
+        ]
+
+    def _evict_with_barrier(
+        self, step: int, host: int, report: StragglerReport, slowdown: float
+    ) -> list[ControlAction]:
+        """Run the checkpoint-before-evict barrier, then evict.
+
+        Eviction is irreversible (the mesh rebuilds without the host), so the
+        barrier's durable save must land *first*.  A ``None`` from the barrier
+        vetoes this check's eviction — the streak is deliberately left intact,
+        so the next flagged check retries; a wedged checkpoint path therefore
+        delays shrinking the fleet instead of shrinking it unsafely."""
+        if self.evict_barrier is not None:
+            barrier_action = self.evict_barrier(step, report)
+            if barrier_action is None:
+                self.deferred_evictions += 1
+                return []
+            return [barrier_action, self._evict(step, host, report, slowdown)]
+        return [self._evict(step, host, report, slowdown)]
 
     def _try_restage(
         self, step: int, host: int, report: StragglerReport, slowdown: float

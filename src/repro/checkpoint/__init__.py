@@ -1,4 +1,17 @@
-from .io import load_checkpoint, save_checkpoint
+from .io import CheckpointCorrupt, load_checkpoint, save_checkpoint, validate_checkpoint
 from .manager import CheckpointManager
+from .resume import CheckpointRecord, ResumePlan, plan_resume, scan_checkpoints
+from .retention import RetentionPolicy
 
-__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+__all__ = [
+    "CheckpointCorrupt",
+    "CheckpointManager",
+    "CheckpointRecord",
+    "ResumePlan",
+    "RetentionPolicy",
+    "load_checkpoint",
+    "plan_resume",
+    "save_checkpoint",
+    "scan_checkpoints",
+    "validate_checkpoint",
+]

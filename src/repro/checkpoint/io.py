@@ -1,11 +1,19 @@
-"""Sharded, atomic checkpoint serialization.
+"""Sharded, atomic checkpoint serialization with verifiable manifests.
 
 Layout: one directory per checkpoint (``step_00000123/``) containing one .npy
-per leaf plus ``manifest.json`` (tree skeleton, shapes, dtypes, CRC32 per leaf,
-user metadata).  Writes go to a ``.tmp`` sibling and are published with an
-atomic ``os.replace`` after a COMMIT marker — a crash mid-write can never leave
-a readable-but-corrupt checkpoint.  CRCs are verified at load; corrupt or
-uncommitted directories are skipped by the manager.
+per leaf plus ``manifest.json`` (tree skeleton, shapes, dtypes, per-leaf
+sha256 + CRC32 + byte size, user metadata).  Writes go to a ``.tmp`` sibling
+and are published with an atomic ``os.replace`` after a COMMIT marker — a
+crash mid-write can never leave a readable-but-corrupt checkpoint, only a
+stale ``.tmp`` the resume scan quarantines.
+
+Integrity is hashed **during** the write: every chunk numpy streams to disk
+passes through a tee that updates sha256/CRC32 as it goes, so a multi-GB leaf
+is never re-read (or held twice) just to fingerprint it.  The read side
+mirrors that: :func:`validate_checkpoint` re-hashes leaf files in fixed-size
+chunks — without ever deserializing an array — and raises
+:class:`CheckpointCorrupt` with a machine-readable ``reason`` (the string the
+quarantine layer writes into the corrupt checkpoint's reason file).
 
 Restart elasticity: leaves are stored as *global* arrays (this container is a
 single host).  On a multi-host deployment each host would write its address-
@@ -16,6 +24,7 @@ mesh works.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import zlib
@@ -24,10 +33,18 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "checkpoint_nbytes"]
+__all__ = [
+    "CheckpointCorrupt",
+    "checkpoint_nbytes",
+    "load_checkpoint",
+    "save_checkpoint",
+    "validate_checkpoint",
+]
 
 _MANIFEST = "manifest.json"
 _COMMIT = "COMMITTED"
+#: chunk size for streamed verification reads (bounded peak memory per leaf)
+_HASH_CHUNK = 1 << 20
 
 #: dtypes that np.save/np.load roundtrip natively
 _NUMPY_NATIVE = frozenset(
@@ -71,6 +88,42 @@ def checkpoint_nbytes(tree) -> int:
     )
 
 
+class _HashingWriter:
+    """File-object tee: hashes every chunk ``np.save`` writes, as it writes.
+
+    Not a real file object on purpose — numpy's ``isfileobj`` check fails for
+    it, so ``write_array`` takes the buffered path and streams the array in
+    bounded chunks through :meth:`write` instead of ``tofile``; sha256/CRC32
+    therefore cover exactly the bytes on disk with no second read pass.
+    """
+
+    __slots__ = ("_f", "sha256", "crc32", "nbytes")
+
+    def __init__(self, f) -> None:
+        self._f = f
+        self.sha256 = hashlib.sha256()
+        self.crc32 = 0
+        self.nbytes = 0
+
+    def write(self, data) -> int:
+        view = memoryview(data) if not isinstance(data, (bytes, bytearray)) else data
+        self.sha256.update(view)
+        self.crc32 = zlib.crc32(view, self.crc32)
+        self.nbytes += len(view)
+        return self._f.write(data)
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed validation.  ``reason`` is the machine-readable
+    category (``missing_commit``, ``missing_manifest``, ``manifest_unreadable``,
+    ``missing_leaf``, ``leaf_size_mismatch``, ``leaf_hash_mismatch``) used for
+    quarantine reason files and the ``ckpt_validation_failures`` counter."""
+
+    def __init__(self, message: str, reason: str = "corrupt") -> None:
+        super().__init__(message)
+        self.reason = reason
+
+
 def save_checkpoint(
     directory: str,
     step: int,
@@ -105,33 +158,41 @@ def save_checkpoint(
             arr = arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
         fname = f"leaf_{i:05d}.npy"
         path = os.path.join(tmp, fname)
-        np.save(path, arr)
-        with open(path, "rb") as f:
-            crc = zlib.crc32(f.read())
+        with open(path, "wb") as f:
+            tee = _HashingWriter(f)
+            np.save(tee, arr)
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
         files.append(
             {
                 "file": fname,
                 "shape": list(arr.shape),
                 "dtype": logical_dtype,
                 "stored_dtype": str(arr.dtype),
-                "crc32": crc,
+                "nbytes": tee.nbytes,
+                "crc32": tee.crc32,
+                "sha256": tee.sha256.hexdigest(),
             }
         )
         total += arr.nbytes
-        if fsync:
-            with open(path, "rb") as f:
-                os.fsync(f.fileno())
     manifest = {
         "step": step,
         "skeleton": skel,
         "leaves": files,
         "metadata": metadata or {},
-        "format_version": 1,
+        "format_version": 2,
     }
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     with open(os.path.join(tmp, _COMMIT), "w") as f:
         f.write("ok")
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     if os.path.exists(final):
         import shutil
 
@@ -140,25 +201,87 @@ def save_checkpoint(
     return final, total
 
 
-class CheckpointCorrupt(RuntimeError):
-    pass
+def _stream_digests(path: str) -> tuple[str, int, int]:
+    """(sha256 hex, crc32, nbytes) of a file, read in bounded chunks."""
+    sha = hashlib.sha256()
+    crc = 0
+    nbytes = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(_HASH_CHUNK)
+            if not chunk:
+                break
+            sha.update(chunk)
+            crc = zlib.crc32(chunk, crc)
+            nbytes += len(chunk)
+    return sha.hexdigest(), crc, nbytes
+
+
+def validate_checkpoint(path: str) -> dict[str, Any]:
+    """Structurally and cryptographically validate one checkpoint directory.
+
+    Returns the parsed manifest on success.  Raises :class:`CheckpointCorrupt`
+    (with ``reason`` set) the moment any check fails — commit marker, manifest
+    presence/parse, leaf presence, byte size, then content hash.  No array is
+    ever deserialized: a corrupt checkpoint is rejected *before* anything is
+    loaded, and the streamed re-hash keeps peak memory at one chunk.
+    """
+    if not os.path.isdir(path):
+        raise CheckpointCorrupt(f"{path}: not a checkpoint directory", "missing_directory")
+    if not os.path.exists(os.path.join(path, _COMMIT)):
+        raise CheckpointCorrupt(f"{path}: missing commit marker", "missing_commit")
+    mpath = os.path.join(path, _MANIFEST)
+    if not os.path.exists(mpath):
+        raise CheckpointCorrupt(f"{path}: missing manifest", "missing_manifest")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        entries = manifest["leaves"]
+        _ = manifest["skeleton"], manifest["step"]
+    except (json.JSONDecodeError, KeyError, TypeError, UnicodeDecodeError) as exc:
+        raise CheckpointCorrupt(
+            f"{mpath}: unreadable manifest ({exc})", "manifest_unreadable"
+        ) from exc
+    for entry in entries:
+        fpath = os.path.join(path, entry["file"])
+        if not os.path.exists(fpath):
+            raise CheckpointCorrupt(f"{fpath}: missing leaf file", "missing_leaf")
+        expected_nbytes = entry.get("nbytes")
+        if expected_nbytes is not None and os.path.getsize(fpath) != expected_nbytes:
+            raise CheckpointCorrupt(
+                f"{fpath}: size {os.path.getsize(fpath)} != manifest {expected_nbytes}",
+                "leaf_size_mismatch",
+            )
+        sha, crc, _n = _stream_digests(fpath)
+        expected_sha = entry.get("sha256")
+        if expected_sha is not None:
+            if sha != expected_sha:
+                raise CheckpointCorrupt(f"{fpath}: sha256 mismatch", "leaf_hash_mismatch")
+        elif crc != entry["crc32"]:  # format_version 1 fallback
+            raise CheckpointCorrupt(f"{fpath}: CRC mismatch", "leaf_hash_mismatch")
+    return manifest
 
 
 def load_checkpoint(
     path: str, shardings: Any | None = None, verify: bool = True
 ) -> tuple[int, Any, dict[str, Any]]:
-    """Load one checkpoint directory. Returns (step, tree, metadata)."""
-    if not os.path.exists(os.path.join(path, _COMMIT)):
-        raise CheckpointCorrupt(f"{path}: missing commit marker")
-    with open(os.path.join(path, _MANIFEST)) as f:
-        manifest = json.load(f)
+    """Load one checkpoint directory. Returns (step, tree, metadata).
+
+    With ``verify=True`` (default) the directory passes the full
+    :func:`validate_checkpoint` gate *before* any ``np.load`` — corrupt data
+    is never deserialized.  ``verify=False`` skips re-hashing for callers that
+    just validated (e.g. the manager's resume path).
+    """
+    if verify:
+        manifest = validate_checkpoint(path)
+    else:
+        if not os.path.exists(os.path.join(path, _COMMIT)):
+            raise CheckpointCorrupt(f"{path}: missing commit marker", "missing_commit")
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
     leaves = []
     for entry in manifest["leaves"]:
         fpath = os.path.join(path, entry["file"])
-        if verify:
-            with open(fpath, "rb") as f:
-                if zlib.crc32(f.read()) != entry["crc32"]:
-                    raise CheckpointCorrupt(f"{fpath}: CRC mismatch")
         arr = np.load(fpath)
         if entry.get("stored_dtype", entry["dtype"]) != entry["dtype"]:
             import ml_dtypes  # noqa: F401 - registers bf16/fp8 numpy dtypes

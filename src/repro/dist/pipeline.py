@@ -154,6 +154,22 @@ class MicrobatchPlan:
             raise ValueError("plan has no hosts")
         return _largest_remainder(self.weights, self.n_micro)
 
+    def retarget(self, hosts: Iterable[int]) -> MicrobatchPlan:
+        """Re-apportion onto a different host set (restore into an N→M
+        topology).  Hosts present in both keep their learned capacity
+        weights; new hosts enter at the carried mean weight, so a restored
+        fleet neither punishes newcomers nor forgets which survivors were
+        derated.  The largest-remainder :meth:`shares` then re-splits the
+        same ``n_micro`` across the new set."""
+        hosts = [int(h) for h in hosts]
+        if not hosts:
+            raise ValueError("cannot retarget onto an empty host set")
+        mean = sum(self.weights.values()) / len(self.weights)
+        return MicrobatchPlan(
+            n_micro=self.n_micro,
+            weights={h: float(self.weights.get(h, mean)) for h in hosts},
+        )
+
     def share(self, host: int) -> int:
         return self.shares()[host]
 
@@ -214,6 +230,26 @@ class StagePlan:
     def depths(self) -> dict[int, int]:
         """{stage: layer count}; counts sum to ``n_layers``, each >= 1."""
         return _largest_remainder(self.weights, self.n_layers)
+
+    def retarget(self, stages: Iterable[int]) -> StagePlan:
+        """Re-apportion the same ``n_layers`` onto a different stage set
+        (restore into an N→M pipeline).  Stages present in both keep their
+        learned capacity weights; new stages enter at the carried mean, and
+        :meth:`depths` re-splits the layer stack — the flat per-layer
+        parameter checkpoint then :meth:`pack`\\ s into the new topology
+        without any tensor surgery."""
+        stages = [int(s) for s in stages]
+        if not stages:
+            raise ValueError("cannot retarget onto an empty stage set")
+        if self.n_layers < len(stages):
+            raise ValueError(
+                f"n_layers={self.n_layers} cannot cover {len(stages)} stages"
+            )
+        mean = sum(self.weights.values()) / len(self.weights)
+        return StagePlan(
+            n_layers=self.n_layers,
+            weights={s: float(self.weights.get(s, mean)) for s in stages},
+        )
 
     def boundaries(self) -> dict[int, tuple[int, int]]:
         """{stage: [start, stop) layer range} in stage order."""

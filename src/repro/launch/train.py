@@ -76,6 +76,11 @@ class TrainSettings:
     ckpt_max_interval_s: float = 60.0
     ckpt_synchronous: bool = False
     ckpt_delay_s: float = 0.0            # injected write latency (experiments)
+    ckpt_keep_n: int = 3                 # retention: keep the newest N
+    ckpt_keep_every_k: int = 0           # retention: also keep step % k == 0
+    #: preemption grace period: SIGTERM triggers a deadline-bounded emergency
+    #: save through the manager's chained handler (None installs no deadline)
+    save_deadline_s: float | None = None
     queue_seconds: float | None = None
     eval_every: int = 0
     report_every: int = 25
@@ -176,6 +181,45 @@ def run_training(
     ckpt_active = bool(settings.ckpt_dir) and settings.ckpt_mode != "off"
     if ckpt_active:
         loop.register(ckpt_control)
+
+    def topology_meta() -> dict[str, Any]:
+        """Topology block stamped into every checkpoint's metadata — what a
+        resume into a *different* host/stage count re-apportions from."""
+        if not pipelined:
+            return {}
+        return {
+            "topology": {
+                "n_layers": settings.pipeline_layers,
+                "n_micro": settings.pipeline_micro,
+                "stage_weights": {
+                    int(k): float(v) for k, v in stage_plan.weights.items()
+                },
+            }
+        }
+
+    def current_state() -> dict[str, Any]:
+        return {
+            "params": st["params"],
+            "opt_state": st["opt_state"],
+            "data": st["loader"].state(),
+        }
+
+    def durable_save(step: int) -> float:
+        """Checkpoint-before-evict: write AND wait until durable (the barrier
+        contract — an eviction must never outrun its safety checkpoint)."""
+        if manager is None:
+            raise RuntimeError("no checkpoint manager bound")
+        t0 = time.monotonic()
+        with ckpt_write_scope:
+            manager.save(
+                step, current_state(),
+                metadata={"reason": "before_evict", **topology_meta()},
+            )
+            manager.wait()
+        return time.monotonic() - t0
+
+    if ckpt_active:
+        ckpt_control.bind_durable_save(durable_save)
     # single-process topology: this host feeds its own EVOL step timer into the
     # reduction; multi-host launchers hand the detector a transport instead and
     # every host publishes through it.  On the pipeline path the response
@@ -196,6 +240,7 @@ def run_training(
             local_feed=(0, "EVOL/trainer::train_step"),
             stage_plan=stage_plan,
             stage_for_host={0: 0} if pipelined else None,
+            evict_barrier=ckpt_control.evict_barrier if ckpt_active else None,
         )
     )
     sch.attach_control_loop(loop, bin="ANALYSIS")
@@ -264,6 +309,8 @@ def run_training(
         if settings.ckpt_dir:
             manager = CheckpointManager(
                 settings.ckpt_dir,
+                keep_n=settings.ckpt_keep_n,
+                keep_every_k=settings.ckpt_keep_every_k,
                 synchronous=settings.ckpt_synchronous,
                 delay_s=settings.ckpt_delay_s,
             )
@@ -274,6 +321,28 @@ def run_training(
             s["params"] = tree["params"]
             s["opt_state"] = tree["opt_state"]
             s.iteration = start_step
+            topo = (meta or {}).get("topology")
+            if (
+                pipelined
+                and topo
+                and int(topo.get("n_layers", -1)) == settings.pipeline_layers
+            ):
+                # N->M topology restore: re-apportion the saved stage capacity
+                # weights onto the *current* stage set.  The parameter stack is
+                # flat per-layer, so adopting the retargeted weights in place
+                # is all it takes — the next step's pack() splits the same
+                # layers along the new boundaries.  (Manifest JSON stringifies
+                # the stage keys; convert back.)
+                saved = StagePlan(
+                    n_layers=settings.pipeline_layers,
+                    weights={
+                        int(k): float(v)
+                        for k, v in topo["stage_weights"].items()
+                    },
+                )
+                adopted = saved.retarget(range(settings.pipeline_stages))
+                stage_plan.weights.clear()
+                stage_plan.weights.update(adopted.weights)
             print(f"[train] restored checkpoint at step {start_step}")
         else:
             with sess.scope_handle("STARTUP/init_params"):
@@ -291,10 +360,25 @@ def run_training(
             s["opt_state"] = jax.device_put(s["opt_state"], built.in_shardings[1])
         s["loader"] = DataLoader(source, start_step=start_step)
 
+        if manager is not None:
+            # installed only once live state exists — a preemption mid-restore
+            # has nothing durable to add anyway
+            try:
+                manager.install_sigterm_handler(
+                    lambda: (st.iteration, current_state()),
+                    deadline_s=settings.save_deadline_s,
+                )
+            except ValueError:
+                pass  # not the main thread: signals unavailable, skip the hook
+
         ckpt_control.start_run(time.monotonic())
         if settings.monitor_port is not None:
             monitor = MonitorServer(settings.monitor_port, db, registry,
-                                    status_fn=lambda: {"iteration": st.iteration})
+                                    status_fn=lambda: {"iteration": st.iteration},
+                                    checkpoint_fn=(
+                                        manager.status_payload
+                                        if manager is not None else None
+                                    ))
             port = monitor.start()
             print(f"[train] monitor at http://127.0.0.1:{port}/")
         registry.freeze()
@@ -345,9 +429,8 @@ def run_training(
         with ckpt_write_scope:
             stats = manager.save(
                 s.iteration,
-                {"params": s["params"], "opt_state": s["opt_state"],
-                 "data": s["loader"].state()},
-                metadata={"reason": decision.reason},
+                current_state(),
+                metadata={"reason": decision.reason, **topology_meta()},
             )
         ckpt_control.observe_checkpoint(stats["blocking_seconds"], stats["nbytes"])
 
@@ -372,11 +455,10 @@ def run_training(
     def shutdown(s: RunState) -> None:
         if manager is not None and settings.ckpt_mode != "off":
             with ckpt_write_scope:
-                stats = manager.save(
+                manager.save(
                     s.iteration,
-                    {"params": s["params"], "opt_state": s["opt_state"],
-                     "data": s["loader"].state()},
-                    metadata={"reason": "final"},
+                    current_state(),
+                    metadata={"reason": "final", **topology_meta()},
                 )
             manager.wait()
             manager.close()
@@ -401,6 +483,13 @@ def run_training(
         "checkpoint": controller.summary() if controller else {},
         "ckpt_fraction": (
             ckpt_write_scope.seconds() / max(db.get("simulation/total").seconds(), 1e-9)
+        ),
+        # the resume picture the run started from (None on a cold start):
+        # which checkpoints validated, which were quarantined and why
+        "resume": (
+            manager.last_resume_plan.summary()
+            if manager is not None and manager.last_resume_plan is not None
+            else None
         ),
         "straggler_reports": len(detector.reports),
         "straggler_rows": straggler_rows(detector),
@@ -442,6 +531,12 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-every", type=int, default=512)
     ap.add_argument("--ckpt-max-fraction", type=float, default=0.05)
     ap.add_argument("--ckpt-sync", action="store_true")
+    ap.add_argument("--keep-n", type=int, default=3,
+                    help="retention: keep the newest N checkpoints")
+    ap.add_argument("--keep-every-k", type=int, default=0,
+                    help="retention: additionally keep every k-th step (0 = off)")
+    ap.add_argument("--save-deadline", type=float, default=None,
+                    help="SIGTERM grace period (s) for the emergency save")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--report", action="store_true", help="print the timer report")
     ap.add_argument("--monitor-port", type=int, default=None)
@@ -458,6 +553,8 @@ def main(argv=None) -> int:
         ckpt_mode=args.ckpt_mode, ckpt_every=args.ckpt_every,
         ckpt_max_fraction=args.ckpt_max_fraction,
         ckpt_synchronous=args.ckpt_sync, peak_lr=args.lr,
+        ckpt_keep_n=args.keep_n, ckpt_keep_every_k=args.keep_every_k,
+        save_deadline_s=args.save_deadline,
         monitor_port=args.monitor_port,
         pipeline_stages=args.pipeline_stages,
         pipeline_layers=args.pipeline_layers,

@@ -15,6 +15,10 @@ Endpoints:
                  occupancy, shed count, KV utilization) + per-request rows —
                  wire with ``serving_fn=engine.stats`` or the richer
                  ``serving_payload(engine)``
+    /checkpoints JSON checkpoint view: on-disk checkpoints, retention policy,
+                 quarantined (corrupt) entries with reasons, and the resume
+                 plan the run started from — wire with
+                 ``checkpoint_fn=manager.status_payload``
 
 Also provides :class:`StatusWriter`, which atomically writes the same payload to
 a JSON file for clusters where an open port is not possible.
@@ -86,11 +90,13 @@ class MonitorServer:
         params: ParamRegistry | None = None,
         status_fn: Callable[[], dict[str, Any]] | None = None,
         serving_fn: Callable[[], dict[str, Any]] | None = None,
+        checkpoint_fn: Callable[[], dict[str, Any]] | None = None,
     ) -> None:
         self._db = db if db is not None else timer_db()
         self._params = params if params is not None else param_registry()
         self._status_fn = status_fn or (lambda: {})
         self._serving_fn = serving_fn
+        self._checkpoint_fn = checkpoint_fn
         self._httpd: ThreadingHTTPServer | None = None
         self._thread: threading.Thread | None = None
         self._port = port
@@ -129,6 +135,13 @@ class MonitorServer:
                         self._send(404, b'{"error": "no serving engine wired"}')
                     else:
                         self._send(200, json.dumps(monitor._serving_fn()).encode())
+                elif self.path.startswith("/checkpoints"):
+                    if monitor._checkpoint_fn is None:
+                        self._send(404, b'{"error": "no checkpoint manager wired"}')
+                    else:
+                        self._send(
+                            200, json.dumps(monitor._checkpoint_fn()).encode()
+                        )
                 elif self.path == "/" or self.path.startswith("/index"):
                     sections = [format_report(monitor._db), format_tree_report(monitor._db)]
                     if monitor._serving_fn is not None:

@@ -793,3 +793,109 @@ def test_remove_host_on_real_devices_subprocess():
     )
     assert proc.returncode == 0, proc.stderr
     assert "REMOVE_HOST_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-before-evict barrier
+# ---------------------------------------------------------------------------
+
+
+def _drive_to_eviction(fleet, loop, host, max_steps=40):
+    fleet.slow_host(host, 50.0)
+    step = 0
+    while host in fleet.active_hosts() and step < max_steps:
+        fleet.run_step(step)
+        loop.poll(step)
+        step += 1
+    return step
+
+
+def test_checkpoint_before_evict_barrier_precedes_eviction(tmp_path):
+    """An eviction gated by CheckpointControl.evict_barrier performs a durable
+    save first, and the ADAPT/ log shows the checkpoint::before_evict row
+    immediately before the stragglers::evict row."""
+    from repro.checkpoint import CheckpointManager
+
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        3, 9, db=db, window=2, threshold=1.3, confirm_after=1,
+        evict_after=3, min_weight=0.5,
+    )
+    manager = CheckpointManager(str(tmp_path), synchronous=True)
+    ctrl = CheckpointControl(AdaptiveCheckpointPolicy(mode="adaptive"))
+    ctrl.start_run(0.0)
+
+    def durable_save(step):
+        manager.save(step, {"w": [float(step)]})
+        manager.wait()
+        return 0.01
+
+    ctrl.bind_durable_save(durable_save)
+    fleet.controller.evict_barrier = ctrl.evict_barrier
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+
+    _drive_to_eviction(fleet, loop, 2)
+
+    assert 2 not in fleet.active_hosts()
+    kinds = [(a.controller, a.action) for a in loop.actions]
+    evict_at = kinds.index(("stragglers", "evict"))
+    assert kinds[evict_at - 1] == ("checkpoint", "before_evict")
+    # the save is really on disk, durable, before the eviction committed
+    assert manager.checkpoints(), "barrier save never landed"
+    assert ctrl.barrier_saves == 1
+    # visible in the rendered ADAPT/ report like every other adaptation
+    assert "ADAPT/checkpoint::before_evict" in format_report(db, adapt=loop)
+    manager.close()
+
+
+def test_failed_barrier_defers_eviction_until_save_succeeds():
+    """A failing durable save vetoes the eviction (the fleet must not shrink
+    without a safety checkpoint); once the save path recovers, the still-
+    growing streak retries and the eviction proceeds."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        3, 9, db=db, window=2, threshold=1.3, confirm_after=1,
+        evict_after=3, min_weight=0.5,
+    )
+    ctrl = CheckpointControl(AdaptiveCheckpointPolicy(mode="adaptive"))
+    ctrl.start_run(0.0)
+    ctrl.bind_durable_save(lambda step: (_ for _ in ()).throw(OSError("disk full")))
+    fleet.controller.evict_barrier = ctrl.evict_barrier
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+
+    step = _drive_to_eviction(fleet, loop, 2, max_steps=12)
+
+    assert 2 in fleet.active_hosts(), "eviction must be deferred while saves fail"
+    assert fleet.controller.deferred_evictions >= 1
+    assert ctrl.barrier_failures >= 1
+    assert not [a for a in loop.actions if a.action == "evict"]
+
+    # the save path recovers -> the next flagged check evicts
+    ctrl.bind_durable_save(lambda s: 0.01)
+    while 2 in fleet.active_hosts() and step < 30:
+        fleet.run_step(step)
+        loop.poll(step)
+        step += 1
+    assert 2 not in fleet.active_hosts()
+    kinds = [(a.controller, a.action) for a in loop.actions]
+    assert ("checkpoint", "before_evict") in kinds
+    assert kinds.index(("checkpoint", "before_evict")) + 1 == kinds.index(
+        ("stragglers", "evict")
+    )
+
+
+def test_unbarriered_response_keeps_prior_semantics():
+    """No evict_barrier (the default) -> eviction behaves exactly as before."""
+    db = TimerDB()
+    fleet = SimulatedFleet(
+        3, 9, db=db, window=2, threshold=1.3, confirm_after=1,
+        evict_after=3, min_weight=0.5,
+    )
+    loop = ControlLoop(db)
+    loop.register(fleet.controller)
+    _drive_to_eviction(fleet, loop, 2)
+    assert 2 not in fleet.active_hosts()
+    assert fleet.controller.deferred_evictions == 0
+    assert not [a for a in loop.actions if a.controller == "checkpoint"]

@@ -111,3 +111,191 @@ def test_io_counter_channels_updated(tmp_path):
     mgr.save(0, _tree())
     mgr.close()
     assert counter_channel("io_bytes") > before
+
+
+def test_retention_keep_every_k(tmp_path):
+    """keep_last_n ∪ keep_every_k: milestones survive the rolling window."""
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, keep_every_k=4, synchronous=True)
+    for step in range(10):
+        mgr.save(step, {"x": np.full((8,), step, np.float32)})
+    steps = [s for s, _ in mgr.checkpoints()]
+    assert steps == [0, 4, 8, 9]  # every-4 milestones + newest 2
+    mgr.close()
+
+
+def test_retention_policy_semantics():
+    from repro.checkpoint import RetentionPolicy
+
+    pol = RetentionPolicy(keep_last_n=2, keep_every_k=5)
+    steps = [1, 3, 5, 7, 10, 11]
+    assert pol.keeps(steps) == {5, 10, 11}  # newest two ∪ multiples of 5
+    assert pol.doomed(steps) == [1, 3, 7]
+    # fewer checkpoints than the window: nothing doomed
+    assert RetentionPolicy(keep_last_n=5).doomed([1, 2]) == []
+    with pytest.raises(ValueError):
+        RetentionPolicy(keep_last_n=-1)
+
+
+def test_gc_never_deletes_newest_valid(tmp_path):
+    """Retention would keep only the 2 newest — but when those are corrupt,
+    the newest checkpoint that actually validates is exempt from deletion."""
+    # write 5 checkpoints directly (no inline GC), then corrupt the 2 newest —
+    # exactly the ones a keep_n=2 policy would preserve
+    for step in range(1, 6):
+        save_checkpoint(str(tmp_path), step, {"x": np.full((8,), step, np.float32)})
+    for step in (4, 5):
+        os.remove(os.path.join(str(tmp_path), f"step_{step:08d}", "COMMITTED"))
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, synchronous=True)
+    deleted = mgr.gc()
+    assert 3 not in deleted, "newest valid checkpoint must never be GC'd"
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_00000003"))
+    step, tree, _ = mgr.restore_latest()
+    assert step == 3 and float(tree["x"][0]) == 3.0
+    mgr.close()
+
+
+def test_restore_quarantines_with_reason_and_counts(tmp_path):
+    """restore_latest never silently skips: the corrupt directory is moved to
+    corrupt/ with a REASON.txt and the failure counter is bumped."""
+    from repro.core.clocks import counter_channel
+
+    mgr = CheckpointManager(str(tmp_path), synchronous=True)
+    mgr.save(1, _tree())
+    mgr.save(2, _tree())
+    newest = mgr.checkpoints()[-1][1]
+    os.remove(os.path.join(newest, "COMMITTED"))
+    before = counter_channel("ckpt_validation_failures")
+    step, _, _ = mgr.restore_latest()
+    assert step == 1
+    assert counter_channel("ckpt_validation_failures") == before + 1
+    q = mgr.quarantined()
+    assert len(q) == 1 and q[0]["reason"] == "missing_commit"
+    assert mgr.last_resume_plan.summary()["n_quarantined"] == 1
+    mgr.close()
+
+
+def test_sha256_manifest_and_streamed_validation(tmp_path):
+    """v2 manifests carry per-leaf sha256 + size, hashed during the write."""
+    import json
+
+    from repro.checkpoint import validate_checkpoint
+
+    path, _ = save_checkpoint(str(tmp_path), 3, _tree())
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format_version"] == 2
+    for leaf in manifest["leaves"]:
+        assert len(leaf["sha256"]) == 64 and leaf["nbytes"] > 0
+    assert validate_checkpoint(path)["step"] == 3
+
+
+def test_manager_status_payload(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, synchronous=True)
+    mgr.save(1, _tree())
+    payload = mgr.status_payload()
+    assert payload["retention"]["keep_last_n"] == 2
+    assert [c["step"] for c in payload["checkpoints"]] == [1]
+    assert payload["totals"]["n_saves"] == 1
+    mgr.close()
+
+
+def test_concurrent_scans_during_async_writes(tmp_path):
+    """The fs-lock discipline: scans/restores race the async writer's GC
+    without tripping over half-deleted directories."""
+    import threading
+
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, synchronous=False)
+    errors = []
+
+    def scanner():
+        try:
+            for _ in range(60):
+                mgr.checkpoints()
+                mgr.resume_plan(quarantine=False)
+        except Exception as exc:  # noqa: BLE001 - the test asserts none happen
+            errors.append(exc)
+
+    threads = [threading.Thread(target=scanner) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for step in range(12):
+        mgr.save(step, {"x": np.full((2048,), step, np.float32)})
+    mgr.wait()
+    for t in threads:
+        t.join()
+    assert not errors
+    steps = [s for s, _ in mgr.checkpoints()]
+    assert steps[-1] == 11 and len(steps) >= 2
+    mgr.close()
+
+
+def test_wait_timeout_keeps_pending(tmp_path):
+    """A timed-out wait must not drop the in-flight write: a later wait can
+    still make it durable."""
+    mgr = CheckpointManager(str(tmp_path), synchronous=False, delay_s=0.3)
+    mgr.save(0, {"x": np.zeros((8,), np.float32)})
+    with pytest.raises(TimeoutError):
+        mgr.wait(timeout=0.01)
+    mgr.wait()  # finishes the same write
+    assert [s for s, _ in mgr.checkpoints()] == [0]
+    mgr.close()
+
+
+_SIGTERM_CHAIN_SCRIPT = """\
+import os, signal, sys
+import numpy as np
+from repro.checkpoint import CheckpointManager
+
+mode = sys.argv[2]
+if mode == "chain":
+    def prior(signum, frame):
+        print("PRIOR_HANDLER_RAN", flush=True)
+        sys.exit(0)
+    signal.signal(signal.SIGTERM, prior)
+# mode == "default": leave SIG_DFL installed -> handler must re-kill
+
+mgr = CheckpointManager(sys.argv[1], synchronous=True)
+mgr.install_sigterm_handler(
+    lambda: (7, {"w": np.ones((8,), np.float32)}), deadline_s=5.0
+)
+os.kill(os.getpid(), signal.SIGTERM)
+print("UNREACHABLE", flush=True)
+"""
+
+
+def _run_sigterm_script(tmp_path, mode):
+    import subprocess
+    import sys as _sys
+
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    env = dict(os.environ, PYTHONPATH=src)
+    return subprocess.run(
+        [_sys.executable, "-c", _SIGTERM_CHAIN_SCRIPT, str(tmp_path), mode],
+        capture_output=True, text=True, timeout=300, env=env,
+    )
+
+
+def test_sigterm_handler_saves_then_chains_previous(tmp_path):
+    """Preemption: the emergency save lands AND the previously installed
+    handler still runs afterwards (chained, not clobbered)."""
+    proc = _run_sigterm_script(tmp_path, "chain")
+    assert proc.returncode == 0, proc.stderr
+    assert "PRIOR_HANDLER_RAN" in proc.stdout
+    assert "UNREACHABLE" not in proc.stdout
+    step, tree, meta = load_checkpoint(os.path.join(str(tmp_path), "step_00000007"))
+    assert step == 7 and meta["emergency"] is True and meta["met_deadline"] is True
+    np.testing.assert_array_equal(tree["w"], np.ones((8,), np.float32))
+
+
+def test_sigterm_handler_saves_then_default_terminates(tmp_path):
+    """With SIG_DFL previously installed, the handler saves and then re-raises
+    the default termination (exit by signal, not a normal return)."""
+    import signal as _signal
+
+    proc = _run_sigterm_script(tmp_path, "default")
+    assert proc.returncode == -_signal.SIGTERM
+    assert "UNREACHABLE" not in proc.stdout
+    step, _, meta = load_checkpoint(os.path.join(str(tmp_path), "step_00000007"))
+    assert step == 7 and meta["emergency"] is True

@@ -1,0 +1,164 @@
+"""Fault injection vs the hardened checkpoint layer: every corruption in the
+matrix must be *detected at validation time* (never loaded), quarantined with
+a machine-readable reason, counted, and recovered past."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorrupt,
+    CheckpointManager,
+    plan_resume,
+    save_checkpoint,
+    scan_checkpoints,
+    validate_checkpoint,
+)
+from repro.faults import (
+    CHECKPOINT_FAULTS,
+    FaultEvent,
+    FaultPlan,
+    apply_checkpoint_event,
+    bit_flip_leaf,
+    drop_commit,
+    drop_leaf,
+    drop_manifest,
+    partial_manifest,
+    seeded_rng,
+    simulate_writer_kill,
+    truncate_leaf,
+)
+
+
+def _tree(step: int = 0):
+    return {
+        "w": np.arange(256, dtype=np.float32) + step,
+        "b": np.full((32,), float(step), np.float32),
+    }
+
+
+def _two_checkpoints(root) -> tuple[str, str]:
+    old, _ = save_checkpoint(str(root), 1, _tree(1))
+    new, _ = save_checkpoint(str(root), 2, _tree(2))
+    return old, new
+
+
+#: the corruption matrix: injector -> the reason validation must report
+MATRIX = [
+    (lambda p: bit_flip_leaf(p, 0, rng=seeded_rng(7)), "leaf_hash_mismatch"),
+    (lambda p: truncate_leaf(p, 0), "leaf_size_mismatch"),
+    (lambda p: drop_leaf(p, 0), "missing_leaf"),
+    (drop_manifest, "missing_manifest"),
+    (partial_manifest, "manifest_unreadable"),
+    (drop_commit, "missing_commit"),
+]
+
+
+@pytest.mark.parametrize(
+    "injector,reason", MATRIX, ids=[r for _, r in MATRIX]
+)
+def test_corruption_detected_quarantined_recovered(tmp_path, injector, reason):
+    _, newest = _two_checkpoints(tmp_path)
+    injector(newest)
+    # 1. detected at validation time, with the right reason, without loading
+    with pytest.raises(CheckpointCorrupt) as exc_info:
+        validate_checkpoint(newest)
+    assert exc_info.value.reason == reason
+    # 2. the resume plan quarantines it (REASON.txt) and selects the fallback
+    plan = plan_resume(str(tmp_path), quarantine=True)
+    assert plan.selected is not None and plan.selected.step == 1
+    assert [r.reason for r in plan.corrupt] == [reason]
+    quarantined = os.path.join(str(tmp_path), "corrupt", "step_00000002")
+    assert os.path.isdir(quarantined)
+    with open(os.path.join(quarantined, "REASON.txt")) as f:
+        assert reason in f.read()
+    # 3. a manager restore recovers past it to the last known good
+    mgr = CheckpointManager(str(tmp_path), synchronous=True)
+    step, tree, _ = mgr.restore_latest()
+    assert step == 1
+    np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+    mgr.close()
+
+
+def test_validation_failures_counted_and_reported(tmp_path):
+    from repro.core.clocks import counter_channel
+    from repro.core.timers import timer_db
+
+    _, newest = _two_checkpoints(tmp_path)
+    drop_commit(newest)
+    before = counter_channel("ckpt_validation_failures")
+    plan_resume(str(tmp_path), quarantine=True)
+    assert counter_channel("ckpt_validation_failures") == before + 1
+    # the quarantine reason lands as a CHECKPOINT/ count row in the timer DB
+    assert timer_db().exists("CHECKPOINT/quarantine::missing_commit")
+
+
+def test_stale_tmp_debris_quarantined(tmp_path):
+    """A SIGKILLed writer can only leave a ``.tmp`` directory; the scanner
+    must classify it as ``stale_tmp`` and the resume sweep it aside."""
+    _two_checkpoints(tmp_path)
+    debris = simulate_writer_kill(str(tmp_path), 3, rng=seeded_rng(3))
+    records = scan_checkpoints(str(tmp_path))
+    assert {r.reason for r in records if r.status != "valid"} == {"stale_tmp"}
+    plan = plan_resume(str(tmp_path), quarantine=True)
+    assert plan.selected.step == 2
+    assert not os.path.exists(debris)
+    assert os.path.isdir(os.path.join(str(tmp_path), "corrupt"))
+
+
+def test_every_plan_kind_dispatches(tmp_path):
+    """``apply_checkpoint_event`` covers the whole matrix: each kind leaves
+    the target either invalid or (kill_writer) with stale debris."""
+    for kind in CHECKPOINT_FAULTS:
+        root = tmp_path / kind
+        root.mkdir()
+        path, _ = save_checkpoint(str(root), 1, _tree())
+        event = FaultEvent(step=0, kind=kind, target=0)
+        touched = apply_checkpoint_event(event, path, rng=seeded_rng(kind))
+        if kind == "kill_writer":
+            assert touched.endswith(".tmp") and os.path.isdir(touched)
+            validate_checkpoint(path)  # original untouched
+        else:
+            with pytest.raises(CheckpointCorrupt):
+                validate_checkpoint(path)
+
+
+def test_fault_plan_deterministic():
+    a = FaultPlan.random(11, 500, hosts=(0, 1, 2))
+    b = FaultPlan.random(11, 500, hosts=(0, 1, 2))
+    assert a.events == b.events
+    assert len(a.events) > 0
+    # per-event RNG replays identically and independently of plan order
+    event = a.events[0]
+    assert a.rng_for(event).random() == b.rng_for(event).random()
+    c = FaultPlan.random(12, 500, hosts=(0, 1, 2))
+    assert c.events != a.events
+
+
+def test_fleet_faults_roundtrip():
+    from repro.adapt.fleet import SimulatedFleet
+    from repro.faults import apply_fleet_event
+
+    fleet = SimulatedFleet(2, 4)
+    nominal = dict(fleet.costs)
+    apply_fleet_event(FaultEvent(step=0, kind="hang_host", target=1), fleet)
+    assert fleet.costs[1] == nominal[1] * 1000.0
+    apply_fleet_event(FaultEvent(step=1, kind="slow_host", target=0, arg=3.0), fleet)
+    assert fleet.costs[0] == nominal[0] * 3.0
+    apply_fleet_event(FaultEvent(step=2, kind="restore_host", target=0), fleet)
+    apply_fleet_event(FaultEvent(step=2, kind="restore_host", target=1), fleet)
+    assert fleet.costs == nominal
+
+
+def test_bitflip_deterministic_from_seed(tmp_path):
+    """Same seed, same flip: a failing soak replays byte-for-byte."""
+    flips = []
+    for name in ("a", "b"):
+        root = tmp_path / name
+        root.mkdir()
+        path, _ = save_checkpoint(str(root), 1, _tree())
+        bit_flip_leaf(path, rng=seeded_rng(99))
+        with open(os.path.join(path, "leaf_00000.npy"), "rb") as f:
+            flips.append(f.read())
+    assert flips[0] == flips[1]

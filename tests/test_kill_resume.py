@@ -1,0 +1,109 @@
+"""Kill-and-resume: SIGKILL a real training process at a (seeded) random step,
+rerun the same command, and assert the resumed loss trajectory is continuous —
+the re-executed steps land on the same losses as an uninterrupted reference
+run (bitwise-deterministic substrate, fixed LR horizon)."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.faults import seeded_rng
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+_DRIVER = """\
+import sys
+from repro.launch.train import TrainSettings, run_training
+
+ckpt_dir, log_path, steps = sys.argv[1], sys.argv[2], int(sys.argv[3])
+run_training(TrainSettings(
+    smoke=True, steps=steps, global_batch=2, seq_len=16,
+    ckpt_dir=ckpt_dir, ckpt_mode="fixed", ckpt_every=2, ckpt_synchronous=True,
+    report_every=0, log_path=log_path, lr_total_steps=steps,
+    pipeline_stages=1, pipeline_layers=4, pipeline_micro=2, pipeline_width=8,
+))
+"""
+
+_STEPS = 10
+
+
+def _losses(log_path: str) -> dict[int, float]:
+    out: dict[int, float] = {}
+    with open(log_path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            row = json.loads(line)
+            extra = row.get("extra") or {}
+            if "loss" in extra:
+                out[row["iteration"]] = extra["loss"]
+    return out
+
+
+def _run(script, ckpt, log, env, wait=True):
+    proc = subprocess.Popen(
+        [sys.executable, script, ckpt, log, str(_STEPS)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+    )
+    if wait:
+        out, _ = proc.communicate(timeout=300)
+        assert proc.returncode == 0, out
+        return out
+    return proc
+
+
+def test_sigkill_and_resume_trajectory_continuous(tmp_path):
+    script = tmp_path / "driver.py"
+    script.write_text(_DRIVER)
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    ckpt, log = str(tmp_path / "ckpt"), str(tmp_path / "train.jsonl")
+
+    # SIGKILL once at least `kill_after` steps are logged — random per the
+    # fault-plan RNG so the cut point is not tuned to the checkpoint cadence
+    kill_after = seeded_rng(0xFA17, "kill_step").randrange(3, _STEPS - 2)
+    proc = _run(str(script), ckpt, log, env, wait=False)
+    deadline = time.monotonic() + 240
+    try:
+        while time.monotonic() < deadline:
+            if proc.poll() is not None:
+                break
+            if os.path.exists(log) and len(_losses(log)) >= kill_after:
+                proc.send_signal(signal.SIGKILL)
+                break
+            time.sleep(0.1)
+        rc = proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert rc != 0, "the run must have died to the SIGKILL, not completed"
+    killed_losses = _losses(log)
+    assert len(killed_losses) >= kill_after, "kill landed before any progress"
+    ckpts = [d for d in os.listdir(ckpt) if d.startswith("step_") and not d.endswith(".tmp")]
+    assert ckpts, "no checkpoint survived the kill"
+
+    # resume: same command auto-restores from the newest valid checkpoint
+    out = _run(str(script), ckpt, log, env)
+    assert "restored checkpoint at step" in out
+    resumed_losses = _losses(log)
+    # log rows are 0-indexed per executed step: the last is steps - 1
+    assert max(resumed_losses) == _STEPS - 1, "resumed run did not reach the end"
+
+    # reference: uninterrupted run, fresh directory, same seed + LR horizon
+    ref_log = str(tmp_path / "ref.jsonl")
+    _run(str(script), str(tmp_path / "ref_ckpt"), ref_log, env)
+    ref_losses = _losses(ref_log)
+
+    # continuity: every step the resumed run executed after the restore point
+    # matches the uninterrupted trajectory
+    overlap = sorted(set(resumed_losses) & set(ref_losses))
+    assert len(overlap) >= 3
+    np.testing.assert_allclose(
+        [resumed_losses[i] for i in overlap],
+        [ref_losses[i] for i in overlap],
+        rtol=1e-5,
+    )

@@ -28,8 +28,9 @@ def test_steering_mid_run_changes_checkpoint_behavior(tmp_path):
     )
 
     # steer from another "client" after a few iterations: hook via a monkey
-    # routine that flips the registry at iteration 5
-    import repro.launch.train as T
+    # routine that flips the registry at iteration 5 (patch the class where it
+    # lives — train.py no longer re-imports Scheduler into its namespace)
+    import repro.core.schedule as T
 
     orig_run = T.Scheduler.run_bin
     fired = {"done": False}
