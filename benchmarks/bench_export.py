@@ -1,0 +1,125 @@
+"""Exporter-path overheads: the observability rows the CI perf gate pins.
+
+Measures us per operation for the Prometheus export layer over a populated
+timer database (a realistic mid-run shape: a scope tree, ADAPT decision rows,
+parent-chain attribution at the LRU cap): ``collect`` (walk DB -> metric
+families), ``render`` (families -> exposition text), ``parse`` (the strict
+no-deps parser CI gates snapshots with), and ``write_textfile`` (atomic
+tmp+rename, the node_exporter textfile-collector path).
+
+Methodology matches bench_checkpoint: each row is the best of ``repeats``
+timed loops after a warmup call; ``--scale`` shrinks iteration counts for
+smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import shutil
+import sys
+import tempfile
+import time
+
+
+def _time_op(fn, n: int, scale: float = 1.0, repeats: int = 3) -> float:
+    n = max(int(n * scale), 3)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        best = min(best, time.perf_counter() - t0)
+    return best / n * 1e6
+
+
+def _populated_db():
+    """A mid-run-shaped database: bins > thorns > scopes, ADAPT rows, and one
+    hot timer driven past the parent-stats LRU cap."""
+    from repro.core.timers import PARENT_STATS_CAP, TimerDB
+
+    db = TimerDB()
+    for b, thorn, n in (("EVOL", "trainer", 6), ("ANALYSIS", "adapt", 4),
+                        ("CHECKPOINT", "adaptcheck", 3), ("OUTPUT", "report", 3)):
+        for i in range(n):
+            with db.scope(f"{b}/{thorn}::routine_{i}"):
+                with db.scope(f"work/{b.lower()}_{i}"):
+                    pass
+    for action in ("grow", "shrink", "rebalance", "evict"):
+        h = db.scope_handle(f"ADAPT/serving::{action}")
+        h.timer.count += 5
+    hot = db.scope_handle("hot/leaf")
+    for i in range(PARENT_STATS_CAP + 32):
+        with db.scope(f"caller_{i}"):
+            with hot:
+                pass
+    return db
+
+
+def run(scale: float = 1.0) -> list[tuple[str, float, str]]:
+    from repro.monitor.export import MetricsExporter
+    from repro.monitor.promparse import parse_exposition
+
+    db = _populated_db()
+    exporter = MetricsExporter(db)
+    rows: list[tuple[str, float, str]] = []
+
+    exporter.collect()
+    rows.append(("export/collect", _time_op(exporter.collect, 200, scale),
+                 "us_per_call"))
+
+    text = exporter.render()
+    rows.append(("export/render", _time_op(exporter.render, 200, scale),
+                 "us_per_call"))
+
+    parse_exposition(text)
+    rows.append(("export/parse", _time_op(lambda: parse_exposition(text), 200, scale),
+                 "us_per_call"))
+
+    root = tempfile.mkdtemp(prefix="bench_export_")
+    try:
+        path = os.path.join(root, "metrics.prom")
+        exporter.write_textfile(path)
+        rows.append(("export/write_textfile",
+                     _time_op(lambda: exporter.write_textfile(path), 100, scale),
+                     "us_per_call"))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Prometheus exporter-path overheads (CI perf-gate rows)."
+    )
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="iteration-count multiplier (CI smoke: 0.5)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (BENCH_*.json perf trajectory)")
+    args = ap.parse_args(argv)
+    rows = run(scale=args.scale)
+    print("name,us_per_call,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.3f},{derived}")
+    if args.json:
+        payload = {
+            "bench": "export",
+            "scale": args.scale,
+            "unix_time": time.time(),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "rows": [
+                {"name": name, "us_per_call": value, "derived": derived}
+                for name, value, derived in rows
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

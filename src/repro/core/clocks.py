@@ -63,6 +63,8 @@ __all__ = [
     "make_all_clocks",
     "counter_cell",
     "counter_channel",
+    "counter_names",
+    "counter_stats",
     "counter_values",
     "increment_counter",
     "fold_pending_counters",
@@ -539,6 +541,33 @@ def counter_values(names: Sequence[str]) -> list[float]:
             cell = cells.get(name)
             out.append(_fold_cell_locked(cell) if cell is not None else 0.0)
         return out
+
+
+def counter_names() -> list[str]:
+    """Every counter channel created so far, sorted — the enumeration hook
+    exporters use (channels are created on first write and never deleted)."""
+    with _CELLS_CREATE_LOCK:
+        return sorted(_CELLS)
+
+
+def counter_stats() -> dict[str, int]:
+    """Boundedness introspection over the counter store:
+    ``{"channels", "pending_total", "pending_max"}``.
+
+    ``pending_*`` count *unfolded* amounts — by design each channel's pending
+    list stays under ``_PENDING_FOLD_CAP`` (readers fold, writers self-fold at
+    the cap, fused samplers sweep), so a pending total that keeps climbing
+    means some path defeats all three folds.  The metrics exporter publishes
+    these and the soak gate asserts they stay flat; the timer-side counterpart
+    is :meth:`repro.core.timers.TimerDB.cardinality`.
+    """
+    with _COUNTER_READ_LOCK:
+        pending = [len(cell.pending) for cell in _CELLS.values()]
+    return {
+        "channels": len(pending),
+        "pending_total": sum(pending),
+        "pending_max": max(pending, default=0),
+    }
 
 
 def _make_counter_sampler(names: tuple[str, ...]) -> Callable[[], list[float]]:

@@ -36,17 +36,16 @@ other).
 The supported call-path-facing surface lives one layer up in
 :mod:`repro.timing`: hierarchical scopes (:meth:`TimerDB.scope` /
 :meth:`TimerDB.scope_handle`) derive path-addressed timers from the running
-stack, :meth:`TimerDB.tree` aggregates the recorded per-parent attribution
-into an inclusive/exclusive forest, and the old flat sugar
-(:meth:`TimerDB.timing`, :func:`timed`) is deprecated.
+stack, and :meth:`TimerDB.tree` aggregates the recorded per-parent attribution
+into an inclusive/exclusive forest.  (The PR-4 flat sugar — ``TimerDB.timing``
+and a module-level ``timed`` — finished its deprecation window and was
+removed; use :func:`repro.timing.scope` / :func:`repro.timing.timed`.)
 """
 
 from __future__ import annotations
 
-import functools
 import threading
-import warnings
-from collections.abc import Callable, Iterator, Mapping
+from collections.abc import Iterator, Mapping
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
@@ -54,15 +53,25 @@ from . import clocks as _clocks
 from .clocks import _REGISTRY_VERSION as _VERSION  # atomic int read; hot path
 
 __all__ = [
+    "PARENT_STATS_CAP",
     "ScopeHandle",
     "Timer",
     "TimerDB",
     "TimerNode",
     "path_matches",
     "reset_timer_db",
-    "timed",
     "timer_db",
 ]
+
+#: Per-timer bound on distinct parent-chain attribution buckets.  A timer
+#: entered under ever-changing enclosing scopes (an unbounded set of call
+#: paths — usually a scope name interpolated with a request or step id) would
+#: otherwise grow ``_parent_stats`` without limit over a long run.  At the cap
+#: the least-recently-windowed chain is evicted (its seconds stay in the
+#: timer's accumulators; only the per-chain split is dropped) and the timer's
+#: ``parent_stats_evictions`` counter is bumped — exported as
+#: ``repro_timing_parent_stats_evictions_total`` so a soak can alert on it.
+PARENT_STATS_CAP = 128
 
 
 def path_matches(name: str, prefix: str) -> bool:
@@ -232,6 +241,7 @@ class Timer:
         "_views",
         "_parent_path",
         "_parent_stats",
+        "parent_stats_evictions",
     )
 
     def __init__(self, name: str, handle: int) -> None:
@@ -248,11 +258,13 @@ class Timer:
         self._nonfused: dict[str, _clocks.Clock] = {}
         self._views: dict[str, object] | None = None
         # per-call-path window attribution: {ancestor path tuple: [wall_s,
-        # count]} — a timer entered under several enclosing scopes (a shared
-        # library routine, the final checkpoint in SHUTDOWN) splits exactly
-        # in tree(), including its own sub-scopes
+        # count, last-window tick]} — a timer entered under several enclosing
+        # scopes (a shared library routine, the final checkpoint in SHUTDOWN)
+        # splits exactly in tree(), including its own sub-scopes.  Bounded to
+        # PARENT_STATS_CAP chains per timer (LRU by last-window tick).
         self._parent_path: tuple[str, ...] = ()
         self._parent_stats: dict[tuple[str, ...], list] = {}
+        self.parent_stats_evictions = 0
 
     # -- layout management (lock held) ----------------------------------------
     def _sync_layout_locked(self) -> None:
@@ -329,15 +341,24 @@ class Timer:
             # wall seconds of this window land in the bucket of the full
             # enclosing-scope chain recorded at start
             wi = self._layout.walltime_index
-            entry = self._parent_stats.get(self._parent_path)
+            stats = self._parent_stats
+            entry = stats.get(self._parent_path)
             if entry is None:
-                self._parent_stats[self._parent_path] = [
-                    now[wi] - marks[wi] if wi is not None else 0.0, 1
+                if len(stats) >= PARENT_STATS_CAP:
+                    # evict the least-recently-windowed chain (O(cap), paid
+                    # only on an at-cap insert); the evicted seconds remain in
+                    # the timer's accumulators — only the per-chain split goes
+                    oldest = min(stats, key=lambda p: stats[p][2])
+                    del stats[oldest]
+                    self.parent_stats_evictions += 1
+                stats[self._parent_path] = [
+                    now[wi] - marks[wi] if wi is not None else 0.0, 1, self.count
                 ]
             else:
                 if wi is not None:
                     entry[0] += now[wi] - marks[wi]
                 entry[1] += 1
+                entry[2] = self.count
 
     def reset(self) -> None:
         with self._lock:
@@ -349,6 +370,7 @@ class Timer:
                 clock.reset()
             self.count = 0
             self._parent_stats = {}
+            self.parent_stats_evictions = 0
 
     # -- queries ---------------------------------------------------------------
     def _values_locked(self) -> list[float]:
@@ -461,7 +483,7 @@ class Timer:
         a live monitor need so a still-running ancestor keeps its subtree.
         """
         with self._lock:
-            out = {p: (s, c) for p, (s, c) in self._parent_stats.items()}
+            out = {p: (e[0], e[1]) for p, e in self._parent_stats.items()}
             if live and self.running:
                 wi = self._layout.walltime_index
                 if wi is not None:
@@ -827,35 +849,29 @@ class TimerDB:
             node.exclusive = node.inclusive - sum(c.inclusive for c in node.children)
         return roots
 
-    # -- sugar (deprecated: see repro.timing) -----------------------------------
-    @contextmanager
-    def timing(self, name: str) -> Iterator[Timer]:
-        """Deprecated flat-name timing context.
+    # -- boundedness introspection ------------------------------------------------
+    def cardinality(self) -> dict[str, int]:
+        """Size of every internal store that must stay bounded on a long run:
+        ``{"timers", "scope_handles", "parent_stats_buckets",
+        "parent_stats_buckets_max", "parent_stats_evictions"}``.
 
-        Use :func:`repro.timing.scope` (path nests under the enclosing scope)
-        or :meth:`scope_handle` (pre-resolved absolute path) instead.
+        This is the hook the metrics exporter and the soak gate read — a
+        control loop (or user code) that allocates a new timer or attribution
+        bucket per step shows up here as monotonic growth long before it OOMs.
+        Counter-store cardinality lives in
+        :func:`repro.core.clocks.counter_stats`.
         """
-        warnings.warn(
-            "TimerDB.timing() is deprecated; use repro.timing.scope() / "
-            "TimerDB.scope_handle() (hierarchical scope API)",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        with self._timing(name) as timer:
-            yield timer
-
-    @contextmanager
-    def _timing(self, name: str) -> Iterator[Timer]:
-        # dict reads are atomic and names are never deleted, so the common
-        # already-created case skips the database lock entirely
-        handle = self._by_name.get(name)
-        if handle is None:
-            handle = self.create(name)
-        self.start(handle)
-        try:
-            yield self._timers[handle]
-        finally:
-            self.stop(handle)
+        timers = self.timers()
+        buckets = [len(t._parent_stats) for t in timers]
+        return {
+            "timers": len(timers),
+            "scope_handles": len(self._scope_handles),
+            "parent_stats_buckets": sum(buckets),
+            "parent_stats_buckets_max": max(buckets, default=0),
+            "parent_stats_evictions": sum(
+                t.parent_stats_evictions for t in timers
+            ),
+        }
 
 
 _DB = TimerDB()
@@ -885,26 +901,3 @@ def _install_db(db: TimerDB) -> TimerDB:
     global _DB
     prev, _DB = _DB, db
     return prev
-
-
-def timed(name: str | None = None) -> Callable:
-    """Deprecated flat-name decorator.  Use :func:`repro.timing.timed`, which
-    records under the caller's active scope (hierarchical path)."""
-    warnings.warn(
-        "repro.core.timers.timed is deprecated; use repro.timing.timed "
-        "(records under the caller's active scope)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-
-    def deco(fn: Callable) -> Callable:
-        label = name or f"func/{fn.__qualname__}"
-
-        @functools.wraps(fn)
-        def wrapper(*args, **kwargs):
-            with _DB._timing(label):
-                return fn(*args, **kwargs)
-
-        return wrapper
-
-    return deco

@@ -23,6 +23,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_smoke_config
 from ..models import model as M
+from ..monitor import MetricsExporter, serving_payload
 from ..serving import Request, ServeSession, ServiceLevel
 from ..timing import TimingSession
 
@@ -104,6 +105,9 @@ def main(argv=None) -> int:
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="open-loop Poisson arrivals (requests/s); default: drain")
     ap.add_argument("--report", action="store_true")
+    ap.add_argument("--metrics-textfile", default=None,
+                    help="write the final Prometheus exposition here "
+                         "(textfile-collector scrape path)")
     args = ap.parse_args(argv)
     sess = TimingSession()
     with sess:
@@ -116,6 +120,12 @@ def main(argv=None) -> int:
             session=sess,
         )
     print(json.dumps(engine.stats(), indent=1))
+    if args.metrics_textfile:
+        MetricsExporter(
+            sess.db,
+            control_loop=engine.control_loop,
+            serving_fn=serving_payload(engine),
+        ).write_textfile(args.metrics_textfile)
     if args.report:
         print(sess.report())
         print()

@@ -52,7 +52,7 @@ from ..dist.pipeline import MicrobatchPlan, StagePlan, phase_ticks
 from ..dist.stragglers import StragglerDetector
 from ..models import model as M
 from ..models.config import ArchConfig, ShapeConfig
-from ..monitor import MonitorServer, StatusWriter
+from ..monitor import MetricsExporter, MonitorServer, StatusWriter
 from ..optim import AdamWConfig, init_opt_state
 from ..timing import TimingSession
 from .steps import make_pipeline_train_step, make_train_step, rules_for
@@ -87,6 +87,9 @@ class TrainSettings:
     log_path: str | None = None
     status_path: str | None = None
     monitor_port: int | None = None
+    #: Prometheus textfile-collector path: the exporter page is atomically
+    #: rewritten on the report cadence and at shutdown (node_exporter style)
+    metrics_textfile: str | None = None
     restore: bool = True
     seed: int = 0
     data_mode: str = "copy"
@@ -244,6 +247,12 @@ def run_training(
         )
     )
     sch.attach_control_loop(loop, bin="ANALYSIS")
+    # one exporter for both surfaces: the monitor's /metrics endpoint and the
+    # optional textfile written on the report cadence
+    exporter = MetricsExporter(
+        db, control_loop=loop, detector=detector,
+        checkpoint_fn=lambda: manager.status_payload() if manager is not None else {},
+    )
     # training-event clock registered mid-run (the paper's extensibility path:
     # every timer picks it up from its next window) + lock-free channel cells
     # resolved once for the hot loop
@@ -378,7 +387,8 @@ def run_training(
                                     checkpoint_fn=(
                                         manager.status_payload
                                         if manager is not None else None
-                                    ))
+                                    ),
+                                    exporter=exporter)
             port = monitor.start()
             print(f"[train] monitor at http://127.0.0.1:{port}/")
         registry.freeze()
@@ -443,6 +453,8 @@ def run_training(
         if status is not None:
             status.write({"iteration": s.iteration, **(s.get("metrics") or {})})
         if settings.report_every and s.iteration % settings.report_every == 0:
+            if settings.metrics_textfile:
+                exporter.write_textfile(settings.metrics_textfile)
             m = s.get("metrics") or {}
             print(
                 f"[train] step {s.iteration:5d} loss={m.get('loss', float('nan')):.4f} "
@@ -463,6 +475,8 @@ def run_training(
             manager.wait()
             manager.close()
         s["loader"].close()
+        if settings.metrics_textfile:
+            exporter.write_textfile(settings.metrics_textfile)
         if monitor is not None:
             monitor.stop()
 
@@ -540,6 +554,9 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--report", action="store_true", help="print the timer report")
     ap.add_argument("--monitor-port", type=int, default=None)
+    ap.add_argument("--metrics-textfile", default=None,
+                    help="write the Prometheus exposition here on the report "
+                         "cadence (textfile-collector scrape path)")
     ap.add_argument("--pipeline-stages", type=int, default=0,
                     help="1F1B pipeline-parallel path: pod-axis size (0 = off)")
     ap.add_argument("--pipeline-layers", type=int, default=8)
@@ -556,6 +573,7 @@ def main(argv=None) -> int:
         ckpt_keep_n=args.keep_n, ckpt_keep_every_k=args.keep_every_k,
         save_deadline_s=args.save_deadline,
         monitor_port=args.monitor_port,
+        metrics_textfile=args.metrics_textfile,
         pipeline_stages=args.pipeline_stages,
         pipeline_layers=args.pipeline_layers,
         pipeline_micro=args.pipeline_micro,

@@ -5,6 +5,11 @@ database, steerable parameters, and run status.
 Endpoints:
     /            HTML overview (Fig.-2-style timer table + scope tree + the
                  serving queue/slot/shed rows when a serving engine is wired)
+    /metrics     Prometheus text exposition (``text/plain; version=0.0.4``)
+                 rendered by a :class:`repro.monitor.export.MetricsExporter` —
+                 pass ``exporter=`` to enrich it with detector/control-loop
+                 state; by default one is built over the database plus any
+                 wired serving/checkpoint payload fns
     /timers      JSON timer snapshot
     /tree        nested JSON timer forest (inclusive/exclusive seconds per
                  scope, children recursively — repro.timing tree view)
@@ -36,6 +41,7 @@ from typing import Any
 from ..core.params import ParamRegistry, param_registry
 from ..core.report import format_report, format_tree_report, tree_rows
 from ..core.timers import TimerDB, timer_db
+from .export import TEXT_CONTENT_TYPE, MetricsExporter
 
 
 __all__ = ["MonitorServer", "StatusWriter", "serving_payload"]
@@ -91,12 +97,20 @@ class MonitorServer:
         status_fn: Callable[[], dict[str, Any]] | None = None,
         serving_fn: Callable[[], dict[str, Any]] | None = None,
         checkpoint_fn: Callable[[], dict[str, Any]] | None = None,
+        exporter: MetricsExporter | None = None,
     ) -> None:
         self._db = db if db is not None else timer_db()
         self._params = params if params is not None else param_registry()
         self._status_fn = status_fn or (lambda: {})
         self._serving_fn = serving_fn
         self._checkpoint_fn = checkpoint_fn
+        self._exporter = (
+            exporter
+            if exporter is not None
+            else MetricsExporter(
+                self._db, serving_fn=serving_fn, checkpoint_fn=checkpoint_fn
+            )
+        )
         self._httpd: ThreadingHTTPServer | None = None
         self._thread: threading.Thread | None = None
         self._port = port
@@ -122,7 +136,13 @@ class MonitorServer:
                 self.wfile.write(body)
 
             def do_GET(self):
-                if self.path.startswith("/timers"):
+                if self.path.startswith("/metrics"):
+                    self._send(
+                        200,
+                        monitor._exporter.render().encode(),
+                        TEXT_CONTENT_TYPE,
+                    )
+                elif self.path.startswith("/timers"):
                     self._send(200, json.dumps(monitor._db.snapshot()).encode())
                 elif self.path.startswith("/tree"):
                     self._send(200, json.dumps(tree_rows(monitor._db)).encode())

@@ -1,0 +1,3 @@
+from .run import main
+
+raise SystemExit(main())

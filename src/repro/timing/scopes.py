@@ -92,7 +92,7 @@ def counter(name: str, *, absolute: bool = False, db: TimerDB | None = None) -> 
 def timed(name: str | None = None, db: TimerDB | None = None) -> Callable:
     """Decorator opening a scope around every call of the function.
 
-    Unlike the deprecated flat ``repro.core.timers.timed``, the scope nests
+    Unlike the removed flat ``repro.core.timers.timed``, the scope nests
     under the **caller's** active scope at call time: a helper decorated
     ``@timed("build")`` called from inside ``scope("train")`` records
     ``train/build``; the same helper called bare records ``build``.  The

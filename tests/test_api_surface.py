@@ -115,6 +115,24 @@ def test_scope_handle_slots():
     assert timing.ScopeHandle.__slots__ == ("path", "timer", "_tls")
 
 
+def test_pr4_timing_shims_removed():
+    # deprecated in PR 4, removed in PR 8: repro.timing is the one blessed
+    # path — the flat core sugar must not quietly come back
+    import repro.core
+    import repro.core.timers
+
+    assert not hasattr(timing.TimerDB, "timing")
+    assert not hasattr(repro.core.timers, "timed")
+    assert not hasattr(repro.core, "timed")
+    assert "timed" not in repro.core.__all__
+
+
+def test_timerdb_cardinality_surface():
+    # the exporter/soak introspection hook added with the shim removal
+    sig = inspect.signature(inspect.getattr_static(timing.TimerDB, "cardinality"))
+    assert list(sig.parameters) == ["self"]
+
+
 # --- repro.serving (PR 6 API redesign: continuous batching) -------------------
 
 EXPECTED_SERVING_ALL = [

@@ -1,0 +1,359 @@
+"""Prometheus export layer: exporter rendering, the strict exposition parser
+(the CI format gate), the monitor /metrics endpoint, and the parent-stats
+LRU cap the soak invariants pin."""
+
+from __future__ import annotations
+
+import json
+import urllib.request
+
+import pytest
+
+from repro.core import clocks as C
+from repro.core.timers import PARENT_STATS_CAP, TimerDB
+from repro.monitor import (
+    TEXT_CONTENT_TYPE,
+    MetricsExporter,
+    MonitorServer,
+    parse_exposition,
+)
+from repro.monitor.export import MetricFamily
+from repro.monitor.promparse import ExpositionError, main as promparse_main
+
+
+# ---------------------------------------------------------------------------
+# exporter -> parser round trip
+# ---------------------------------------------------------------------------
+
+def _tree_db() -> TimerDB:
+    db = TimerDB()
+    with db.scope("train"):
+        with db.scope("step"):
+            pass
+        with db.scope("io"):
+            pass
+    with db.scope("train"):
+        with db.scope("step"):
+            pass
+    return db
+
+
+def test_render_parses_and_reports_tree():
+    db = _tree_db()
+    exp = parse_exposition(MetricsExporter(db).render())
+    assert exp.types["repro_timer_windows_total"] == "counter"
+    assert exp.value("repro_timer_windows_total", path="train", chain="") == 2.0
+    assert exp.value("repro_timer_windows_total",
+                     path="train/step", chain="train") == 2.0
+    assert exp.value("repro_timer_windows_total",
+                     path="train/io", chain="train") == 1.0
+    # inclusive >= exclusive on the parent, both non-negative
+    inc = exp.value("repro_timer_inclusive_seconds", path="train", chain="")
+    exc = exp.value("repro_timer_exclusive_seconds", path="train", chain="")
+    assert inc >= exc >= 0.0
+
+
+def test_adapt_rows_become_labeled_counters():
+    db = TimerDB()
+    db.scope_handle("ADAPT/serving::grow").timer.count += 3
+    db.scope_handle("ADAPT/stragglers::evict").timer.count += 1
+    exp = parse_exposition(MetricsExporter(db).render())
+    assert exp.value("repro_adapt_actions_total",
+                     controller="serving", action="grow") == 3.0
+    assert exp.value("repro_adapt_actions_total",
+                     controller="stragglers", action="evict") == 1.0
+
+
+def test_quarantine_rows_become_reason_counters():
+    db = TimerDB()
+    db.scope_handle("CHECKPOINT/quarantine::bad_hash").timer.count += 2
+    exp = parse_exposition(MetricsExporter(db).render())
+    assert exp.value("repro_checkpoint_quarantine_total", reason="bad_hash") == 2.0
+
+
+def test_label_escaping_round_trip():
+    db = TimerDB()
+    weird = 'sc"ope\\with\nnewline'
+    with db.scope(weird):
+        pass
+    exp = parse_exposition(MetricsExporter(db).render())
+    assert exp.value("repro_timer_windows_total", path=weird, chain="") == 1.0
+
+
+def test_counter_channels_exported():
+    db = TimerDB()
+    bump = C.increment_counter
+    h = db.create("w")
+    db.start(h)
+    bump("export_test_channel", 5.0)
+    db.stop(h)
+    exp = parse_exposition(MetricsExporter(db).render())
+    assert exp.value("repro_counter_total", channel="export_test_channel") >= 5.0
+    # cells are process-global: the channel gauge counts at least this one
+    assert exp.value("repro_timing_counter_channels") >= 1.0
+
+
+def test_detector_section():
+    from repro.dist.stragglers import StragglerDetector
+
+    db = TimerDB()
+    det = StragglerDetector(3, window=2, threshold=1.5, db=db)
+    for step in range(4):
+        for host, cost in ((0, 0.1), (1, 0.1), (2, 0.5)):
+            det.observe(host, cost)
+        det.check(step)
+    exp = parse_exposition(MetricsExporter(db, detector=det).render())
+    assert exp.value("repro_host_windows_total", host="2") == 4.0
+    assert exp.value("repro_host_slowdown_ratio", host="2") > 1.5
+    assert exp.value("repro_host_flagged", host="2") == 1.0
+    assert exp.value("repro_host_flagged", host="0") == 0.0
+    assert exp.value("repro_host_evicted", host="2") == 0.0
+
+
+def test_serving_section_from_payload():
+    stats = {
+        "completed": 7, "shed": 2, "steps": 40, "tokens": 300,
+        "queue_depth": 3, "active_slots": 4, "max_active": 8,
+        "occupancy": 0.5, "kv_utilization": 0.25,
+    }
+    exporter = MetricsExporter(
+        TimerDB(), serving_fn=lambda: {"engine": stats, "requests": []}
+    )
+    exp = parse_exposition(exporter.render())
+    assert exp.value("repro_serving_completed_total") == 7.0
+    assert exp.value("repro_serving_shed_total") == 2.0
+    assert exp.value("repro_serving_tokens_total") == 300.0
+    assert exp.value("repro_serving_queue_depth") == 3.0
+    assert exp.value("repro_serving_kv_utilization_ratio") == 0.25
+    assert exp.types["repro_serving_completed_total"] == "counter"
+    assert exp.types["repro_serving_queue_depth"] == "gauge"
+
+
+def test_checkpoint_section_from_payload():
+    payload = {
+        "checkpoints": [{"step": 10, "path": "a"}, {"step": 30, "path": "b"}],
+        "quarantined": [{"step": 20, "reason": "bad_hash"}],
+        "totals": {"n_saves": 5, "total_bytes": 4096,
+                   "total_blocking_seconds": 0.25},
+    }
+    exporter = MetricsExporter(TimerDB(), checkpoint_fn=lambda: payload)
+    exp = parse_exposition(exporter.render())
+    assert exp.value("repro_checkpoints_on_disk") == 2.0
+    assert exp.value("repro_checkpoints_quarantined") == 1.0
+    assert exp.value("repro_checkpoint_last_success_step") == 30.0
+    assert exp.value("repro_checkpoint_saves_total") == 5.0
+    assert exp.value("repro_checkpoint_write_bytes_total") == 4096.0
+    assert exp.value("repro_checkpoint_blocking_seconds_total") == 0.25
+
+
+def test_custom_namespace_and_validation():
+    db = TimerDB()
+    with db.scope("x"):
+        pass
+    exp = parse_exposition(MetricsExporter(db, namespace="myapp").render())
+    assert exp.value("myapp_timer_windows_total", path="x", chain="") == 1.0
+    with pytest.raises(ValueError, match="namespace"):
+        MetricsExporter(db, namespace="0bad")
+
+
+def test_metric_family_render_validation():
+    with pytest.raises(ValueError, match="must be named"):
+        MetricFamily("repro_things", "counter", "h", [({}, 1.0)]).render()
+    with pytest.raises(ValueError, match="invalid metric name"):
+        MetricFamily("1bad", "gauge", "h", [({}, 1.0)]).render()
+    with pytest.raises(ValueError, match="invalid label name"):
+        MetricFamily("ok_total", "counter", "h",
+                     [({"__reserved": "x"}, 1.0)]).render()
+
+
+def test_write_textfile_atomic(tmp_path):
+    db = _tree_db()
+    path = tmp_path / "metrics" / "repro.prom"
+    MetricsExporter(db).write_textfile(str(path))
+    text = path.read_text()
+    assert text.endswith("\n")
+    parse_exposition(text)
+    assert not list(path.parent.glob("*.tmp"))
+    # rewrite replaces in place
+    with db.scope("more"):
+        pass
+    MetricsExporter(db).write_textfile(str(path))
+    exp = parse_exposition(path.read_text())
+    assert ("repro_timer_windows_total",
+            (("chain", ""), ("path", "more"))) in exp.samples
+
+
+# ---------------------------------------------------------------------------
+# /metrics endpoint on the monitor server
+# ---------------------------------------------------------------------------
+
+def test_monitor_metrics_endpoint():
+    db = _tree_db()
+    server = MonitorServer(0, db)
+    port = server.start()
+    try:
+        with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10
+        ) as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"] == TEXT_CONTENT_TYPE
+            exp = parse_exposition(resp.read().decode())
+        assert exp.value("repro_timer_windows_total", path="train", chain="") == 2.0
+        # the other endpoints still work alongside
+        with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/timers", timeout=10
+        ) as resp:
+            assert "train" in json.load(resp)
+    finally:
+        server.stop()
+
+
+def test_monitor_metrics_custom_exporter():
+    db = TimerDB()
+    db.scope_handle("ADAPT/x::act").timer.count += 1
+    server = MonitorServer(0, db, exporter=MetricsExporter(db, namespace="custom"))
+    port = server.start()
+    try:
+        with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10
+        ) as resp:
+            exp = parse_exposition(resp.read().decode())
+        assert exp.value("custom_adapt_actions_total",
+                         controller="x", action="act") == 1.0
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# the strict parser: negative cases (what the CI gate actually catches)
+# ---------------------------------------------------------------------------
+
+GOOD = "# HELP m_total h\n# TYPE m_total counter\nm_total 1.0\n"
+
+
+def test_parser_good_minimal():
+    exp = parse_exposition(GOOD)
+    assert exp.value("m_total") == 1.0
+    assert exp.helps["m_total"] == "h"
+
+
+@pytest.mark.parametrize(
+    "text,match",
+    [
+        ("", "empty"),
+        ("# TYPE m_total counter\nm_total 1.0", "final newline"),
+        ("m_total 1.0\n", "no # TYPE"),
+        ("# TYPE m_total counter\nm_total 1.0\n# TYPE m_total counter\n",
+         "duplicate TYPE"),
+        ("# TYPE m counter\nm 1.0\n", "must be named"),
+        ("# TYPE m_total counter\nm_total 1.0\nm_total 1.0\n",
+         "duplicate series"),
+        ("# TYPE m_total counter\nm_total{a=\"1\"} 1\nm_total{a=\"1\"} 2\n",
+         "duplicate series"),
+        ("# TYPE m_total counter\nm_total{__a=\"1\"} 1\n", "invalid label"),
+        ("# TYPE m_total counter\nm_total{a=\"\\t\"} 1\n", "invalid escape"),
+        ("# TYPE m_total counter\nm_total{a=\"x} 1\n", "unterminated"),
+        ("# TYPE m_total counter\nm_total bogus\n", "invalid sample value"),
+        ("# TYPE m_total counter\nm_total\n", "expected: value"),
+        ("# TYPE m_total weird\n", "unknown type"),
+        ("# NOTE something\n", "unknown comment"),
+        ("# HELP m_total a\n# HELP m_total b\n", "duplicate HELP"),
+        ("# TYPE a_total counter\n# TYPE b gauge\na_total 1\nb 2\na_total 3\n",
+         "not contiguous"),
+        ("# TYPE 1bad gauge\n", "invalid metric name"),
+    ],
+)
+def test_parser_rejects(text, match):
+    with pytest.raises(ExpositionError, match=match):
+        parse_exposition(text)
+
+
+def test_parser_error_carries_lineno():
+    with pytest.raises(ExpositionError) as err:
+        parse_exposition("# TYPE m_total counter\nm_total bogus\n")
+    assert err.value.lineno == 2
+
+
+def test_parser_histogram_suffixes_and_timestamps():
+    text = (
+        "# TYPE lat histogram\n"
+        'lat_bucket{le="0.1"} 3 1700000000\n'
+        'lat_bucket{le="+Inf"} 5\n'
+        "lat_sum 0.4\n"
+        "lat_count 5\n"
+    )
+    exp = parse_exposition(text)
+    assert exp.value("lat_bucket", le="+Inf") == 5.0
+    assert exp.value("lat_count") == 5.0
+
+
+def test_parser_escape_round_trip():
+    text = '# TYPE g gauge\ng{p="a\\\\b\\"c\\nd"} 1\n'
+    exp = parse_exposition(text)
+    assert exp.value("g", p='a\\b"c\nd') == 1.0
+
+
+def test_promparse_cli_gate(tmp_path, capsys):
+    good = tmp_path / "good.prom"
+    good.write_text(GOOD)
+    bad = tmp_path / "bad.prom"
+    bad.write_text("m_total 1.0\n")
+    assert promparse_main([str(good)]) == 0
+    assert promparse_main([str(good), str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "[promparse] ok" in out and "[promparse] FAIL" in out
+
+
+# ---------------------------------------------------------------------------
+# parent-stats LRU cap (satellite 4): bounded buckets, eviction counter
+# ---------------------------------------------------------------------------
+
+def test_parent_stats_bucket_cap_and_eviction_metric():
+    db = TimerDB()
+    hot = db.scope_handle("hot")
+    n = PARENT_STATS_CAP + 40
+    for i in range(n):
+        with db.scope(f"caller_{i}"):
+            with hot:
+                pass
+    assert len(hot.timer._parent_stats) == PARENT_STATS_CAP
+    assert hot.timer.parent_stats_evictions == 40
+    card = db.cardinality()
+    assert card["parent_stats_buckets_max"] <= PARENT_STATS_CAP
+    assert card["parent_stats_evictions"] == 40
+    exp = parse_exposition(MetricsExporter(db).render())
+    assert exp.value("repro_timing_parent_stats_buckets_max") <= PARENT_STATS_CAP
+    assert exp.value("repro_timing_parent_stats_evictions_total") == 40.0
+
+
+def test_parent_stats_lru_keeps_recent_parents():
+    db = TimerDB()
+    hot = db.scope_handle("hot")
+    for i in range(PARENT_STATS_CAP + 8):
+        # caller_0 revisits hot every iteration: recently used, never evicted
+        with db.scope("caller_0"):
+            with hot:
+                pass
+        with db.scope(f"caller_{i + 1}"):
+            with hot:
+                pass
+    stats = hot.timer.parent_stats()
+    assert ("caller_0",) in stats
+    count_0 = stats[("caller_0",)][1]
+    assert count_0 == PARENT_STATS_CAP + 8
+    # the oldest one-shot callers were evicted, the newest survive
+    assert (f"caller_{PARENT_STATS_CAP + 8}",) in stats
+    assert ("caller_1",) not in stats
+
+
+def test_parent_stats_reset_clears_evictions():
+    db = TimerDB()
+    hot = db.scope_handle("hot")
+    for i in range(PARENT_STATS_CAP + 5):
+        with db.scope(f"c{i}"):
+            with hot:
+                pass
+    assert hot.timer.parent_stats_evictions == 5
+    db.reset_all()
+    assert hot.timer.parent_stats_evictions == 0
+    assert hot.timer.parent_stats() == {}

@@ -1,0 +1,214 @@
+"""Soak harness: live train/serve smoke runs (the tier-1 variant of the CI
+soak gate) and the invariant checker's teeth on synthetic snapshot sequences."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.monitor import parse_exposition
+from repro.soak import SnapshotRecord, SoakConfig, check_snapshots, run_soak
+from repro.soak.run import main as soak_main
+
+# ---------------------------------------------------------------------------
+# live smoke: the real drive loop, tiny budget (the acceptance-criteria run —
+# scrapes /metrics mid-run and asserts every ADAPT action appears on the wire)
+# ---------------------------------------------------------------------------
+
+
+def test_train_soak_smoke(tmp_path):
+    cfg = SoakConfig(
+        mode="train", budget_s=2.0, interval_s=0.25, seed=11,
+        fault_rate=0.2, out_dir=str(tmp_path),
+    )
+    result = run_soak(cfg)
+    assert result.failures == []
+    assert result.ok
+    assert result.steps > 0
+    assert len(result.snapshots) >= cfg.min_snapshots
+    # the drive provoked real ADAPT decisions, each externally visible
+    assert result.summary["adapt"]["n_actions"] > 0
+    assert result.summary["faults_injected"] > 0
+    # every snapshot was scraped over HTTP and persisted as a parseable page
+    for snap in result.snapshots:
+        assert snap.source == "http"
+        assert snap.parse_error is None
+        assert snap.path is not None
+        parse_exposition(open(snap.path, encoding="utf-8").read())
+
+
+def test_train_soak_no_http_render_path():
+    result = run_soak(SoakConfig(
+        mode="train", budget_s=0.8, interval_s=0.1, seed=3,
+        scrape_http=False,
+    ))
+    assert result.failures == []
+    assert all(s.source == "render" for s in result.snapshots)
+
+
+@pytest.mark.slow
+def test_serve_soak_smoke(tmp_path):
+    cfg = SoakConfig(
+        mode="serve", budget_s=4.0, interval_s=0.5, seed=5,
+        out_dir=str(tmp_path),
+    )
+    result = run_soak(cfg)
+    assert result.failures == []
+    assert result.summary["completed"] > 0
+    assert len(result.snapshots) >= cfg.min_snapshots
+    assert all(s.parse_error is None for s in result.snapshots)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError, match="unknown soak mode"):
+        run_soak(SoakConfig(mode="bogus", budget_s=0.1))
+
+
+def test_soak_cli_smoke(tmp_path, capsys):
+    rc = soak_main([
+        "--mode", "train", "--budget-s", "0.8", "--interval-s", "0.1",
+        "--seed", "2", "--out-dir", str(tmp_path), "--no-http",
+    ])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "[soak] ok   train" in out
+    assert "all invariants held" in out
+    assert list(tmp_path.glob("train_*.prom"))
+
+
+# ---------------------------------------------------------------------------
+# the invariant checker itself: synthetic sequences prove it catches each
+# failure class the nightly gate exists for
+# ---------------------------------------------------------------------------
+
+_BASE = """\
+# TYPE repro_scrape_monotonic_seconds gauge
+repro_scrape_monotonic_seconds {mono}
+# TYPE repro_adapt_actions_total counter
+repro_adapt_actions_total{{action="grow",controller="serving"}} {grow}
+# TYPE repro_counter_total counter
+repro_counter_total{{channel="tokens"}} {tokens}
+# TYPE repro_timing_timers gauge
+repro_timing_timers {timers}
+# TYPE repro_timing_counter_channels gauge
+repro_timing_counter_channels 3
+# TYPE repro_timing_parent_stats_buckets gauge
+repro_timing_parent_stats_buckets {buckets}
+# TYPE repro_timing_parent_stats_buckets_max gauge
+repro_timing_parent_stats_buckets_max {buckets_max}
+# TYPE repro_timing_counter_pending_max gauge
+repro_timing_counter_pending_max 0
+# TYPE repro_timer_windows_total counter
+repro_timer_windows_total{{chain="",path="train"}} {windows}
+"""
+
+
+def _snap(index, *, mono, grow=1, tokens=10.0, timers=5, buckets=4,
+          buckets_max=4, windows=7.0, actions=None):
+    text = _BASE.format(mono=mono, grow=grow, tokens=tokens, timers=timers,
+                        buckets=buckets, buckets_max=buckets_max,
+                        windows=windows)
+    return SnapshotRecord(
+        index=index, step=index * 100, source="render",
+        actions={"serving::grow": grow} if actions is None else actions,
+        exposition=parse_exposition(text),
+    )
+
+
+def test_checker_passes_clean_sequence():
+    snaps = [_snap(i, mono=float(i + 1), tokens=10.0 * (i + 1)) for i in range(4)]
+    assert check_snapshots(snaps) == []
+
+
+def test_checker_needs_two_snapshots():
+    failures = check_snapshots([_snap(0, mono=1.0)])
+    assert any(">= 2 snapshots" in f for f in failures)
+
+
+def test_checker_flags_parse_errors():
+    snaps = [_snap(0, mono=1.0), _snap(1, mono=2.0)]
+    snaps[1] = SnapshotRecord(index=1, step=100, source="http",
+                              parse_error="line 3: boom")
+    failures = check_snapshots(snaps)
+    assert any("malformed exposition" in f for f in failures)
+
+
+def test_checker_flags_monotonic_clock_regression():
+    snaps = [_snap(0, mono=5.0), _snap(1, mono=4.0)]
+    failures = check_snapshots(snaps)
+    assert any("monotonic clock went" in f for f in failures)
+
+
+def test_checker_flags_decreasing_counter():
+    snaps = [_snap(0, mono=1.0, tokens=50.0), _snap(1, mono=2.0, tokens=20.0)]
+    failures = check_snapshots(snaps)
+    assert any("decreased" in f for f in failures)
+
+
+def test_checker_flags_disappearing_series():
+    good = _snap(0, mono=1.0)
+    # second page drops the tokens channel series entirely
+    text = _BASE.format(mono=2.0, grow=1, tokens=0.0, timers=5, buckets=4,
+                        buckets_max=4, windows=7.0)
+    text = "\n".join(
+        line for line in text.split("\n")
+        if "channel=\"tokens\"" not in line
+    )
+    bad = SnapshotRecord(index=1, step=100, source="render",
+                         actions={"serving::grow": 1},
+                         exposition=parse_exposition(text))
+    failures = check_snapshots([good, bad])
+    assert any("disappeared" in f for f in failures)
+
+
+def test_checker_flags_invisible_adapt_action():
+    # the decision log took 3 actions but the wire shows 1
+    snaps = [_snap(0, mono=1.0),
+             _snap(1, mono=2.0, grow=1, actions={"serving::grow": 3})]
+    failures = check_snapshots(snaps)
+    assert any("taken 3x" in f and "metrics show 1" in f for f in failures)
+
+
+def test_checker_flags_phantom_adapt_action():
+    # the wire reports an action the decision log never took
+    snaps = [_snap(0, mono=1.0), _snap(1, mono=2.0, grow=4, actions={})]
+    failures = check_snapshots(snaps)
+    assert any("never took" in f for f in failures)
+
+
+def test_checker_flags_bucket_cap_breach():
+    from repro.core.timers import PARENT_STATS_CAP
+
+    snaps = [_snap(0, mono=1.0),
+             _snap(1, mono=2.0, buckets_max=PARENT_STATS_CAP + 1)]
+    failures = check_snapshots(snaps)
+    assert any("exceeds" in f for f in failures)
+
+
+def test_checker_flags_tail_cardinality_growth():
+    snaps = [
+        _snap(0, mono=1.0, timers=5),
+        _snap(1, mono=2.0, timers=5),
+        _snap(2, mono=3.0, timers=5),
+        _snap(3, mono=4.0, timers=9),  # timers grew inside the steady tail
+    ]
+    failures = check_snapshots(snaps, tail_fraction=0.5)
+    assert any("grew over the steady tail" in f for f in failures)
+
+
+def test_checker_flags_tail_series_growth():
+    grown = _BASE + 'repro_timer_windows_total{{chain="",path="late"}} 1.0\n'
+    snaps = [
+        _snap(0, mono=1.0),
+        _snap(1, mono=2.0),
+        _snap(2, mono=3.0),
+        SnapshotRecord(
+            index=3, step=300, source="render",
+            actions={"serving::grow": 1},
+            exposition=parse_exposition(grown.format(
+                mono=4.0, grow=1, tokens=10.0, timers=5, buckets=4,
+                buckets_max=4, windows=7.0,
+            )),
+        ),
+    ]
+    failures = check_snapshots(snaps, tail_fraction=0.5)
+    assert any("timer-tree series grew" in f for f in failures)

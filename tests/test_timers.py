@@ -96,14 +96,14 @@ def test_snapshot_query():
 
 
 def test_timing_context_and_decorator():
-    from repro.core.timers import timed
+    from repro.timing import timed
 
     db = timer_db()
-    with db.timing("ctx"):
+    with db.scope("ctx"):
         time.sleep(0.002)
     assert db.get("ctx").seconds() >= 0.001
 
-    @timed("deco")
+    @timed("deco", db=db)
     def fn():
         time.sleep(0.002)
 
@@ -118,7 +118,7 @@ def test_thread_safety_of_concurrent_timers():
     def worker(i):
         try:
             for _ in range(50):
-                with db.timing(f"thread-{i}"):
+                with db.scope(f"thread-{i}"):
                     pass
         except Exception as exc:  # noqa: BLE001
             errors.append(exc)
@@ -163,7 +163,7 @@ def test_timed_preserves_introspection():
     introspectable (signature, __wrapped__, __module__)."""
     import inspect
 
-    from repro.core.timers import timed
+    from repro.timing import timed
 
     @timed("wrapped")
     def stepper(x: int, y: int = 2) -> int:

@@ -434,24 +434,21 @@ def test_counter_never_double_exports_an_existing_channel():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims (the old sugar keeps working, loudly)
+# removed shims (deprecated in PR 4, removed in PR 8 — must stay gone so the
+# one blessed path, repro.timing.scope / repro.timing.timed, is the only one)
 # ---------------------------------------------------------------------------
 
-def test_db_timing_deprecated_but_functional():
-    db = timer_db()
-    with pytest.warns(DeprecationWarning, match="TimerDB.timing"):
-        with db.timing("legacy"):
-            pass
-    assert db.get("legacy").count == 1
+def test_db_timing_shim_removed():
+    from repro.core.timers import TimerDB
+
+    assert not hasattr(TimerDB, "timing")
+    assert not hasattr(timer_db(), "timing")
 
 
-def test_core_timed_deprecated_but_functional():
-    from repro.core.timers import timed as legacy_timed
+def test_core_timed_shim_removed():
+    import repro.core
+    import repro.core.timers
 
-    with pytest.warns(DeprecationWarning, match="repro.core.timers.timed"):
-        @legacy_timed("legacy_fn")
-        def fn():
-            return 7
-
-    assert fn() == 7
-    assert timer_db().get("legacy_fn").count == 1
+    assert not hasattr(repro.core.timers, "timed")
+    assert not hasattr(repro.core, "timed")
+    assert "timed" not in repro.core.timers.__all__

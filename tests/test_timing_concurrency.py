@@ -39,7 +39,7 @@ def test_concurrent_distinct_timers_exact_counts():
 
     def worker(i):
         for _ in range(windows):
-            with db.timing(f"conc/thread-{i}"):
+            with db.scope(f"conc/thread-{i}"):
                 pass
 
     _run_threads(worker)
@@ -64,7 +64,7 @@ def test_concurrent_shared_timer_exact_counts_and_captured_events():
     def worker(i):
         for _ in range(windows):
             with gate:
-                with db.timing("conc/shared"):
+                with db.scope("conc/shared"):
                     bump(1.0)
 
     _run_threads(worker)
@@ -124,7 +124,7 @@ def test_clock_registered_while_hammering():
     def worker(i):
         started.wait()
         for _ in range(windows):
-            with db.timing(f"conc/reg-{i}"):
+            with db.scope(f"conc/reg-{i}"):
                 pass
 
     registered = []
@@ -147,7 +147,7 @@ def test_clock_registered_while_hammering():
         timer = db.get(f"conc/reg-{i}")
         assert timer.count == windows
         # next window after registration sees the new channel
-        with db.timing(f"conc/reg-{i}"):
+        with db.scope(f"conc/reg-{i}"):
             C.increment_counter("midrun_events", 1.0)
         assert timer.read_flat()["midrun_events"] >= 1.0
 
