@@ -126,6 +126,15 @@ class StragglerResponse:
         deferred, not cancelled: the streak is left growing, so the next
         flagged check retries the barrier.  Typically
         :meth:`repro.adapt.checkpoint.CheckpointControl.evict_barrier`.
+    reshard_gate:
+        Optional payback gate, consulted *before* the barrier:
+        ``reshard_gate(step, host, report, slowdown)`` returns ``None`` when
+        the projected win of shedding the host covers the re-shard cost (the
+        eviction proceeds), or a :class:`ControlAction` (an
+        ``ADAPT/fleet::defer_reshard`` row) recording why the move is not
+        worth it — the eviction is skipped, the action is recorded, and the
+        streak keeps growing so the gate re-evaluates every flagged check.
+        Typically :meth:`repro.fleet.payback.PaybackPolicy.evict_gate`.
     """
 
     def __init__(
@@ -145,6 +154,8 @@ class StragglerResponse:
         on_evict: Callable[[int, StragglerReport], None] | None = None,
         on_restage: Callable[[int, int, dict[int, int], StragglerReport], None] | None = None,
         evict_barrier: Callable[[int, StragglerReport], ControlAction | None] | None = None,
+        reshard_gate: Callable[[int, int, StragglerReport, float], ControlAction | None]
+        | None = None,
     ) -> None:
         if check_every < 1:
             raise ValueError(f"check_every must be >= 1, got {check_every}")
@@ -175,9 +186,13 @@ class StragglerResponse:
         self.on_evict = on_evict
         self.on_restage = on_restage
         self.evict_barrier = evict_barrier
+        self.reshard_gate = reshard_gate
         #: evictions vetoed by the barrier (save not yet durable) — each one
         #: is a deferral, retried on the next flagged check
         self.deferred_evictions = 0
+        #: evictions skipped by the payback gate (projected win under the
+        #: re-shard cost) — each skip is its own recorded defer_reshard row
+        self.deferred_reshards = 0
         self.channels = tuple(
             f"DIST/host{h}::step" for h in range(detector.n_hosts)
         )
@@ -225,6 +240,56 @@ class StragglerResponse:
                 if action is not None:
                     actions.append(action)
         return actions
+
+    # -- elastic membership --------------------------------------------------------
+    def register_host(self, host: int, stage: int | None = None) -> None:
+        """Adopt a newly admitted host (elastic membership join).
+
+        The membership layer grows the shared plan first (``MicrobatchPlan.
+        retarget`` in place — the newcomer enters at the carried mean weight);
+        this call brings the response's own state into lockstep: the weight
+        ceiling registers, the detector grows a window, the trigger-channel
+        surface extends, and (optionally) the host takes a pipeline stage.
+        """
+        host = int(host)
+        if host not in self.plan.weights:
+            raise ValueError(f"host {host} not in the plan; grow the plan first")
+        self._full_weight[host] = self.plan.weights[host]
+        self.detector.add_host(host)
+        self._streak[host] = 0
+        self.channels = tuple(
+            sorted(set(self.channels) | {f"DIST/host{host}::step"})
+        )
+        if stage is not None and self.stage_plan is not None:
+            self.stage_for_host[host] = int(stage)
+
+    def remove_host(self, host: int) -> None:
+        """Shed a departing host without judging it (heartbeat-expiry leaves,
+        operator drains): the same plan/detector/transport/stage bookkeeping
+        as a straggler eviction, minus the ``evict`` action row and the
+        ``on_evict`` callback — the caller owns the departure's journal."""
+        host = int(host)
+        self.plan.evict(host)
+        self.detector.evict(host)
+        self._streak.pop(host, None)
+        self._full_weight.pop(host, None)
+        self._drop_orphan_stage(host)
+
+    def _drop_orphan_stage(self, host: int) -> None:
+        """An evicted host's stage must not stay in the StagePlan: depths()
+        would keep apportioning layers to a rank nobody runs.  Drop the stage
+        (its layers re-apportion among survivors) unless another host still
+        owns it."""
+        stage = self.stage_for_host.pop(host, None)
+        if (
+            self.stage_plan is not None
+            and stage is not None
+            and stage in self.stage_plan.weights
+            and stage not in self.stage_for_host.values()
+            and len(self.stage_plan.weights) > 1
+        ):
+            del self.stage_plan.weights[stage]
+            self._full_stage_weight.pop(stage, None)
 
     # -- policy -------------------------------------------------------------------
     def _owns_stage(self, host: int) -> bool:
@@ -381,7 +446,19 @@ class StragglerResponse:
         barrier's durable save must land *first*.  A ``None`` from the barrier
         vetoes this check's eviction — the streak is deliberately left intact,
         so the next flagged check retries; a wedged checkpoint path therefore
-        delays shrinking the fleet instead of shrinking it unsafely."""
+        delays shrinking the fleet instead of shrinking it unsafely.
+
+        The payback gate runs even earlier: when the projected win of
+        shedding the host does not cover the re-shard cost, the returned
+        ``defer_reshard`` action is recorded *instead of* evicting (and
+        instead of paying for a barrier save the fleet then would not use).
+        The streak stays, so the gate re-evaluates on every flagged check —
+        a host that keeps degrading eventually pays back and goes."""
+        if self.reshard_gate is not None:
+            deferred = self.reshard_gate(step, host, report, slowdown)
+            if deferred is not None:
+                self.deferred_reshards += 1
+                return [deferred]
         if self.evict_barrier is not None:
             barrier_action = self.evict_barrier(step, report)
             if barrier_action is None:
@@ -567,24 +644,7 @@ class StragglerResponse:
     def _evict(
         self, step: int, host: int, report: StragglerReport, slowdown: float
     ) -> ControlAction:
-        self.plan.evict(host)
-        self.detector.evict(host)
-        self._streak.pop(host, None)
-        # an evicted host's stage must not stay in the StagePlan: depths()
-        # would keep apportioning layers to a rank nobody runs.  Drop the
-        # stage (its layers re-apportion among survivors) unless another host
-        # still owns it; the launcher's on_evict rebuilds the shrunk mesh, so
-        # the next pack() targets the surviving rank count.
-        stage = self.stage_for_host.pop(host, None)
-        if (
-            self.stage_plan is not None
-            and stage is not None
-            and stage in self.stage_plan.weights
-            and stage not in self.stage_for_host.values()
-            and len(self.stage_plan.weights) > 1
-        ):
-            del self.stage_plan.weights[stage]
-            self._full_stage_weight.pop(stage, None)
+        self.remove_host(host)
         if self.on_evict is not None:
             self.on_evict(host, report)
         return ControlAction(

@@ -295,6 +295,18 @@ class TimerLogger:
         self._db = db if db is not None else timer_db()
         directory = os.path.dirname(os.path.abspath(path))
         os.makedirs(directory, exist_ok=True)
+        # a writer killed mid-line (SIGKILL during log()) leaves a partial
+        # trailing record; terminate it so this logger's first append starts
+        # on a fresh line instead of fusing two records into garbage
+        try:
+            with open(self.path, "rb+") as f:
+                f.seek(0, os.SEEK_END)
+                if f.tell() > 0:
+                    f.seek(-1, os.SEEK_END)
+                    if f.read(1) != b"\n":
+                        f.write(b"\n")
+        except FileNotFoundError:
+            pass
 
     def log(self, iteration: int, extra: Mapping[str, object] | None = None) -> None:
         record = {
@@ -308,7 +320,17 @@ class TimerLogger:
             f.write(json.dumps(record) + "\n")
 
     def read_all(self) -> list[dict]:
+        """Parse every complete record; a torn line from a killed writer is
+        skipped rather than raised (its step is re-logged on resume anyway)."""
         if not os.path.exists(self.path):
             return []
+        out: list[dict] = []
         with open(self.path) as f:
-            return [json.loads(line) for line in f if line.strip()]
+            for line in f:
+                if not line.strip():
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue
+        return out

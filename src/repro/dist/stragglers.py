@@ -204,6 +204,25 @@ class StragglerDetector:
             self._timer_marks[(host, timer_name)] = (seconds, count)
 
     # -- membership -------------------------------------------------------------
+    def add_host(self, host: int) -> None:
+        """Grow the fleet to include ``host`` (elastic membership: a mid-run
+        join).  Hosts stay dense ints; growing to ``host`` allocates empty
+        windows for any ids in between.  Re-adding a previously evicted id is
+        rejected — a rejoining physical node takes a fresh id, so its stale
+        history can never pollute the new incarnation's judgment."""
+        host = int(host)
+        if host < 0:
+            raise ValueError(f"host must be >= 0, got {host}")
+        if host in self.evicted:
+            raise ValueError(
+                f"host {host} was evicted; rejoin under a fresh host id"
+            )
+        while self.n_hosts <= host:
+            self._windows.append(deque(maxlen=self.window))
+            self._totals.append(0.0)
+            self._counts.append(0)
+            self.n_hosts += 1
+
     def evict(self, host: int) -> None:
         """Remove ``host`` from the fleet (the straggler-response eviction
         path): its window is cleared, future samples are dropped, and it no

@@ -25,6 +25,12 @@ Event kinds (targets in parentheses):
 ``hang_host``           effectively stop a fleet host (host; arg=factor,
                         default 1000x)
 ``restore_host``        clear injected slowdowns on a host (host)
+``kill_rank``           SIGKILL a real subprocess rank (host)
+``hang_rank``           SIGSTOP a real subprocess rank — heartbeats stop but
+                        the process lives (host)
+``rejoin_rank``         launch a fresh rank that requests admission (host =
+                        new host id)
+``slow_rank``           throttle a real rank's step pacing (host, arg=factor)
 ======================  =======================================================
 """
 
@@ -38,6 +44,7 @@ from dataclasses import dataclass
 __all__ = [
     "CHECKPOINT_FAULTS",
     "FLEET_FAULTS",
+    "RANK_FAULTS",
     "FaultEvent",
     "FaultPlan",
     "seeded_rng",
@@ -56,6 +63,10 @@ CHECKPOINT_FAULTS: tuple[str, ...] = (
 
 #: environment faults against a (simulated) fleet
 FLEET_FAULTS: tuple[str, ...] = ("slow_host", "hang_host", "restore_host")
+
+#: process-level faults against *real* subprocess ranks (the fleet drill:
+#: SIGKILL / SIGSTOP a live rank, admit a fresh one, throttle one's pacing)
+RANK_FAULTS: tuple[str, ...] = ("kill_rank", "hang_rank", "rejoin_rank", "slow_rank")
 
 
 def _seed_int(*parts: object) -> int:
@@ -127,11 +138,15 @@ class FaultPlan:
             if rng.random() >= rate:
                 continue
             kind = rng.choice(list(kinds))
-            if kind in FLEET_FAULTS:
+            if kind in FLEET_FAULTS or kind in RANK_FAULTS:
                 if not hosts:
                     continue
                 target = rng.choice(list(hosts))
-                arg = round(rng.uniform(2.0, 8.0), 3) if kind == "slow_host" else None
+                arg = (
+                    round(rng.uniform(2.0, 8.0), 3)
+                    if kind in ("slow_host", "slow_rank")
+                    else None
+                )
             elif kind == "sigterm":
                 target, arg = None, round(rng.uniform(1.0, 10.0), 3)
             else:

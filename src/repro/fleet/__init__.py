@@ -1,0 +1,62 @@
+"""Real multi-process fleets: transport, elastic membership, payback gates.
+
+The simulated fleet (:class:`repro.adapt.SimulatedFleet`) proved the
+measure→decide→migrate loop on one CPU; this package runs the same loop over
+**real subprocess ranks**:
+
+* :mod:`~repro.fleet.store` — the file-backed rendezvous substrate (atomic
+  JSON keys + append-only JSONL logs, no external services);
+* :mod:`~repro.fleet.transport` — :class:`FleetTransport`, the cross-process
+  ``publish``/``gather`` implementation of the
+  :class:`~repro.dist.stragglers.LocalTransport` surface, with heartbeats and
+  epoch fencing so a partitioned or killed rank is *detected*, never assumed;
+* :mod:`~repro.fleet.membership` — :class:`Membership` (the epoch-fenced host
+  registry over the shared :class:`~repro.dist.pipeline.MicrobatchPlan`) and
+  :class:`FleetController` (mid-run joins earn share, heartbeat-expired hosts
+  leave through the checkpoint-before-evict barrier);
+* :mod:`~repro.fleet.payback` — :class:`ReshardCost` (measured save+restore
+  seconds) and :class:`PaybackPolicy` (evict/join only when the projected win
+  over the horizon covers the re-shard cost; every skip is an
+  ``ADAPT/fleet::defer_reshard`` row);
+* :mod:`~repro.fleet.topology` — stage ownership as a pure function of
+  (membership, stage count);
+* :mod:`~repro.fleet.worker` / :mod:`~repro.fleet.launch` — the numpy-only
+  rank main and the multi-process launcher
+  (``python -m repro.fleet.launch --hosts N``).
+
+Importing this package stays jax-free (worker startup must be fast); the
+launcher imports the jax-adjacent control plane lazily at call time.
+"""
+
+from .store import FileStore
+from .topology import data_parallel_rank, stage_for_host
+from .transport import FleetTransport
+
+__all__ = [
+    "FileStore",
+    "FleetController",
+    "FleetTransport",
+    "Membership",
+    "PaybackPolicy",
+    "ReshardCost",
+    "data_parallel_rank",
+    "stage_for_host",
+]
+
+#: control-plane classes resolved lazily (PEP 562): they import repro.adapt,
+#: which drags in jax — the worker subprocess must never pay that at spawn
+_LAZY = {
+    "PaybackPolicy": "payback",
+    "ReshardCost": "payback",
+    "Membership": "membership",
+    "FleetController": "membership",
+}
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f".{module}", __name__), name)

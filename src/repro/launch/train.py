@@ -50,6 +50,7 @@ from ..data import DataLoader, SyntheticConfig, SyntheticLM
 from ..dist.meshutil import local_mesh
 from ..dist.pipeline import MicrobatchPlan, StagePlan, phase_ticks
 from ..dist.stragglers import StragglerDetector
+from ..fleet.topology import stage_for_host
 from ..models import model as M
 from ..models.config import ArchConfig, ShapeConfig
 from ..monitor import MetricsExporter, MonitorServer, StatusWriter
@@ -135,6 +136,12 @@ def run_training(
     registry = param_registry()
     sch = sess.scheduler
     st = RunState(max_iterations=settings.steps)
+    # checkpoint-label convention: every save is labeled with the number of
+    # optimizer updates applied — i.e. the next iteration to execute — so a
+    # resume (`s.iteration = label; DataLoader(start_step=label)`) replays the
+    # trajectory exactly.  The CHECKPOINT bin of iteration i runs *after*
+    # EVOL applied update i, so its label is i + 1, never i.
+    st["updates"] = 0
 
     if cfg is None:
         cfg = get_smoke_config(settings.arch) if settings.smoke else get_config(settings.arch)
@@ -214,8 +221,11 @@ def run_training(
             raise RuntimeError("no checkpoint manager bound")
         t0 = time.monotonic()
         with ckpt_write_scope:
+            # labeled with the update count, not the adapt step: the barrier
+            # fires post-EVOL, so the state on disk is the start-of-step state
+            # for update `st["updates"]` (see adaptive_checkpoint)
             manager.save(
-                step, current_state(),
+                st["updates"], current_state(),
                 metadata={"reason": "before_evict", **topology_meta()},
             )
             manager.wait()
@@ -242,7 +252,13 @@ def run_training(
             check_every=8,
             local_feed=(0, "EVOL/trainer::train_step"),
             stage_plan=stage_plan,
-            stage_for_host={0: 0} if pipelined else None,
+            # stage ownership derived from membership coordinates, not
+            # hard-coded: one live host on an S-stage pipeline owns stage 0
+            # (the rest ride along in-process), and a multi-host launcher
+            # passes its real membership through the same function
+            stage_for_host=(
+                stage_for_host([0], settings.pipeline_stages) if pipelined else None
+            ),
             evict_barrier=ckpt_control.evict_barrier if ckpt_active else None,
         )
     )
@@ -330,6 +346,7 @@ def run_training(
             s["params"] = tree["params"]
             s["opt_state"] = tree["opt_state"]
             s.iteration = start_step
+            s["updates"] = start_step
             topo = (meta or {}).get("topology")
             if (
                 pipelined
@@ -371,10 +388,12 @@ def run_training(
 
         if manager is not None:
             # installed only once live state exists — a preemption mid-restore
-            # has nothing durable to add anyway
+            # has nothing durable to add anyway.  The label is the number of
+            # optimizer updates applied so far, which is exact no matter where
+            # in the scheduler cycle the signal lands.
             try:
                 manager.install_sigterm_handler(
-                    lambda: (st.iteration, current_state()),
+                    lambda: (st["updates"], current_state()),
                     deadline_s=settings.save_deadline_s,
                 )
             except ValueError:
@@ -414,6 +433,7 @@ def run_training(
         params, opt_state, metrics = s["exec"](s["params"], s["opt_state"], s["batch"])
         metrics = jax.block_until_ready(metrics)
         s["params"], s["opt_state"] = params, opt_state
+        s["updates"] = s.iteration + 1
         s["metrics"] = {k: float(v) for k, v in metrics.items()}
         bump_flops(model_flops)
         bump_tokens(float(s["built"].tokens_per_call))
@@ -438,7 +458,7 @@ def run_training(
             return
         with ckpt_write_scope:
             stats = manager.save(
-                s.iteration,
+                s["updates"],
                 current_state(),
                 metadata={"reason": decision.reason, **topology_meta()},
             )
@@ -468,7 +488,7 @@ def run_training(
         if manager is not None and settings.ckpt_mode != "off":
             with ckpt_write_scope:
                 manager.save(
-                    s.iteration,
+                    s["updates"],
                     current_state(),
                     metadata={"reason": "final", **topology_meta()},
                 )

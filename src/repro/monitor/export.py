@@ -147,9 +147,10 @@ class MetricsExporter:
     detector:
         A :class:`repro.dist.stragglers.StragglerDetector`; adds the per-host
         families.
-    serving_fn / checkpoint_fn:
+    serving_fn / checkpoint_fn / fleet_fn:
         The same payload callables the monitor endpoints use
-        (``serving_payload(engine)`` / ``manager.status_payload``).
+        (``serving_payload(engine)`` / ``manager.status_payload`` /
+        ``FleetController.status_payload``).
     """
 
     def __init__(
@@ -161,6 +162,7 @@ class MetricsExporter:
         detector=None,
         serving_fn: Callable[[], dict[str, Any]] | None = None,
         checkpoint_fn: Callable[[], dict[str, Any]] | None = None,
+        fleet_fn: Callable[[], dict[str, Any]] | None = None,
     ) -> None:
         if not _METRIC_RE.match(namespace):
             raise ValueError(f"invalid metric namespace {namespace!r}")
@@ -170,6 +172,7 @@ class MetricsExporter:
         self._detector = detector
         self._serving_fn = serving_fn
         self._checkpoint_fn = checkpoint_fn
+        self._fleet_fn = fleet_fn
 
     @property
     def db(self) -> TimerDB:
@@ -253,6 +256,8 @@ class MetricsExporter:
             families.extend(self._collect_serving())
         if self._checkpoint_fn is not None:
             families.extend(self._collect_checkpoints())
+        if self._fleet_fn is not None:
+            families.extend(self._collect_fleet())
 
         # boundedness introspection + scrape clocks (the soak invariants)
         card = db.cardinality()
@@ -366,6 +371,36 @@ class MetricsExporter:
                     [({}, float(totals[key]))],
                 ))
         return out
+
+    def _collect_fleet(self) -> list[MetricFamily]:
+        ns = self.namespace
+        payload = self._fleet_fn() or {}
+        hosts = payload.get("hosts", {})
+        return [
+            MetricFamily(f"{ns}_fleet_hosts", "gauge",
+                         "Hosts currently in the fleet membership",
+                         [({}, float(len(hosts)))]),
+            MetricFamily(f"{ns}_fleet_membership_epoch", "gauge",
+                         "Membership epoch (bumps on every join/leave; the "
+                         "transport fence)",
+                         [({}, float(payload.get("epoch", 0)))]),
+            MetricFamily(f"{ns}_fleet_host_share", "gauge",
+                         "Microbatches assigned per member host",
+                         [({"host": str(h)}, float(e.get("share", 0)))
+                          for h, e in hosts.items()]),
+            MetricFamily(f"{ns}_fleet_joins_total", "counter",
+                         "Hosts admitted mid-run",
+                         [({}, float(payload.get("joins_total", 0)))]),
+            MetricFamily(f"{ns}_fleet_leaves_total", "counter",
+                         "Hosts removed on heartbeat expiry",
+                         [({}, float(payload.get("leaves_total", 0)))]),
+            MetricFamily(f"{ns}_fleet_reshard_defers_total", "counter",
+                         "Membership changes skipped by the payback gate",
+                         [({}, float(payload.get("reshard_defers_total", 0)))]),
+            MetricFamily(f"{ns}_fleet_stale_samples_total", "counter",
+                         "Samples rejected by the transport epoch fence",
+                         [({}, float(payload.get("stale_samples_rejected", 0)))]),
+        ]
 
     # -- output ----------------------------------------------------------------
     def render(self) -> str:

@@ -24,6 +24,9 @@ Endpoints:
                  quarantined (corrupt) entries with reasons, and the resume
                  plan the run started from — wire with
                  ``checkpoint_fn=manager.status_payload``
+    /fleet       JSON fleet membership view: epoch, per-host weight/share/
+                 stage/heartbeat age, join/leave/defer counters — wire with
+                 ``fleet_fn=FleetController.status_payload``
 
 Also provides :class:`StatusWriter`, which atomically writes the same payload to
 a JSON file for clusters where an open port is not possible.
@@ -97,6 +100,7 @@ class MonitorServer:
         status_fn: Callable[[], dict[str, Any]] | None = None,
         serving_fn: Callable[[], dict[str, Any]] | None = None,
         checkpoint_fn: Callable[[], dict[str, Any]] | None = None,
+        fleet_fn: Callable[[], dict[str, Any]] | None = None,
         exporter: MetricsExporter | None = None,
     ) -> None:
         self._db = db if db is not None else timer_db()
@@ -104,11 +108,15 @@ class MonitorServer:
         self._status_fn = status_fn or (lambda: {})
         self._serving_fn = serving_fn
         self._checkpoint_fn = checkpoint_fn
+        self._fleet_fn = fleet_fn
         self._exporter = (
             exporter
             if exporter is not None
             else MetricsExporter(
-                self._db, serving_fn=serving_fn, checkpoint_fn=checkpoint_fn
+                self._db,
+                serving_fn=serving_fn,
+                checkpoint_fn=checkpoint_fn,
+                fleet_fn=fleet_fn,
             )
         )
         self._httpd: ThreadingHTTPServer | None = None
@@ -162,6 +170,11 @@ class MonitorServer:
                         self._send(
                             200, json.dumps(monitor._checkpoint_fn()).encode()
                         )
+                elif self.path.startswith("/fleet"):
+                    if monitor._fleet_fn is None:
+                        self._send(404, b'{"error": "no fleet controller wired"}')
+                    else:
+                        self._send(200, json.dumps(monitor._fleet_fn()).encode())
                 elif self.path == "/" or self.path.startswith("/index"):
                     sections = [format_report(monitor._db), format_tree_report(monitor._db)]
                     if monitor._serving_fn is not None:

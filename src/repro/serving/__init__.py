@@ -15,12 +15,11 @@ The supported surface (frozen by ``tests/test_api_surface.py``):
 * :class:`KVCacheManager` — block-based cache accounting (admission bound +
   utilization counters).
 
-:class:`ServingEngine` is the deprecated static-batch engine — exact old
-behavior behind a ``DeprecationWarning`` (ROADMAP deprecation policy); see
-the README "Serving" migration table.
+The deprecated static-batch ``ServingEngine`` shim was removed after its
+two-PR deprecation window (ROADMAP deprecation policy); the README "Serving"
+migration table maps its surface onto :class:`ServeSession`.
 """
 
-from ._legacy import ServingEngine
 from .engine import Request, RequestHandle, RequestResult, ServeSession
 from .kvcache import KVCacheManager
 from .slo import ServiceLevel
@@ -32,5 +31,4 @@ __all__ = [
     "RequestResult",
     "ServeSession",
     "ServiceLevel",
-    "ServingEngine",
 ]

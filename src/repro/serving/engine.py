@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -55,19 +55,14 @@ __all__ = ["Request", "RequestHandle", "RequestResult", "ServeSession"]
 class Request:
     """One generation request: prompt tokens in, up to ``max_new_tokens`` out.
 
-    The last three fields are legacy state filled by the deprecated
-    :class:`~repro.serving._legacy.ServingEngine`; :class:`ServeSession`
-    reports through :class:`RequestResult` instead and leaves them untouched.
+    Pure work description — :class:`ServeSession` reports progress and
+    completion through :class:`RequestResult`, never by mutating the request.
     """
 
     rid: int
     prompt: list[int]
     max_new_tokens: int = 16
     eos_token: int | None = None
-    # filled by the deprecated static-batch engine only
-    output: list[int] = field(default_factory=list)
-    admitted_at: float = 0.0
-    finished_at: float = 0.0
 
 
 @dataclass

@@ -103,6 +103,22 @@ def check_snapshots(
                       f"decreased {prev_v} -> {totals[key]}")
         prev_totals = totals
 
+    # membership epoch: when the fleet families are exported, the epoch may
+    # only climb — a snapshot showing a lower epoch than its predecessor means
+    # a membership record regressed (or a stale controller overwrote a newer
+    # one), which breaks the transport's fencing contract
+    epoch_metric = f"{ns}_fleet_membership_epoch"
+    last_epoch = None
+    for snap in parsed:
+        if (epoch_metric, ()) not in snap.exposition.samples:
+            continue
+        epoch = snap.gauge(epoch_metric)
+        if last_epoch is not None and epoch < last_epoch:
+            _fail(failures,
+                  f"snapshot {snap.index}: membership epoch regressed "
+                  f"{last_epoch:g} -> {epoch:g}")
+        last_epoch = epoch
+
     # -- 3. ADAPT external visibility ------------------------------------------
     metric = f"{ns}_adapt_actions_total"
     for snap in parsed:

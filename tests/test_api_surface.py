@@ -142,7 +142,6 @@ EXPECTED_SERVING_ALL = [
     "RequestResult",
     "ServeSession",
     "ServiceLevel",
-    "ServingEngine",  # deprecated static-batch shim, kept >= 2 PRs
 ]
 
 EXPECTED_SERVE_SESSION_METHODS = {
@@ -196,10 +195,7 @@ def test_request_handle_surface():
 
 def test_request_and_result_fields():
     fields = [f.name for f in dataclasses.fields(serving.Request)]
-    assert fields == [
-        "rid", "prompt", "max_new_tokens", "eos_token",
-        "output", "admitted_at", "finished_at",  # legacy-engine state
-    ]
+    assert fields == ["rid", "prompt", "max_new_tokens", "eos_token"]
     fields = [f.name for f in dataclasses.fields(serving.RequestResult)]
     assert fields == [
         "rid", "tokens", "status", "submitted_at", "finished_at",

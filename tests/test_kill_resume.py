@@ -5,6 +5,7 @@ run (bitwise-deterministic substrate, fixed LR horizon)."""
 
 import json
 import os
+import re
 import signal
 import subprocess
 import sys
@@ -21,9 +22,14 @@ import sys
 from repro.launch.train import TrainSettings, run_training
 
 ckpt_dir, log_path, steps = sys.argv[1], sys.argv[2], int(sys.argv[3])
+# ckpt_delay_s throttles the run (~0.35s per synchronous save) so the killer's
+# 0.1s poll loop always lands the SIGKILL mid-run — without it a 10-step CPU
+# run can race through its final save before the kill arrives, leaving the
+# resume nothing to re-execute and the continuity check vacuous
 run_training(TrainSettings(
     smoke=True, steps=steps, global_batch=2, seq_len=16,
     ckpt_dir=ckpt_dir, ckpt_mode="fixed", ckpt_every=2, ckpt_synchronous=True,
+    ckpt_delay_s=0.35,
     report_every=0, log_path=log_path, lr_total_steps=steps,
     pipeline_stages=1, pipeline_layers=4, pipeline_micro=2, pipeline_width=8,
 ))
@@ -38,7 +44,10 @@ def _losses(log_path: str) -> dict[int, float]:
         for line in f:
             if not line.strip():
                 continue
-            row = json.loads(line)
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # torn trailing line from the killed writer
             extra = row.get("extra") or {}
             if "loss" in extra:
                 out[row["iteration"]] = extra["loss"]
@@ -88,7 +97,12 @@ def test_sigkill_and_resume_trajectory_continuous(tmp_path):
 
     # resume: same command auto-restores from the newest valid checkpoint
     out = _run(str(script), ckpt, log, env)
-    assert "restored checkpoint at step" in out
+    m = re.search(r"restored checkpoint at step (\d+)", out)
+    assert m, out
+    restore_step = int(m.group(1))
+    # the continuity check below is only meaningful if the resume actually
+    # re-executed steps — a restore at the final step would pass vacuously
+    assert restore_step < _STEPS, "kill landed after the final save"
     resumed_losses = _losses(log)
     # log rows are 0-indexed per executed step: the last is steps - 1
     assert max(resumed_losses) == _STEPS - 1, "resumed run did not reach the end"

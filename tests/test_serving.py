@@ -1,7 +1,7 @@
 """Serving-layer tests: KV block accounting, admission validation (the
 prompt-overrun fix), degenerate-stats fix, SLO shedding arithmetic + the
-ADAPT/serving controller, request handles, the monitor ``/serving`` view, and
-the deprecated static-batch shim (warns, identical outputs)."""
+ADAPT/serving controller, request handles, and the monitor ``/serving``
+view."""
 
 import json
 import urllib.error
@@ -19,13 +19,7 @@ from repro.core.timers import TimerDB
 from repro.models import model as M
 from repro.monitor import MonitorServer
 from repro.monitor.server import serving_payload
-from repro.serving import (
-    KVCacheManager,
-    Request,
-    ServeSession,
-    ServiceLevel,
-    ServingEngine,
-)
+from repro.serving import KVCacheManager, Request, ServeSession, ServiceLevel
 from repro.serving.engine import _percentile, validate_request
 from repro.serving.slo import estimated_queue_delay, shed_count
 
@@ -227,47 +221,6 @@ def test_serve_session_end_to_end_bookkeeping():
     # phase scopes measured hierarchically: serve parents admit/prefill/decode
     for name in ("serve", "serve/admit", "serve/prefill", "serve/decode"):
         assert engine._db.get(name).count > 0, name
-
-
-# --- deprecated static-batch shim ---------------------------------------------
-
-def test_legacy_engine_warns_and_matches_serve_session():
-    """The ROADMAP deprecation contract: old entry points keep exact behavior
-    behind a DeprecationWarning.  With uniform prompt lengths (legacy
-    left-padding is a no-op) the static-batch engine and ServeSession must
-    produce identical greedy tokens."""
-    cfg = get_smoke_config("llama3.2-1b")
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(1)
-    prompts = [list(rng.integers(0, cfg.vocab_size, 12)) for _ in range(4)]
-
-    with pytest.warns(DeprecationWarning, match="ServingEngine is deprecated"):
-        legacy = ServingEngine(cfg, params, max_batch=4, max_seq=32)
-    for rid, prompt in enumerate(prompts):
-        legacy.submit(Request(rid, list(prompt), max_new_tokens=4))
-    legacy_done = legacy.run()
-    assert len(legacy_done) == 4
-
-    engine = ServeSession(cfg, params, n_slots=4, max_seq=32, control=False)
-    handles = [engine.submit(Request(rid, list(prompt), max_new_tokens=4))
-               for rid, prompt in enumerate(prompts)]
-    engine.run_until_idle()
-    assert [h.result().tokens for h in handles] == [r.output for r in legacy_done]
-
-    stats = legacy.stats()  # degenerate-percentile fix holds on the shim too
-    assert stats["completed"] == 4.0 and stats["p95_latency_s"] >= 0.0
-
-
-def test_legacy_engine_validates_and_guards_stats():
-    cfg = get_smoke_config("llama3.2-1b")
-    with pytest.warns(DeprecationWarning):
-        legacy = ServingEngine(cfg, params=None, max_batch=2, max_seq=32)
-    assert legacy.stats()["p95_latency_s"] == 0.0  # no completions: no crash
-    req = Request(0, list(range(100)), max_new_tokens=8)
-    legacy.submit(req)
-    assert len(req.prompt) == 32 - 8  # truncated at submit, not scattered OOB
-    with pytest.raises(ValueError):
-        legacy.submit(Request(1, [], max_new_tokens=4))
 
 
 # --- monitor /serving endpoint ------------------------------------------------
