@@ -52,6 +52,7 @@ from __future__ import annotations
 import functools
 from collections.abc import Callable, Iterable, Mapping
 from dataclasses import dataclass, field
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -264,40 +265,51 @@ class StagePlan:
     def max_depth(self) -> int:
         return max(self.depths().values())
 
-    def pack(self, layer_params: jax.Array) -> tuple[jax.Array, jax.Array]:
-        """Pad a flat ``(n_layers, ...)`` layer stack into pipeline slots.
+    def pack(self, layer_params) -> tuple[Any, jax.Array]:
+        """Pad a flat per-layer parameter pytree into pipeline slots.
 
-        Returns ``(packed, mask)``: ``packed`` has shape
-        ``(n_stages * max_depth, ...)`` where stage ``s`` owns the contiguous
-        slot block ``[s * max_depth, (s+1) * max_depth)`` holding its layers
-        front-aligned; ``mask`` is the matching boolean slot-activity vector
-        (inactive slots are identity in the pipeline and receive zero
-        gradient).  Padding makes unequal stage depths executable under the
-        SPMD schedule, whose per-device blocks must be equal-sized.
+        ``layer_params`` is any pytree whose leaves share a leading
+        ``n_layers`` dimension (a bare ``(n_layers, ...)`` array or a
+        transformer block stack).  Returns ``(packed, mask)``: every packed
+        leaf has leading ``n_stages * max_depth`` where stage ``s`` owns the
+        contiguous slot block ``[s * max_depth, (s+1) * max_depth)`` holding
+        its layers front-aligned; ``mask`` is the matching boolean
+        slot-activity vector (inactive slots are identity in the pipeline and
+        receive zero gradient).  Padding makes unequal stage depths executable
+        under the SPMD schedule, whose per-device blocks must be equal-sized.
         """
-        if int(layer_params.shape[0]) != self.n_layers:
-            raise ValueError(
-                f"layer_params has {layer_params.shape[0]} layers, plan "
-                f"covers {self.n_layers}"
-            )
         lmax, rows = self._slot_rows()
         n_slots = self.n_stages * lmax
         index = jnp.asarray(rows)
-        packed = jnp.zeros((n_slots,) + layer_params.shape[1:], layer_params.dtype)
-        packed = packed.at[index].set(layer_params)
+
+        def _pack_leaf(leaf):
+            if int(leaf.shape[0]) != self.n_layers:
+                raise ValueError(
+                    f"layer_params leaf has {leaf.shape[0]} layers, plan "
+                    f"covers {self.n_layers}"
+                )
+            out = jnp.zeros((n_slots,) + tuple(leaf.shape[1:]), leaf.dtype)
+            return out.at[index].set(leaf)
+
+        packed = jax.tree.map(_pack_leaf, layer_params)
         mask = jnp.zeros((n_slots,), bool).at[index].set(True)
         return packed, mask
 
-    def unpack(self, packed: jax.Array) -> jax.Array:
-        """Gather the active slots of a packed array (e.g. per-slot gradients)
-        back into the flat ``(n_layers, ...)`` layer order."""
+    def unpack(self, packed):
+        """Gather the active slots of a packed pytree (e.g. per-slot
+        gradients) back into the flat ``(n_layers, ...)`` layer order."""
         lmax, rows = self._slot_rows()
-        if int(packed.shape[0]) != self.n_stages * lmax:
-            raise ValueError(
-                f"packed has {packed.shape[0]} slots, plan packs to "
-                f"{self.n_stages * lmax}"
-            )
-        return packed[jnp.asarray(rows)]
+        index = jnp.asarray(rows)
+
+        def _unpack_leaf(leaf):
+            if int(leaf.shape[0]) != self.n_stages * lmax:
+                raise ValueError(
+                    f"packed leaf has {leaf.shape[0]} slots, plan packs to "
+                    f"{self.n_stages * lmax}"
+                )
+            return leaf[index]
+
+        return jax.tree.map(_unpack_leaf, packed)
 
     def _slot_rows(self) -> tuple[int, list[int]]:
         """``(max_depth, slot index of each flat layer in layer order)`` —
@@ -424,28 +436,53 @@ def phase_ticks(n_micro: int, axis_size: int) -> dict[str, tuple[int, int]]:
     }
 
 
+def _leaf_key(tree) -> tuple:
+    """Hashable (structure, shapes, dtypes) signature of a pytree."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (
+        str(treedef),
+        tuple((tuple(leaf.shape), str(leaf.dtype)) for leaf in leaves),
+    )
+
+
 class PipelineStep:
     """Reusable 1F1B pipeline train step over one mesh axis.
 
     Builds (and caches, per input shape/dtype signature) the jitted tick
     runner once; every ``__call__`` then executes the schedule and returns
-    ``(loss, grads)`` where ``loss`` is the mean of
-    ``loss_fn(stage_output, target)`` over microbatches and ``grads`` matches
-    ``stage_params``'s shape (per-slot parameter gradients of that mean loss).
+    ``(loss, grads)`` where ``loss`` is the mean of the per-microbatch loss
+    and ``grads`` matches ``stage_params``'s structure (per-slot parameter
+    gradients of that mean loss).
+
+    ``stage_params`` may be a bare ``(n_slots, ...)`` array or any pytree
+    whose leaves share the leading slot dimension (e.g. a transformer block
+    stack) — :meth:`StagePlan.pack` produces either.
 
     Parameters
     ----------
     layer_fn:
         ``layer_fn(slot_params, activation) -> activation`` — must preserve
-        activation shape/dtype (homogeneous pipeline).
+        activation shape/dtype (homogeneous pipeline).  ``slot_params`` is
+        one slot's slice of the ``stage_params`` pytree.
     loss_fn:
         ``loss_fn(final_activation, target_microbatch) -> scalar``; it is
-        evaluated (and differentiated) on the last stage only.
+        evaluated (and differentiated) on the last stage only.  ``None`` is
+        allowed iff ``last_fn`` is given (the head then owns the loss).
     mesh / axis:
-        The pipeline mesh axis.  ``stage_params.shape[0]`` must be a multiple
-        of the axis size; each device runs a contiguous slot block.
+        The pipeline mesh axis.  The slot count must be a multiple of the
+        axis size; each device runs a contiguous slot block.
     n_micro:
         Microbatch count ``M``; ``x.shape[0]`` must be divisible by it.
+    first_fn / last_fn:
+        Stage-pinning hooks for heterogeneous ends of the pipeline (both or
+        neither).  ``first_fn(first_params, raw_microbatch) -> activation``
+        runs pinned to stage 0 (the embedding: ``x`` then carries raw inputs,
+        e.g. int32 tokens, and the activation shape/dtype is inferred from
+        ``first_fn``); ``last_fn(last_params, activation, target_microbatch)
+        -> scalar`` runs pinned to the final stage (norm + head + loss) and
+        replaces ``loss_fn``.  ``__call__`` then takes ``first_params`` /
+        ``last_params`` and returns ``(loss, (stage_grads, first_grads,
+        last_grads))``.
     phase_cb:
         Optional ``phase_cb(name) -> context manager`` for
         ``warmup``/``steady``/``cooldown``.  When set, the schedule executes
@@ -453,24 +490,45 @@ class PipelineStep:
         callback's context open around each — the launcher hook that times
         phases as ``repro.timing`` scopes.  When unset the whole schedule is
         one fused dispatch.
+    stage_spec:
+        Optional ``PartitionSpec`` pytree (or prefix) for the packed stage
+        parameters, composing per-stage tensor-parallel/FSDP sharding with
+        the pipeline axis: every leaf spec's leading entry must be the
+        pipeline ``axis`` (the slot dimension); trailing entries shard the
+        parameter dimensions over the mesh's inner axes.  Defaults to
+        ``P(axis)`` (stage-sharded, otherwise replicated).  Applied to both
+        the stage params input and the gradient accumulator carry.
     """
 
     def __init__(
         self,
-        layer_fn: Callable[[jax.Array, jax.Array], jax.Array],
-        loss_fn: Callable[[jax.Array, jax.Array], jax.Array],
+        layer_fn: Callable[[Any, jax.Array], jax.Array],
+        loss_fn: Callable[[jax.Array, jax.Array], jax.Array] | None,
         *,
         mesh: Mesh,
         axis: str,
         n_micro: int,
+        first_fn: Callable[[Any, jax.Array], jax.Array] | None = None,
+        last_fn: Callable[[Any, jax.Array, jax.Array], jax.Array] | None = None,
         phase_cb: Callable[[str], object] | None = None,
+        stage_spec: Any | None = None,
     ) -> None:
+        if (first_fn is None) != (last_fn is None):
+            raise ValueError(
+                "first_fn and last_fn pin the pipeline's heterogeneous ends "
+                "together: pass both or neither"
+            )
+        if loss_fn is None and last_fn is None:
+            raise ValueError("loss_fn may only be None when last_fn is given")
         self.layer_fn = layer_fn
         self.loss_fn = loss_fn
+        self.first_fn = first_fn
+        self.last_fn = last_fn
         self.mesh = mesh
         self.axis = axis
         self.n_micro = int(n_micro)
         self.phase_cb = phase_cb
+        self.stage_spec = stage_spec if stage_spec is not None else P(axis)
         self.axis_size = int(mesh.shape[axis])
         if self.n_micro < 1:
             raise ValueError(f"n_micro must be >= 1, got {n_micro}")
@@ -479,13 +537,36 @@ class PipelineStep:
     # -- public entry ---------------------------------------------------------
     def __call__(
         self,
-        stage_params: jax.Array,
+        stage_params: Any,
         x: jax.Array,
         targets: jax.Array,
         stage_mask: jax.Array | None = None,
-    ) -> tuple[jax.Array, jax.Array]:
+        *,
+        first_params: Any = None,
+        last_params: Any = None,
+    ):
         s, m = self.axis_size, self.n_micro
-        n_slots = int(stage_params.shape[0])
+        hooks = self.last_fn is not None
+        if hooks and (first_params is None or last_params is None):
+            raise ValueError(
+                "first_params/last_params are required when first_fn/last_fn "
+                "are set"
+            )
+        if not hooks and (first_params is not None or last_params is not None):
+            raise ValueError(
+                "first_params/last_params given but the step has no "
+                "first_fn/last_fn"
+            )
+        leaves = jax.tree.leaves(stage_params)
+        if not leaves:
+            raise ValueError("stage_params has no array leaves")
+        n_slots = int(leaves[0].shape[0])
+        for leaf in leaves:
+            if int(leaf.shape[0]) != n_slots:
+                raise ValueError(
+                    f"stage_params leaves disagree on the slot dimension: "
+                    f"{leaf.shape[0]} != {n_slots}"
+                )
         if n_slots % s != 0:
             raise ValueError(
                 f"n_slots={n_slots} must be a multiple of mesh axis "
@@ -504,73 +585,104 @@ class PipelineStep:
             raise ValueError(
                 f"stage_mask shape {stage_mask.shape} != ({n_slots},)"
             )
-        micro_shape = (batch // m,) + x.shape[1:]
+        in_micro_shape = (batch // m,) + x.shape[1:]
         tmicro_shape = (batch // m,) + targets.shape[1:]
+        if hooks:
+            act_abs = jax.eval_shape(
+                self.first_fn, first_params,
+                jax.ShapeDtypeStruct(in_micro_shape, x.dtype),
+            )
+            if not hasattr(act_abs, "shape"):
+                raise ValueError("first_fn must return a single array")
+            micro_shape, act_dtype = tuple(act_abs.shape), act_abs.dtype
+        else:
+            micro_shape, act_dtype = in_micro_shape, x.dtype
 
         key = (
-            stage_params.shape, str(stage_params.dtype),
+            _leaf_key(stage_params),
+            _leaf_key(first_params), _leaf_key(last_params),
             x.shape, str(x.dtype), targets.shape, str(targets.dtype),
         )
         runner = self._runners.get(key)
         if runner is None:
             runner = self._build(
-                n_slots, micro_shape, tmicro_shape,
-                x.dtype, targets.dtype, stage_params.shape[1:], stage_params.dtype,
+                n_slots, in_micro_shape, micro_shape, tmicro_shape,
+                x.dtype, act_dtype, targets.dtype,
+                stage_params, first_params, last_params,
             )
             self._runners[key] = runner
 
-        micro = x.reshape((m,) + micro_shape)
+        micro = x.reshape((m,) + in_micro_shape)
         tmicro = targets.reshape((m,) + tmicro_shape)
         r = min(2 * s, m)
+        zeros_like_stacked = (
+            lambda tree, lead: jax.tree.map(
+                lambda leaf: jnp.zeros(lead + tuple(leaf.shape), leaf.dtype), tree
+            )
+        )
         carry = (
-            jnp.zeros((s,) + micro_shape, x.dtype),            # forward ring
-            jnp.zeros((s,) + micro_shape, x.dtype),            # backward ring
-            jnp.zeros((s, r) + micro_shape, x.dtype),          # input stash
-            jnp.zeros((s, r) + micro_shape, x.dtype),          # loss-grad seeds
+            jnp.zeros((s,) + micro_shape, act_dtype),          # forward ring
+            jnp.zeros((s,) + micro_shape, act_dtype),          # backward ring
+            jnp.zeros((s, r) + micro_shape, act_dtype),        # input stash
+            jnp.zeros((s, r) + micro_shape, act_dtype),        # loss-grad seeds
             jnp.zeros((s,), jnp.float32),                      # per-device loss
-            jnp.zeros((n_slots,) + stage_params.shape[1:], stage_params.dtype),
+            jax.tree.map(                                      # per-slot grads
+                lambda leaf: jnp.zeros(leaf.shape, leaf.dtype), stage_params
+            ),
+            zeros_like_stacked(first_params, (s,)) if hooks else (),
+            zeros_like_stacked(last_params, (s,)) if hooks else (),
         )
         if self.phase_cb is None:
-            carry = runner(stage_params, stage_mask, micro, tmicro, carry,
-                           0, m + 2 * s - 1)
+            carry = runner(stage_params, stage_mask, first_params, last_params,
+                           micro, tmicro, carry, 0, m + 2 * s - 1)
         else:
             for name, (t0, t1) in phase_ticks(m, s).items():
                 if t1 <= t0:
                     continue
                 with self.phase_cb(name):
-                    carry = runner(stage_params, stage_mask, micro, tmicro,
-                                   carry, t0, t1)
+                    carry = runner(stage_params, stage_mask, first_params,
+                                   last_params, micro, tmicro, carry, t0, t1)
                     # synchronize inside the scope so the caliper window
                     # covers the phase's device work, not just its dispatch
                     jax.block_until_ready(carry[4])
         loss = jnp.sum(carry[4])  # only the last stage accumulated loss
-        return loss, carry[5]
+        if not hooks:
+            return loss, carry[5]
+        # the pinned-stage accumulators are stacked over the pipeline axis;
+        # only the pinned stage contributed non-zeros, so the sum extracts it
+        first_grads = jax.tree.map(lambda a: jnp.sum(a, axis=0), carry[6])
+        last_grads = jax.tree.map(lambda a: jnp.sum(a, axis=0), carry[7])
+        return loss, (carry[5], first_grads, last_grads)
 
     # -- schedule construction -------------------------------------------------
-    def _build(self, n_slots, micro_shape, tmicro_shape, x_dtype, t_dtype,
-               param_shape, param_dtype):
+    def _build(self, n_slots, in_micro_shape, micro_shape, tmicro_shape,
+               x_dtype, act_dtype, t_dtype,
+               stage_params, first_params, last_params):
         s, m = self.axis_size, self.n_micro
         r = min(2 * s, m)
         axis, layer_fn, loss_fn = self.axis, self.layer_fn, self.loss_fn
+        first_fn, last_fn = self.first_fn, self.last_fn
+        hooks = last_fn is not None
         fwd_ring = [(i, (i + 1) % s) for i in range(s)]
         bwd_ring = [(i, (i - 1) % s) for i in range(s)]
 
-        out_abstract = jax.eval_shape(
-            layer_fn,
-            jax.ShapeDtypeStruct(tuple(param_shape), param_dtype),
-            jax.ShapeDtypeStruct(micro_shape, x_dtype),
+        slot_abs = jax.tree.map(
+            lambda leaf: jax.ShapeDtypeStruct(tuple(leaf.shape[1:]), leaf.dtype),
+            stage_params,
         )
-        if out_abstract.shape != micro_shape or out_abstract.dtype != x_dtype:
+        act_sds = jax.ShapeDtypeStruct(micro_shape, act_dtype)
+        tgt_sds = jax.ShapeDtypeStruct(tmicro_shape, t_dtype)
+        out_abstract = jax.eval_shape(layer_fn, slot_abs, act_sds)
+        if out_abstract.shape != micro_shape or out_abstract.dtype != act_dtype:
             raise ValueError(
                 f"layer_fn must preserve activation shape/dtype for "
                 f"pipelining; got {out_abstract.shape}/{out_abstract.dtype} "
-                f"from {micro_shape}/{x_dtype}"
+                f"from {micro_shape}/{act_dtype}"
             )
-        loss_abstract = jax.eval_shape(
-            loss_fn,
-            jax.ShapeDtypeStruct(micro_shape, x_dtype),
-            jax.ShapeDtypeStruct(tmicro_shape, t_dtype),
-        )
+        if hooks:
+            loss_abstract = jax.eval_shape(last_fn, last_params, act_sds, tgt_sds)
+        else:
+            loss_abstract = jax.eval_shape(loss_fn, act_sds, tgt_sds)
         if loss_abstract.shape != ():
             raise ValueError(
                 f"loss_fn must return a scalar, got shape {loss_abstract.shape}"
@@ -586,18 +698,26 @@ class PipelineStep:
             res, _ = jax.lax.scan(one, act, (stages_local, mask_local))
             return res
 
-        def shard_body(stage_params, stage_mask, micro, tmicro, carry, t0, t1):
+        def _masked_add(acc_tree, d_tree, flag):
+            return jax.tree.map(
+                lambda acc, d: acc + jnp.where(flag, d, jnp.zeros_like(d)),
+                acc_tree, d_tree,
+            )
+
+        def shard_body(stage_params, stage_mask, first_params, last_params,
+                       micro, tmicro, carry, t0, t1):
             d = jax.lax.axis_index(axis)
             is_first = d == 0
             is_last = d == s - 1
 
             def tick(t, c):
-                recv_f, recv_b, stash, seed, loss_sum, gacc = c
+                recv_f, recv_b, stash, seed, loss_sum, gacc, fgacc, lgacc = c
                 # ---- forward: microbatch t - d ----
                 mf = t - d
                 active_f = jnp.logical_and(mf >= 0, mf < m)
                 mf_c = jnp.clip(mf, 0, m - 1)
-                feed = jax.lax.dynamic_index_in_dim(micro, mf_c, keepdims=False)
+                raw = jax.lax.dynamic_index_in_dim(micro, mf_c, keepdims=False)
+                feed = first_fn(first_params, raw) if hooks else raw
                 act_in = jnp.where(is_first, feed, recv_f)
                 slot_f = jnp.mod(mf_c, r)
                 cur = jax.lax.dynamic_index_in_dim(stash, slot_f, keepdims=False)
@@ -608,8 +728,18 @@ class PipelineStep:
                 # last stage: fold the loss in and stash its gradient seed for
                 # the backward tick one step later
                 tgt = jax.lax.dynamic_index_in_dim(tmicro, mf_c, keepdims=False)
-                lm, gm = jax.value_and_grad(lambda yy: loss_fn(yy, tgt))(y)
                 take_loss = jnp.logical_and(active_f, is_last)
+                if hooks:
+                    lm, (gm, glast) = jax.value_and_grad(
+                        lambda yy, lp: last_fn(lp, yy, tgt), argnums=(0, 1)
+                    )(y, last_params)
+                    lgacc = _masked_add(
+                        lgacc,
+                        jax.tree.map(lambda g: g / m, glast),
+                        take_loss,
+                    )
+                else:
+                    lm, gm = jax.value_and_grad(lambda yy: loss_fn(yy, tgt))(y)
                 loss_sum = loss_sum + jnp.where(take_loss, lm, 0.0) / m
                 curs = jax.lax.dynamic_index_in_dim(seed, slot_f, keepdims=False)
                 seed = jax.lax.dynamic_update_index_in_dim(
@@ -619,7 +749,8 @@ class PipelineStep:
                 # ---- backward: microbatch t - (2S - 1 - d) ----
                 mb = t - (2 * s - 1 - d)
                 active_b = jnp.logical_and(mb >= 0, mb < m)
-                slot_b = jnp.mod(jnp.clip(mb, 0, m - 1), r)
+                mb_c = jnp.clip(mb, 0, m - 1)
+                slot_b = jnp.mod(mb_c, r)
                 act_b = jax.lax.dynamic_index_in_dim(stash, slot_b, keepdims=False)
                 g_seed = jax.lax.dynamic_index_in_dim(seed, slot_b, keepdims=False)
                 g_in = jnp.where(is_last, g_seed, recv_b)
@@ -629,32 +760,54 @@ class PipelineStep:
                     lambda w, a: local(w, stage_mask, a), stage_params, act_b
                 )
                 dw, dact = vjp(g_in)
-                gacc = gacc + jnp.where(active_b, dw, jnp.zeros_like(dw))
+                gacc = _masked_add(gacc, dw, active_b)
+                if hooks:
+                    # stage 0's activation gradient flows into the pinned
+                    # first_fn (the embedding); recompute its vjp from the
+                    # raw microbatch input
+                    raw_b = jax.lax.dynamic_index_in_dim(
+                        micro, mb_c, keepdims=False
+                    )
+                    _, vjp_first = jax.vjp(
+                        lambda fp: first_fn(fp, raw_b), first_params
+                    )
+                    (dfp,) = vjp_first(dact)
+                    fgacc = _masked_add(
+                        fgacc, dfp, jnp.logical_and(active_b, is_first)
+                    )
                 send_b = jax.lax.ppermute(
                     jnp.where(active_b, dact, jnp.zeros_like(dact)),
                     axis, bwd_ring,
                 )
-                return send_f, send_b, stash, seed, loss_sum, gacc
+                return (send_f, send_b, stash, seed, loss_sum, gacc,
+                        fgacc, lgacc)
 
-            recv_f, recv_b, stash, seed, loss_sum, gacc = carry
-            c = (recv_f[0], recv_b[0], stash[0], seed[0], loss_sum[0], gacc)
+            (recv_f, recv_b, stash, seed, loss_sum, gacc, fgacc, lgacc) = carry
+            head = lambda tree: jax.tree.map(lambda a: a[0], tree)
+            c = (recv_f[0], recv_b[0], stash[0], seed[0], loss_sum[0], gacc,
+                 head(fgacc), head(lgacc))
             c = jax.lax.fori_loop(t0, t1, tick, c)
-            recv_f, recv_b, stash, seed, loss_sum, gacc = c
+            recv_f, recv_b, stash, seed, loss_sum, gacc, fgacc, lgacc = c
+            unhead = lambda tree: jax.tree.map(lambda a: a[None], tree)
             return (recv_f[None], recv_b[None], stash[None], seed[None],
-                    loss_sum[None], gacc)
+                    loss_sum[None], gacc, unhead(fgacc), unhead(lgacc))
 
-        carry_specs = (P(axis), P(axis), P(axis), P(axis), P(axis), P(axis))
+        carry_specs = (P(axis), P(axis), P(axis), P(axis), P(axis),
+                       self.stage_spec, P(axis), P(axis))
         smapped = shard_map(
             shard_body,
             mesh=self.mesh,
-            in_specs=(P(axis), P(axis), P(), P(), carry_specs, None, None),
+            in_specs=(self.stage_spec, P(axis), P(), P(), P(), P(),
+                      carry_specs, None, None),
             out_specs=carry_specs,
             check=False,
         )
 
-        @functools.partial(jax.jit, static_argnums=(5, 6))
-        def run(stage_params, stage_mask, micro, tmicro, carry, t0, t1):
-            return smapped(stage_params, stage_mask, micro, tmicro, carry, t0, t1)
+        @functools.partial(jax.jit, static_argnums=(7, 8))
+        def run(stage_params, stage_mask, first_params, last_params,
+                micro, tmicro, carry, t0, t1):
+            return smapped(stage_params, stage_mask, first_params, last_params,
+                           micro, tmicro, carry, t0, t1)
 
         return run
 

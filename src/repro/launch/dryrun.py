@@ -1,5 +1,5 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run (deliverable e): lower + compile every
 (architecture × input-shape × mesh) cell against the production meshes and
@@ -8,7 +8,9 @@ record memory/cost/collective analysis for the roofline.
 The two lines above MUST stay the first statements in this file: jax locks the
 device count at first initialization, and the dry-run needs 512 placeholder
 host devices so ``jax.make_mesh`` can build the 2×16×16 production mesh.  Do
-NOT set this flag globally — smoke tests and benchmarks see 1 device.
+NOT set this flag globally — smoke tests and benchmarks see 1 device.  It is
+``setdefault``, not assignment, so a caller that already forced a smaller
+topology (benchmarks/bench_roofline.py runs a mini 8-device dry-run) wins.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
@@ -29,7 +31,7 @@ from typing import Any
 
 import jax
 
-from ..configs import ARCH_IDS, get_config
+from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..models import model as M
 from ..models.config import SHAPES, shape_applicable
 from .hlo import collective_bytes, op_census
@@ -78,11 +80,12 @@ def _sharded_nbytes(abstract_tree, shardings) -> int:
     return total
 
 
-def _compile_cell(cfg, shape, multi_pod, rules_overrides, step_kwargs=None):
+def _compile_cell(cfg, shape, multi_pod, rules_overrides, step_kwargs=None, mesh=None):
     """Lower + compile; returns (compiled, built, mesh)."""
     from ..dist.sharding import ShardingRules  # noqa: F401 - typing aid
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     rules = rules_for(cfg, rules_overrides)
     built = build_step(cfg, mesh, rules, shape, **(step_kwargs or {}))
     with mesh:
@@ -100,7 +103,8 @@ def _cell_costs(compiled):
     return cost, collective_bytes(hlo), hlo
 
 
-def _scan_corrected(cfg, shape, multi_pod, rules_overrides, raw_cost, raw_coll, step_kwargs=None):
+def _scan_corrected(cfg, shape, multi_pod, rules_overrides, raw_cost, raw_coll,
+                    step_kwargs=None, mesh=None):
     """Correct for XLA counting while(scan) bodies once, not × trip count.
 
     Compiles reduced-depth variants — one pattern period and zero layers
@@ -116,9 +120,9 @@ def _scan_corrected(cfg, shape, multi_pod, rules_overrides, raw_cost, raw_coll, 
         c11 = cfg.replace(n_layers=p, n_enc_layers=1)
         c01 = cfg.replace(n_layers=p, n_enc_layers=0)
         c00 = cfg.replace(n_layers=0, n_enc_layers=0)
-        cost11, coll11, _ = _cell_costs(_compile_cell(c11, shape, multi_pod, rules_overrides, step_kwargs)[0])
-        cost01, coll01, _ = _cell_costs(_compile_cell(c01, shape, multi_pod, rules_overrides, step_kwargs)[0])
-        cost00, coll00, _ = _cell_costs(_compile_cell(c00, shape, multi_pod, rules_overrides, step_kwargs)[0])
+        cost11, coll11, _ = _cell_costs(_compile_cell(c11, shape, multi_pod, rules_overrides, step_kwargs, mesh)[0])
+        cost01, coll01, _ = _cell_costs(_compile_cell(c01, shape, multi_pod, rules_overrides, step_kwargs, mesh)[0])
+        cost00, coll00, _ = _cell_costs(_compile_cell(c00, shape, multi_pod, rules_overrides, step_kwargs, mesh)[0])
         deltas = [
             (_diff(cost11, cost01), _diff_coll(coll11, coll01), cfg.n_enc_layers - 1),
             (_diff(cost01, cost00), _diff_coll(coll01, coll00), n_scan - 1),
@@ -126,8 +130,8 @@ def _scan_corrected(cfg, shape, multi_pod, rules_overrides, raw_cost, raw_coll, 
     else:
         c1 = cfg.replace(n_layers=p)
         c0 = cfg.replace(n_layers=0)
-        cost1, coll1, _ = _cell_costs(_compile_cell(c1, shape, multi_pod, rules_overrides, step_kwargs)[0])
-        cost0, coll0, _ = _cell_costs(_compile_cell(c0, shape, multi_pod, rules_overrides, step_kwargs)[0])
+        cost1, coll1, _ = _cell_costs(_compile_cell(c1, shape, multi_pod, rules_overrides, step_kwargs, mesh)[0])
+        cost0, coll0, _ = _cell_costs(_compile_cell(c0, shape, multi_pod, rules_overrides, step_kwargs, mesh)[0])
         deltas = [(_diff(cost1, cost0), _diff_coll(coll1, coll0), n_scan - 1)]
 
     corrected_cost = dict(raw_cost)
@@ -165,17 +169,28 @@ def run_cell(
     verbose: bool = True,
     scan_correction: bool = True,
     step_kwargs: dict[str, Any] | None = None,
+    smoke: bool = False,
+    mesh=None,
+    mesh_label: str | None = None,
+    shape_override=None,
 ) -> dict[str, Any]:
-    """Lower+compile one cell; write and return the artifact record."""
-    cfg = get_config(arch)
+    """Lower+compile one cell; write and return the artifact record.
+
+    ``smoke``/``mesh``/``mesh_label``/``shape_override`` support reduced-scale
+    dry-runs (benchmarks/bench_roofline.py): the SMOKE_CONFIG instead of the
+    published shape, an explicit mesh instead of the production one, and a
+    custom ShapeConfig — the artifact's ``mesh`` field carries the label so
+    roofline.load_rows can select the mini matrix.
+    """
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
     if arch_overrides:
         cfg = cfg.replace(**arch_overrides)
-    shape = SHAPES[shape_name]
+    shape = shape_override if shape_override is not None else SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
-    mesh_name = "multi" if multi_pod else "single"
+    mesh_name = mesh_label or ("multi" if multi_pod else "single")
     record: dict[str, Any] = {
         "arch": arch,
-        "shape": shape_name,
+        "shape": shape.name,
         "mesh": mesh_name,
         "variant": variant,
         "status": "skipped",
@@ -184,11 +199,13 @@ def run_cell(
         record["skip_reason"] = why
         _write(record, out_dir)
         if verbose:
-            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: SKIP ({why})")
+            print(f"[dryrun] {arch} × {shape.name} × {mesh_name}: SKIP ({why})")
         return record
 
     t0 = time.monotonic()
-    compiled, built, mesh = _compile_cell(cfg, shape, multi_pod, rules_overrides, step_kwargs)
+    compiled, built, mesh = _compile_cell(
+        cfg, shape, multi_pod, rules_overrides, step_kwargs, mesh
+    )
     t_compile = time.monotonic() - t0
 
     mem = _mem_analysis(compiled)
@@ -197,7 +214,7 @@ def run_cell(
 
     if scan_correction:
         cost_corr, coll_corr, bodies = _scan_corrected(
-            cfg, shape, multi_pod, rules_overrides, cost, coll, step_kwargs
+            cfg, shape, multi_pod, rules_overrides, cost, coll, step_kwargs, mesh
         )
     else:
         cost_corr, coll_corr, bodies = cost, coll, []
@@ -247,7 +264,7 @@ def run_cell(
         flops = cost_corr.get("flops", float("nan"))
         cbytes = sum(coll_corr.values())
         print(
-            f"[dryrun] {arch} × {shape_name} × {mesh_name} [{variant}]: OK "
+            f"[dryrun] {arch} × {shape.name} × {mesh_name} [{variant}]: OK "
             f"flops/dev={flops:.3e} coll_bytes/dev={cbytes:.3e} "
             f"(compile {t_compile:.1f}s, total {record['wall_seconds']:.1f}s)"
         )

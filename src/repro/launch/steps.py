@@ -20,7 +20,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..dist.context import use_sharding
 from ..dist.pipeline import PipelineStep, StagePlan
 from ..dist.sharding import DEFAULT_RULES, FSDP_RULES, ShardingRules, spec_for, tree_shardings
-from ..models import model as M
+from ..models import model as M, pipeline as MP
 from ..models.config import ArchConfig, ShapeConfig
 from ..optim import AdamWConfig, adamw_update, init_opt_state, opt_state_axes, warmup_cosine
 from ..timing import timed
@@ -31,6 +31,7 @@ __all__ = [
     "batch_axes",
     "make_train_step",
     "make_pipeline_train_step",
+    "make_transformer_pipeline_train_step",
     "make_prefill_step",
     "make_serve_step",
     "shardings_for",
@@ -309,6 +310,98 @@ def make_pipeline_train_step(
         packed, mask = stage_plan.pack(params["layers"])
         loss, packed_grads = pipeline(packed, x, tgt, stage_mask=mask)
         grads = {"layers": stage_plan.unpack(packed_grads)}
+        lr = warmup_cosine(
+            opt_state["step"], peak_lr=peak_lr, warmup_steps=warmup_steps,
+            total_steps=total_steps,
+        )
+        params, opt_state, stats = adamw_update(opt_cfg, params, grads, opt_state, lr)
+        metrics = {"loss": loss, "lr": lr}
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    replicated = NamedSharding(mesh, P())
+    b_abs = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
+    b_shard = {name: replicated for name in b_abs}
+    return PipelineBuiltStep(
+        fn=train_fn,
+        abstract_inputs=(b_abs,),
+        in_shardings=(None, None, b_shard),
+        out_shardings=None,
+        abstract_state={"params": p_abs, "opt_state": o_abs},
+        tokens_per_call=global_batch * seq_len,
+        stage_plan=stage_plan,
+        pipeline=pipeline,
+        init_params=init_params,
+    )
+
+
+@timed("steps::make_transformer_pipeline_train_step")
+def make_transformer_pipeline_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    stage_plan: StagePlan,
+    *,
+    axis: str = "pod",
+    seq_len: int,
+    global_batch: int,
+    n_micro: int,
+    rules: ShardingRules | None = None,
+    opt_cfg: AdamWConfig | None = None,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+    seed: int = 0,
+    phase_cb: Any = None,
+) -> PipelineBuiltStep:
+    """Build a 1F1B train step over the *real* transformer stack of ``cfg``.
+
+    One pipeline slot runs one block-pattern period of the model
+    (``models.pipeline``): the scanned stack is re-packed from the live
+    ``stage_plan`` every step (a run-time ``restage`` moves stage boundaries
+    on the next step), the token embedding is pinned to stage 0 and the
+    final-norm + LM head + CE loss to the last stage via the schedule's
+    ``first_fn``/``last_fn`` hooks, and the Pallas kernels selected by
+    ``cfg.attn_impl``/``cfg.norm_impl`` dispatch inside the staged
+    computation.  Stage-parameter specs compose the pipeline axis with the
+    config's TP/FSDP rules (``models.pipeline.stage_param_specs``).
+    """
+    opt_cfg = opt_cfg if opt_cfg is not None else AdamWConfig()
+    rules = rules if rules is not None else rules_for(cfg)
+    n_units = MP.check_pipelineable(cfg)
+    if stage_plan.n_layers != n_units:
+        raise ValueError(
+            f"stage_plan covers {stage_plan.n_layers} units but {cfg.name} "
+            f"has {n_units} pattern periods ({cfg.n_layers} layers / "
+            f"{len(cfg.block_pattern)}-block pattern)"
+        )
+    layer_fn, first_fn, last_fn = MP.make_stage_fns(cfg)
+    stage_spec = MP.stage_param_specs(cfg, mesh, rules, axis)
+    pipeline = PipelineStep(
+        layer_fn, None, mesh=mesh, axis=axis, n_micro=n_micro,
+        first_fn=first_fn, last_fn=last_fn, phase_cb=phase_cb,
+        stage_spec=stage_spec,
+    )
+
+    def init_params(init_key=None):
+        k = init_key if init_key is not None else jax.random.PRNGKey(seed)
+        return M.init_params(cfg, k)
+
+    p_abs = M.abstract_params(cfg)
+    o_abs = jax.eval_shape(lambda p: init_opt_state(opt_cfg, p), p_abs)
+
+    def train_fn(params, opt_state, batch):
+        stack, first, last = MP.split_params(cfg, params)
+        packed, mask = stage_plan.pack(stack)
+        loss, (packed_grads, first_grads, last_grads) = pipeline(
+            packed, batch["tokens"], batch["targets"], stage_mask=mask,
+            first_params=first, last_params=last,
+        )
+        grads = MP.merge_grads(
+            cfg, stage_plan.unpack(packed_grads), first_grads, last_grads
+        )
         lr = warmup_cosine(
             opt_state["step"], peak_lr=peak_lr, warmup_steps=warmup_steps,
             total_steps=total_steps,

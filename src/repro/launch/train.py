@@ -51,12 +51,17 @@ from ..dist.meshutil import local_mesh
 from ..dist.pipeline import MicrobatchPlan, StagePlan, phase_ticks
 from ..dist.stragglers import StragglerDetector
 from ..fleet.topology import stage_for_host
-from ..models import model as M
+from ..models import model as M, pipeline as model_pipeline
 from ..models.config import ArchConfig, ShapeConfig
 from ..monitor import MetricsExporter, MonitorServer, StatusWriter
 from ..optim import AdamWConfig, init_opt_state
 from ..timing import TimingSession
-from .steps import make_pipeline_train_step, make_train_step, rules_for
+from .steps import (
+    make_pipeline_train_step,
+    make_train_step,
+    make_transformer_pipeline_train_step,
+    rules_for,
+)
 
 __all__ = ["TrainSettings", "run_training", "main"]
 
@@ -101,9 +106,13 @@ class TrainSettings:
     #: over an N-way "pod" mesh axis (N must not exceed visible devices; the
     #: CPU smoke path uses 1 and still runs the full tick schedule)
     pipeline_stages: int = 0
-    pipeline_layers: int = 8          # homogeneous stage-stack depth
+    pipeline_layers: int = 8          # homogeneous stage-stack depth (MLP path)
     pipeline_micro: int = 4           # 1F1B microbatch count
-    pipeline_width: int = 32          # stage activation width
+    pipeline_width: int = 32          # stage activation width (MLP path)
+    #: pipeline the real transformer (cfg's block stack; one pattern period
+    #: per slot, embed/head pinned to the end stages) instead of the
+    #: synthetic residual-MLP stack
+    pipeline_model: bool = False
 
 
 def _flops_per_step(cfg: ArchConfig, tokens: int) -> float:
@@ -164,8 +173,8 @@ def run_training(
     logger = TimerLogger(settings.log_path) if settings.log_path else None
     status = StatusWriter(settings.status_path) if settings.status_path else None
     monitor = None
-    if pipelined:
-        # the pipeline path trains the residual-MLP stage stack, not the
+    if pipelined and not settings.pipeline_model:
+        # the MLP pipeline path trains the residual-MLP stage stack, not the
         # transformer cfg: same 6 * active-params * tokens convention, with
         # the stack's actual parameter count (n_layers x 2 W x W matmuls)
         active = settings.pipeline_layers * 2 * settings.pipeline_width ** 2
@@ -199,7 +208,7 @@ def run_training(
             return {}
         return {
             "topology": {
-                "n_layers": settings.pipeline_layers,
+                "n_layers": stage_plan.n_layers,
                 "n_micro": settings.pipeline_micro,
                 "stage_weights": {
                     int(k): float(v) for k, v in stage_plan.weights.items()
@@ -239,8 +248,13 @@ def run_training(
     # controller additionally owns the StagePlan, so a confirmed straggler
     # that owns a stage is answered by moving the stage boundary (restage)
     # before any microbatch derate.
+    pipeline_units = (
+        model_pipeline.check_pipelineable(cfg)
+        if pipelined and settings.pipeline_model
+        else settings.pipeline_layers
+    )
     stage_plan = (
-        StagePlan.equal(range(settings.pipeline_stages), settings.pipeline_layers)
+        StagePlan.equal(range(settings.pipeline_stages), pipeline_units)
         if pipelined
         else None
     )
@@ -293,19 +307,33 @@ def run_training(
                 for name in phase_ticks(settings.pipeline_micro,
                                         settings.pipeline_stages)
             }
-            built = make_pipeline_train_step(
-                mesh, stage_plan,
-                width=settings.pipeline_width,
-                vocab_size=cfg.vocab_size,
-                seq_len=settings.seq_len,
-                global_batch=settings.global_batch,
-                n_micro=settings.pipeline_micro,
-                opt_cfg=opt_cfg,
-                peak_lr=settings.peak_lr, total_steps=max(horizon, 2),
-                warmup_steps=max(min(100, horizon // 10), 1),
-                seed=settings.seed,
-                phase_cb=lambda name: phase_handles[name],
-            )
+            if settings.pipeline_model:
+                built = make_transformer_pipeline_train_step(
+                    cfg, mesh, stage_plan,
+                    seq_len=settings.seq_len,
+                    global_batch=settings.global_batch,
+                    n_micro=settings.pipeline_micro,
+                    rules=rules,
+                    opt_cfg=opt_cfg,
+                    peak_lr=settings.peak_lr, total_steps=max(horizon, 2),
+                    warmup_steps=max(min(100, horizon // 10), 1),
+                    seed=settings.seed,
+                    phase_cb=lambda name: phase_handles[name],
+                )
+            else:
+                built = make_pipeline_train_step(
+                    mesh, stage_plan,
+                    width=settings.pipeline_width,
+                    vocab_size=cfg.vocab_size,
+                    seq_len=settings.seq_len,
+                    global_batch=settings.global_batch,
+                    n_micro=settings.pipeline_micro,
+                    opt_cfg=opt_cfg,
+                    peak_lr=settings.peak_lr, total_steps=max(horizon, 2),
+                    warmup_steps=max(min(100, horizon // 10), 1),
+                    seed=settings.seed,
+                    phase_cb=lambda name: phase_handles[name],
+                )
             s["built"] = built
             s["exec"] = built.fn  # host-side: re-packs the live StagePlan
         else:
@@ -351,7 +379,7 @@ def run_training(
             if (
                 pipelined
                 and topo
-                and int(topo.get("n_layers", -1)) == settings.pipeline_layers
+                and int(topo.get("n_layers", -1)) == stage_plan.n_layers
             ):
                 # N->M topology restore: re-apportion the saved stage capacity
                 # weights onto the *current* stage set.  The parameter stack is
@@ -360,7 +388,7 @@ def run_training(
                 # layers along the new boundaries.  (Manifest JSON stringifies
                 # the stage keys; convert back.)
                 saved = StagePlan(
-                    n_layers=settings.pipeline_layers,
+                    n_layers=stage_plan.n_layers,
                     weights={
                         int(k): float(v)
                         for k, v in topo["stage_weights"].items()
@@ -536,7 +564,8 @@ def run_training(
     if pipelined:
         summary["pipeline"] = {
             "n_stages": settings.pipeline_stages,
-            "n_layers": settings.pipeline_layers,
+            "n_layers": stage_plan.n_layers,
+            "workload": cfg.name if settings.pipeline_model else "mlp",
             "n_micro": settings.pipeline_micro,
             "depths": stage_plan.depths(),
             "phase_seconds": {
@@ -582,6 +611,10 @@ def main(argv=None) -> int:
     ap.add_argument("--pipeline-layers", type=int, default=8)
     ap.add_argument("--pipeline-micro", type=int, default=4)
     ap.add_argument("--pipeline-width", type=int, default=32)
+    ap.add_argument("--pipeline-model", action="store_true",
+                    help="pipeline the real transformer stack (one block-pattern "
+                         "period per stage slot, embed/head pinned to the end "
+                         "stages) instead of the synthetic residual-MLP stack")
     args = ap.parse_args(argv)
 
     settings = TrainSettings(
@@ -598,6 +631,7 @@ def main(argv=None) -> int:
         pipeline_layers=args.pipeline_layers,
         pipeline_micro=args.pipeline_micro,
         pipeline_width=args.pipeline_width,
+        pipeline_model=args.pipeline_model,
     )
     sess = TimingSession(timer_db())
     summary = run_training(settings, session=sess)

@@ -25,19 +25,29 @@ import jax.numpy as jnp
 
 from ..dist.context import constrain
 from ..kernels.rglru import ops as rglru_ops
+from ..kernels.rmsnorm.ops import rms_norm_fused
 from ..kernels.rwkv6 import ops as rwkv_ops
 from .attention import attention, decode_attention
 from .config import ArchConfig
 from .layers import PSpec, apply_rotary, gated_mlp, gated_mlp_specs, rms_norm, rotary_embedding
 from .moe import moe_apply, moe_specs
 
-__all__ = ["block_specs", "block_cache_specs", "block_apply"]
+__all__ = ["block_specs", "block_cache_specs", "block_apply", "norm"]
 
 _RWKV_LORA = 64
 
 
 def _dtype(cfg: ArchConfig):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def norm(cfg: ArchConfig, x: jax.Array, weight: jax.Array) -> jax.Array:
+    """Config-dispatched rmsnorm: the unfused reference or the Pallas fused
+    kernel (``cfg.norm_impl == "fused"``; interpret-mode off-TPU).  Both sides
+    compute in f32 and return ``x.dtype`` — identical dtype contract."""
+    if cfg.norm_impl == "fused":
+        return rms_norm_fused(x, weight, cfg.norm_eps)
+    return rms_norm(x, weight, cfg.norm_eps)
 
 
 # ---------------------------------------------------------------------------
@@ -220,14 +230,14 @@ def _project_qkv(cfg, p, x):
     k = jnp.einsum("bsd,dq->bsq", x, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
     v = jnp.einsum("bsd,dq->bsq", x, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
     if cfg.use_qk_norm:
-        q = rms_norm(q, p["qn"], cfg.norm_eps)
-        k = rms_norm(k, p["kn"], cfg.norm_eps)
+        q = norm(cfg, q, p["qn"])
+        k = norm(cfg, k, p["kn"])
     return q, k, v
 
 
 def _attn_core_train(cfg, p, h, rope, *, window, causal, mode, cache):
     """Self-attention over a full sequence (train or prefill)."""
-    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    x = norm(cfg, h, p["ln"])
     q, k, v = _project_qkv(cfg, p, x)
     if rope is not None:
         cos, sin = rope
@@ -266,7 +276,7 @@ def _attn_core_train(cfg, p, h, rope, *, window, causal, mode, cache):
 
 def _attn_core_decode(cfg, p, h, cache, pos, *, window):
     """One-token self-attention against the cache. h: (B,1,D); pos: (B,)."""
-    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    x = norm(cfg, h, p["ln"])
     q, k, v = _project_qkv(cfg, p, x)
     cos, sin = rotary_embedding(pos[:, None], cfg.resolved_head_dim, cfg.rope_theta)
     q = apply_rotary(q, cos, sin)
@@ -291,7 +301,7 @@ def _attn_core_decode(cfg, p, h, cache, pos, *, window):
 
 
 def _ffn_apply(cfg, p, h):
-    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    x = norm(cfg, h, p["ln2"])
     if cfg.moe is not None:
         y, aux = moe_apply(cfg, p["moe"], x)
     else:
@@ -328,7 +338,7 @@ def _rglru_gates(cfg, p, u):
 
 def _rglru_block(cfg, p, h, *, mode, cache):
     rp = p["rnn"]
-    x = rms_norm(h, rp["ln"], cfg.norm_eps)
+    x = norm(cfg, h, rp["ln"])
     u = jnp.einsum("bsd,de->bse", x, rp["w_in"])
     gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, rp["w_gate"]).astype(jnp.float32)).astype(x.dtype)
     conv_state = cache["conv"] if cache is not None else None
@@ -368,7 +378,7 @@ def _rwkv_block(cfg, p, h, *, mode, cache):
     b, s, d = h.shape
     nh, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
     # --- time mix ---
-    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    x = norm(cfg, h, p["ln1"])
     xprev = _token_shift(x, cache["shift_tm"] if cache is not None else None)
     mix = lambda mu: x + (xprev - x) * mu[None, None, :]  # noqa: E731
     r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["w_r"]).reshape(b, s, nh, hd)
@@ -385,13 +395,13 @@ def _rwkv_block(cfg, p, h, *, mode, cache):
     impl = "ref" if mode == "decode" else "chunked"
     y, new_state = rwkv_ops.wkv6(r, k, v, w, p["u"], state, impl=impl)
     # per-head group norm, gate, out projection
-    y = rms_norm(y, jnp.ones((hd,), y.dtype), cfg.norm_eps).reshape(b, s, d)
+    y = norm(cfg, y, jnp.ones((hd,), y.dtype)).reshape(b, s, d)
     y = y * p["gn"][None, None, :].astype(y.dtype)
     y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
     h = h + jnp.einsum("bse,ed->bsd", y, p["w_o"])
     new_shift_tm = x[:, -1]
     # --- channel mix ---
-    x2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    x2 = norm(cfg, h, p["ln2"])
     x2prev = _token_shift(x2, cache["shift_cm"] if cache is not None else None)
     mix2 = lambda mu: x2 + (x2prev - x2) * mu[None, None, :]  # noqa: E731
     kc = jnp.einsum("bsd,df->bsf", mix2(p["mu_ck"]), p["w_ck"])
@@ -413,7 +423,7 @@ def _rwkv_block(cfg, p, h, *, mode, cache):
 def _cross_attn(cfg, p, h, enc_out=None, cache=None, pos=None, mode="train"):
     """Cross-attention: queries from h, K/V from encoder memory."""
     b = h.shape[0]
-    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    x = norm(cfg, h, p["ln"])
     hd = cfg.resolved_head_dim
     q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(b, x.shape[1], cfg.n_heads, hd)
     if mode == "decode":

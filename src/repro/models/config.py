@@ -66,6 +66,9 @@ class ArchConfig:
     #: attention implementation: "naive" | "chunked" (default) | "pallas"
     attn_impl: str = "chunked"
     attn_chunk: int = 512
+    #: rmsnorm implementation: "ref" (unfused, default) | "fused" (Pallas
+    #: kernel; interpret-mode on CPU via default_interpret)
+    norm_impl: str = "ref"
     #: pad vocab up to a multiple of this for sharding (logits masked to true vocab)
     vocab_pad_to: int = 256
     #: §Perf knobs (EXPERIMENTS.md): pre-reshard embedding/lm_head before the

@@ -1,0 +1,162 @@
+"""Kernel-vs-reference dtype drift: bf16 inputs through the Pallas
+interpret-mode fwd/bwd paths must come back in the *same* dtype on both sides
+of the comparison — a silent f32 promotion on one side only would make
+tolerance checks (and the pipelined model's activation contract) lie.
+
+Parametrized per kernel family over {bf16, f32}, pinning
+  * forward output dtypes kernel == reference == input dtype
+    (recurrence states are f32 by design, on BOTH sides),
+  * vjp cotangent dtypes kernel == reference == input dtype,
+  * value agreement at per-family tolerances (the repo-wide convention:
+    bf16 2e-2 .. 3e-2, f32 2e-5 .. 2e-4).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rglru.ops import linear_recurrence
+from repro.kernels.rmsnorm.ops import rms_norm_fused
+from repro.kernels.rwkv6.ops import wkv6
+from repro.models.attention import attention
+from repro.models.layers import rms_norm
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tols(dtype, f32_tol, bf16_tol):
+    t = bf16_tol if dtype == jnp.bfloat16 else f32_tol
+    return dict(atol=t, rtol=t)
+
+
+def _assert_close(a, b, **tol):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **tol
+    )
+
+
+def _check_pair(kernel_fn, ref_fn, inputs, *, fwd_tol, state_is_f32=False):
+    """fwd + vjp: dtype equality on both sides, values within tolerance."""
+    dtype = inputs[0].dtype
+    out_k = kernel_fn(*inputs)
+    out_r = ref_fn(*inputs)
+    outs_k = out_k if isinstance(out_k, tuple) else (out_k,)
+    outs_r = out_r if isinstance(out_r, tuple) else (out_r,)
+    for i, (yk, yr) in enumerate(zip(outs_k, outs_r)):
+        expect = jnp.float32 if (state_is_f32 and i > 0) else dtype
+        assert yk.dtype == expect, f"kernel out[{i}]: {yk.dtype} != {expect}"
+        assert yr.dtype == expect, f"ref out[{i}]: {yr.dtype} != {expect}"
+        _assert_close(yk, yr, **fwd_tol)
+
+    # vjp through the primary output only (states are carried, not lossed)
+    def scalarize(fn):
+        def f(*args):
+            out = fn(*args)
+            y = out[0] if isinstance(out, tuple) else out
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+
+        return f
+
+    gk = jax.grad(scalarize(kernel_fn), argnums=tuple(range(len(inputs))))(*inputs)
+    gr = jax.grad(scalarize(ref_fn), argnums=tuple(range(len(inputs))))(*inputs)
+    for i, (dk, dr) in enumerate(zip(gk, gr)):
+        assert dk.dtype == inputs[i].dtype, (
+            f"kernel grad[{i}] promoted: {dk.dtype} != {inputs[i].dtype}"
+        )
+        assert dr.dtype == inputs[i].dtype, (
+            f"ref grad[{i}] promoted: {dr.dtype} != {inputs[i].dtype}"
+        )
+    return gk, gr
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_attention_flash_vs_naive(dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, h, hd = 2, 128, 2, 16  # s % 128 == 0: the real Pallas tiling path
+    q = (jax.random.normal(k1, (b, s, h, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(k2, (b, s, h, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(k3, (b, s, h, hd)) * 0.5).astype(dtype)
+    gk, gr = _check_pair(
+        lambda q, k, v: flash_attention(q, k, v, causal=True),
+        lambda q, k, v: attention(q, k, v, impl="naive", causal=True),
+        (q, k, v),
+        fwd_tol=_tols(dtype, 2e-5, 2e-2),
+    )
+    tol = _tols(dtype, 2e-4, 3e-2)
+    for a, b_ in zip(gk, gr):
+        _assert_close(a, b_, **tol)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rmsnorm_fused_vs_ref(dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = (jax.random.normal(k1, (4, 32, 64))).astype(dtype)
+    w = (1.0 + 0.1 * jax.random.normal(k2, (64,))).astype(dtype)
+    gk, gr = _check_pair(
+        lambda x, w: rms_norm_fused(x, w, 1e-5),
+        lambda x, w: rms_norm(x, w, 1e-5),
+        (x, w),
+        fwd_tol=_tols(dtype, 2e-5, 2e-2),
+    )
+    tol = _tols(dtype, 2e-4, 3e-2)
+    for a, b_ in zip(gk, gr):
+        _assert_close(a, b_, **tol)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rglru_assoc_vs_ref(dtype):
+    """The two differentiable impls (the Pallas rglru kernel is fwd-only:
+    decode/bench path, no vjp rule).  State output stays f32 on BOTH sides."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    b, s, d = 2, 64, 32
+    a = jax.nn.sigmoid(jax.random.normal(k1, (b, s, d))).astype(dtype)
+    drive = (jax.random.normal(k2, (b, s, d)) * 0.1).astype(dtype)
+    gk, gr = _check_pair(
+        lambda a, x: linear_recurrence(a, x, None, impl="assoc"),
+        lambda a, x: linear_recurrence(a, x, None, impl="ref"),
+        (a, drive),
+        fwd_tol=_tols(dtype, 2e-4, 3e-2),
+        state_is_f32=True,
+    )
+    tol = _tols(dtype, 2e-4, 3e-2)
+    for x, y in zip(gk, gr):
+        _assert_close(x, y, **tol)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_wkv6_chunked_vs_ref(dtype):
+    """Grads are compared w.r.t. the *log-decay* — the parametrization the
+    model actually differentiates (blocks.py: ``w = exp(-exp(clip(...)))``).
+    Comparing dL/dw directly is ill-posed for near-zero decays: the chunked
+    form works in log space, so its dL/dw carries a ``1/w`` factor whose
+    rounding error explodes exactly where ``w`` underflows; the ``· w``
+    chain-rule factor of the log parametrization cancels it on both sides."""
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, s, h, hd = 2, 64, 2, 8  # s % chunk == 0: the real chunked path
+    r = (jax.random.normal(k1, (b, s, h, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(k2, (b, s, h, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(k3, (b, s, h, hd)) * 0.5).astype(dtype)
+    logw = -jnp.exp(
+        jnp.clip(jax.random.normal(k4, (b, s, h, hd)), -8.0, 8.0)
+    ).astype(jnp.float32)
+    u = (jax.random.normal(k5, (h, hd)) * 0.5).astype(jnp.float32)
+
+    def run(impl):
+        def f(r, k, v, lw):
+            return wkv6(
+                r, k, v, jnp.exp(lw).astype(r.dtype), u, None,
+                impl=impl, chunk=32,
+            )
+
+        return f
+
+    gk, gr = _check_pair(
+        run("chunked"), run("ref"), (r, k, v, logw),
+        fwd_tol=_tols(dtype, 2e-4, 3e-2),
+        state_is_f32=True,
+    )
+    tol = _tols(dtype, 2e-3, 3e-2)
+    for a, b_ in zip(gk, gr):
+        _assert_close(a, b_, **tol)

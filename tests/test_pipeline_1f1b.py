@@ -197,13 +197,94 @@ def test_1f1b_integer_targets():
 
 
 def test_phase_ticks_partition_the_schedule():
-    for n_micro in (1, 2, 5, 8):
-        for axis_size in (1, 2, 4):
+    """The three phase ranges partition [0, M + 2S - 1) exactly — including
+    every starved shape with n_micro < 2 * n_stages, where steady can be
+    empty and an off-by-one would drop or double-run a tick."""
+    for axis_size in (1, 2, 3, 4, 5):
+        for n_micro in range(1, 2 * axis_size + 4):
             ranges = phase_ticks(n_micro, axis_size)
             assert ranges["warmup"][0] == 0
             assert ranges["warmup"][1] == ranges["steady"][0]
             assert ranges["steady"][1] == ranges["cooldown"][0]
             assert ranges["cooldown"][1] == n_micro + 2 * axis_size - 1
+            for t0, t1 in ranges.values():
+                assert 0 <= t0 <= t1  # no negative-length phase
+
+
+def test_stash_ring_schedule_simulator():
+    """Replays the 1F1B tick schedule against a model of the activation
+    stash ring (size min(2S, M)) in the exact per-tick order the compiled
+    body uses — forward write, then backward read.  For every (S, M), each
+    slot write must land on a slot whose previous occupant was already
+    consumed, and each backward must find its own microbatch still stashed.
+    This is the collision audit for the starved n_micro < 2 * n_stages
+    shapes, where the ring truncates to M slots."""
+    for s in (1, 2, 3, 4, 5):
+        for m in range(1, 2 * s + 4):
+            r = min(2 * s, m)
+            total = m + 2 * s - 1
+            for d in range(s):
+                stash: dict[int, int] = {}
+                consumed: set[int] = set()
+                for t in range(total):
+                    mf = t - d
+                    if 0 <= mf < m:  # forward section: write before read
+                        slot = mf % r
+                        prev = stash.get(slot)
+                        assert prev is None or prev in consumed, (
+                            f"S={s} M={m} d={d} t={t}: forward of {mf} "
+                            f"clobbers live stash of {prev} in slot {slot}"
+                        )
+                        stash[slot] = mf
+                    mb = t - (2 * s - 1) + d
+                    if 0 <= mb < m:  # backward section
+                        slot = mb % r
+                        assert stash.get(slot) == mb, (
+                            f"S={s} M={m} d={d} t={t}: backward of {mb} "
+                            f"read slot {slot} holding {stash.get(slot)}"
+                        )
+                        assert mb not in consumed
+                        consumed.add(mb)
+                assert consumed == set(range(m))
+
+
+def test_restage_shrinks_max_depth_between_steps():
+    """Mid-run restage audit: step under a padded uneven plan, update the
+    live flat stack, re-pack under a plan whose max_depth SHRANK, step again
+    — each step's gradients must match a fresh-build reference, stale padded
+    slots must contribute exactly zero grad, and a third re-grow re-pack must
+    not resurrect anything from the earlier padding."""
+    mesh = _pod_mesh()
+    n_micro = 3
+    layers = jax.random.normal(jax.random.PRNGKey(41), (4, 2, WIDTH, WIDTH)) * 0.3
+
+    def step(plan, layers, seed):
+        x, tgt = _make_inputs(n_micro, seed=seed)
+        ref_loss, ref_grads = _reference(layers, x, tgt, n_micro)
+        packed, mask = plan.pack(layers)
+        loss, pg = pipeline_step(
+            _layer_fn, packed, x, tgt, loss_fn=_loss_fn, mesh=mesh,
+            axis="pod", n_micro=n_micro, stage_mask=mask,
+        )
+        assert abs(float(loss - ref_loss)) < 1e-5
+        grads = plan.unpack(pg)
+        assert float(jnp.max(jnp.abs(grads - ref_grads))) < 1e-5
+        pad_rows = pg[~mask]
+        if pad_rows.shape[0]:
+            assert float(jnp.max(jnp.abs(pad_rows))) == 0.0
+        return layers - 0.1 * grads  # live SGD update on the flat stack
+
+    plan_a = StagePlan(n_layers=4, weights={0: 3.0, 1: 1.0})
+    assert plan_a.depths() == {0: 3, 1: 1} and plan_a.max_depth() == 3
+    layers = step(plan_a, layers, seed=51)
+
+    plan_b = StagePlan.equal(range(2), 4)  # restage: max_depth 3 -> 2
+    assert plan_b.max_depth() == 2
+    layers = step(plan_b, layers, seed=52)
+
+    plan_c = StagePlan(n_layers=4, weights={0: 1.0, 1: 4.0})  # re-grow to 3
+    assert plan_c.depths() == {0: 1, 1: 3} and plan_c.max_depth() == 3
+    step(plan_c, layers, seed=53)
 
 
 def test_pipeline_step_validation():
